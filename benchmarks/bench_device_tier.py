@@ -1,0 +1,95 @@
+"""Device-tier throughput: the compiled datapath (vectorized Q5) on one
+CPU core, reproducing the paper's events/second/core claim in compiled
+form, plus kernel micro-benchmarks (jnp reference timings on CPU; the
+Pallas kernels themselves target TPU and are validated in interpret mode).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.streaming import (StreamExecutor, StreamJobConfig,
+                             VectorWindowSpec)
+
+
+def bench_vector_q5(n_keys: int = 4096, steps: int = 50,
+                    quick=True) -> List[Dict]:
+    """Events/s/core of the fused accumulate+combine+emit step at the
+    paper-extreme Q5 config (1 s window, 10 ms slide); each step advances
+    10 ms of event time so windows emit continuously."""
+    if quick:
+        steps = 30
+    rows = []
+    for batch in (8192, 65536):
+        spec = VectorWindowSpec(size_ms=1000, slide_ms=10,
+                                n_key_buckets=n_keys,
+                                max_windows_per_step=2, ring_margin=8)
+        ex = StreamExecutor(StreamJobConfig(window=spec, batch_size=batch))
+        rng = np.random.RandomState(0)
+        batches = []
+        for i in range(steps + 1):
+            ts = i * 10 + np.sort(rng.randint(0, 10, batch)).astype(np.int32)
+            batches.append({
+                "ts": jnp.asarray(ts),
+                "key": jnp.asarray(rng.randint(0, n_keys, batch),
+                                   jnp.int32),
+                "value": jnp.ones((batch,), jnp.float32),
+                "valid": jnp.ones((batch,), bool),
+                "wm": jnp.asarray(-1, jnp.int32)})
+        state = ex.init_state()
+        state, _ = ex.step(state, batches[0])   # warmup / compile
+        jax.block_until_ready(state["panes"])
+        t0 = time.perf_counter()
+        for b in batches[1:]:
+            state, out = ex.step(state, b)
+        jax.block_until_ready(state["panes"])
+        dt = time.perf_counter() - t0
+        ev_s = steps * batch / dt
+        rows.append({"figure": "device_q5", "batch": batch, "keys": n_keys,
+                     "events_per_sec_per_core": round(ev_s, 0),
+                     "us_per_step": round(dt / steps * 1e6, 1)})
+    return rows
+
+
+def bench_kernels(quick=True) -> List[Dict]:
+    """CPU timings of the jnp kernel references (compiled); the Pallas
+    kernels are TPU-targeted and correctness-checked in interpret mode."""
+    from repro.kernels import ref
+    rows = []
+    n, k, r = 8192, 1024, 16
+    rng = np.random.RandomState(0)
+    keys = jnp.asarray(rng.randint(0, k, n), jnp.int32)
+    slots = jnp.asarray(rng.randint(0, r, n), jnp.int32)
+    vals = jnp.asarray(rng.rand(n), jnp.float32)
+    valid = jnp.ones((n,), bool)
+    f = jax.jit(lambda a, b, c, d: ref.window_agg_ref(a, b, c, d, k, r))
+    f(keys, slots, vals, valid).block_until_ready()
+    t0 = time.perf_counter()
+    iters = 20 if quick else 100
+    for _ in range(iters):
+        out = f(keys, slots, vals, valid)
+    out.block_until_ready()
+    us = (time.perf_counter() - t0) / iters * 1e6
+    rows.append({"figure": "kernel_window_agg", "n": n, "K": k, "R": r,
+                 "us_per_call": round(us, 1),
+                 "events_per_sec": round(n / (us / 1e6), 0)})
+
+    b, h, s, dh = 4, 8, 4096, 128
+    q = jnp.asarray(rng.randn(b, h, dh), jnp.float32)
+    kk = jnp.asarray(rng.randn(b, h, s, dh), jnp.float32)
+    vv = jnp.asarray(rng.randn(b, h, s, dh), jnp.float32)
+    g = jax.jit(lambda a, b_, c: ref.decode_attention_ref(a, b_, c, s - 1))
+    g(q, kk, vv).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = g(q, kk, vv)
+    out.block_until_ready()
+    us = (time.perf_counter() - t0) / iters * 1e6
+    rows.append({"figure": "kernel_decode_attn", "B": b, "H": h, "S": s,
+                 "us_per_call": round(us, 1)})
+    return rows

@@ -1,0 +1,104 @@
+"""Benchmark harness helpers.
+
+Latency methodology (paper §7.1): the latency clock for a window result
+starts at the *ideal occurrence time* of its window end (the generator's
+pacing schedule pins event time to wall time) and stops when the engine
+emits the result at the sink.  Any scheduling delay in the engine shows up
+in the number.  Rates are scaled to what a single CPU core running a pure
+Python datapath sustains (the JVM figures in the paper are ~100x higher;
+shapes of the curves, not absolute numbers, are the reproduction target —
+the COMPILED device tier closes the absolute gap, see
+bench_streaming_device).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import (CollectorSink, JetCluster, JobConfig,
+                        PacedGeneratorSource, Pipeline, WallClock)
+from repro.core.engine import JOB_COMPLETED
+from repro.nexmark import NexmarkGenerator, queries
+
+PCTS = (50, 90, 99, 99.9, 99.99)
+
+
+def percentiles(latencies_ms: List[float]) -> Dict[str, float]:
+    if not latencies_ms:
+        return {f"p{p}": float("nan") for p in PCTS}
+    arr = np.asarray(latencies_ms)
+    return {f"p{p}": round(float(np.percentile(arr, p)), 3) for p in PCTS}
+
+
+class LatencySink:
+    """Collects (arrival_wall, item); computes window-result latency."""
+
+    def __init__(self, clock, t0_holder):
+        self.samples: List[Tuple[float, object]] = []
+        self.clock = clock
+        self.t0_holder = t0_holder
+
+    def __call__(self, ev):
+        self.samples.append((self.clock.now(), ev))
+
+    def latencies_ms(self) -> List[float]:
+        t0 = self.t0_holder[0]
+        out = []
+        for t_arr, ev in self.samples:
+            # ideal wall time of the window end (event time is ms since t0)
+            ideal = t0 + (ev.ts + 1) / 1000.0
+            out.append((t_arr - ideal) * 1000.0)
+        return out
+
+
+def run_q5_latency(rate: float, duration_s: float, n_nodes: int = 1,
+                   threads: int = 2, window_ms: int = 1000,
+                   slide_ms: int = 20, n_keys: int = 100,
+                   guarantee: str = "none",
+                   snapshot_interval_s: float = 1.0,
+                   query=queries.q5, warmup_s: float = 1.0,
+                   max_events: Optional[int] = None):
+    """Run Q5 at a paced rate against the wall clock; returns (percentile
+    dict, achieved_rate, latencies)."""
+    clock = WallClock()
+    cluster = JetCluster(n_nodes=n_nodes, cooperative_threads=threads,
+                         clock=clock, link_latency_s=0.0002)
+    gen = NexmarkGenerator(rate=rate, n_keys=n_keys)
+    t0_holder = [None]
+    sink = LatencySink(clock, t0_holder)
+    total = max_events or int(rate * duration_s)
+
+    def src():
+        return PacedGeneratorSource(gen, rate=rate, max_events=total)
+
+    p = query(src, lambda: _SinkAdapter(sink), window_ms=window_ms,
+              slide_ms=slide_ms)
+    cfg = JobConfig(processing_guarantee=guarantee,
+                    snapshot_interval_s=snapshot_interval_s)
+    t0_holder[0] = clock.now()
+    job = cluster.submit(p.to_dag(), cfg)
+    deadline = time.monotonic() + duration_s * 3 + 10
+    while job.status != JOB_COMPLETED and time.monotonic() < deadline:
+        cluster.step()
+    # drop warmup
+    cut = t0_holder[0] + warmup_s
+    lats = [l for (t, ev), l in zip(sink.samples, sink.latencies_ms())
+            if t >= cut]
+    achieved = len(sink.samples) and total / (sink.samples[-1][0]
+                                              - t0_holder[0])
+    return percentiles(lats), achieved, lats
+
+
+class _SinkAdapter:
+    """Processor-factory shim for CollectorSink-style callables."""
+
+    def __new__(cls, consumer):
+        from repro.core.processor import SinkProcessor
+        return SinkProcessor(consumer)
+
+
+def fmt_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.3f},{derived}"

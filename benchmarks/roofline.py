@@ -1,0 +1,243 @@
+"""Roofline analysis per (arch x shape x mesh) cell.
+
+Three terms per the task spec, on TPU v5e constants (197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI):
+
+    compute_term    = FLOPs_per_chip / 197e12
+    memory_term     = HBM_bytes_per_chip / 819e9
+    collective_term = collective_bytes_per_chip / 50e9
+
+FLOPs/bytes come from an ANALYTIC model of the compiled step (formulas
+below), cross-checked against ``compiled.cost_analysis()`` — the CPU
+backend counts scan bodies ONCE, so the raw HLO numbers undercount by
+~n_layer_groups; both are reported.  Collective bytes likewise: the HLO
+text is parsed per instruction (recorded in the dry-run JSONs) and the
+analytic schedule (FSDP all-gathers + TP/SP all-reduce pairs + DP grad
+reduce-scatter) provides the per-step total.
+
+MODEL_FLOPS (the "useful work" numerator) is 6*N*D for dense training /
+6*N_active*D for MoE, 2*N_active*B per decoded token, 2*N_active*D for
+prefill — attention context FLOPs and remat recompute count as overhead,
+so the ratio MODEL_FLOPS / step_FLOPs exposes remat/causal/capacity waste.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+from repro.configs import REGISTRY, SHAPES, applicable_cells
+from repro.launch.specs import MICROBATCHES
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+# ---------------------------------------------------------------------------
+# analytic step model
+# ---------------------------------------------------------------------------
+
+def _attn_layers(cfg) -> int:
+    kinds = cfg.layer_kinds() * cfg.n_groups
+    return sum(1 for k in kinds if k == "attn")
+
+
+def _ssm_layers(cfg) -> int:
+    kinds = cfg.layer_kinds() * cfg.n_groups
+    return sum(1 for k in kinds if k in ("mamba", "rwkv6"))
+
+
+def _matmul_params(cfg, active: bool) -> int:
+    c = cfg.param_counts()
+    base = c["active"] if active else c["total"]
+    # embedding lookup is a gather, not a matmul; the LM head IS a matmul
+    base -= c["embed"]
+    if cfg.tie_embeddings:
+        base += cfg.vocab_size * cfg.d_model
+    return base
+
+
+def _ctx_flops_fwd(cfg, B, S) -> float:
+    """Causal attention context FLOPs, forward (QK^T + PV)."""
+    L = _attn_layers(cfg)
+    dh, H = cfg.head_dim_, cfg.n_heads
+    eff_S = min(S, cfg.swa_window) if cfg.attention == "swa" else S
+    # causal: half the S x eff_S rectangle
+    return L * 4 * B * S * eff_S * H * dh * 0.5
+
+
+def _ssm_flops_per_token(cfg) -> float:
+    """Recurrent state update FLOPs per token (excludes projections,
+    which are in the param count)."""
+    L = _ssm_layers(cfg)
+    if cfg.ssm_kind == "rwkv6" or cfg.family == "ssm":
+        H = cfg.d_model // cfg.rwkv_head_size
+        dh = cfg.rwkv_head_size
+        per = 6 * H * dh * dh
+    else:
+        per = 0.0
+    if cfg.ssm_kind == "mamba" or cfg.family == "hybrid":
+        di = cfg.expand * cfg.d_model
+        per = 8 * di * cfg.d_state
+    return L * per
+
+
+def analytic_cell(arch: str, shape: str, chips: int) -> Dict[str, float]:
+    cfg = REGISTRY[arch]
+    spec = SHAPES[shape]
+    B, S = spec.global_batch, spec.seq_len
+    P_act = _matmul_params(cfg, active=True)
+    P_tot = _matmul_params(cfg, active=False)
+    cf = cfg.capacity_factor if cfg.n_experts else 1.0
+    c = cfg.param_counts()
+    n_params_total = c["total"]
+
+    if spec.kind == "train":
+        D_tok = B * S
+        model_flops = 6 * c["active"] * D_tok
+        # fwd + remat-fwd + bwd = 4x fwd matmuls; MoE pays capacity factor
+        step_flops = 8 * P_act * cf * D_tok + 4 * _ctx_flops_fwd(cfg, B, S) \
+            + 4 * _ssm_flops_per_token(cfg) * D_tok
+        # weights: bf16 read x3 (fwd, remat, bwd) + fp32 p/m/v read+write
+        # + fp32 grads write+read
+        w_bytes = n_params_total * (3 * 2 + 4 * 2 * 4)
+        # activations: scan carries + block intermediates, bf16, ~6 copies
+        act_bytes = 6 * cfg.n_layers * D_tok * cfg.d_model * 2
+        step_bytes = w_bytes + act_bytes
+        # collectives per chip: FSDP all-gather (bf16, fwd+bwd) and grad
+        # reduce-scatter (fp32) move ~the model-shard's param bytes; TP/SP
+        # all-reduce pairs move ~4x the residual stream per layer
+        tp = 16
+        p_shard = n_params_total / tp
+        dp_coll = 2 * p_shard * 2 + p_shard * 4
+        tp_coll = 4 * cfg.n_layers * (D_tok / chips * tp) * cfg.d_model * 2 \
+            * 2 / tp
+        coll_bytes = dp_coll + tp_coll
+    elif spec.kind == "prefill":
+        D_tok = B * S
+        model_flops = 2 * c["active"] * D_tok
+        step_flops = 2 * P_act * cf * D_tok + _ctx_flops_fwd(cfg, B, S) \
+            + _ssm_flops_per_token(cfg) * D_tok
+        cache_bytes = _cache_bytes(cfg, B, S)
+        step_bytes = n_params_total * 2 + 4 * cfg.n_layers * D_tok \
+            * cfg.d_model * 2 + cache_bytes
+        tp = 16
+        coll_bytes = 4 * cfg.n_layers * (D_tok / chips * tp) \
+            * cfg.d_model * 2 * 2 / tp
+    else:  # decode
+        model_flops = 2 * c["active"] * B
+        step_flops = 2 * P_act * cf * B + _ctx_decode_flops(cfg, B, S) \
+            + _ssm_flops_per_token(cfg) * B
+        # decode is memory bound: read all weights + the whole KV cache
+        step_bytes = n_params_total * 2 + _cache_bytes(cfg, B, S)
+        tp = 16
+        coll_bytes = 4 * cfg.n_layers * B * cfg.d_model * 2 * 2 / tp
+    return {
+        "model_flops": model_flops,
+        "step_flops": step_flops,
+        "step_bytes": step_bytes,
+        "coll_bytes_per_chip": coll_bytes,
+        "flops_per_chip": step_flops / chips,
+        "bytes_per_chip": step_bytes / chips,
+    }
+
+
+def _cache_bytes(cfg, B, S) -> float:
+    kinds = cfg.layer_kinds() * cfg.n_groups
+    total = 0.0
+    for k in kinds:
+        if k == "attn":
+            eff = min(S, cfg.swa_window) if cfg.attention == "swa" else S
+            total += 2 * B * eff * cfg.n_kv_heads * cfg.head_dim_ * 2
+        elif k == "mamba":
+            di = cfg.expand * cfg.d_model
+            total += B * di * cfg.d_state * 4 + B * (cfg.d_conv - 1) * di * 2
+        elif k == "rwkv6":
+            H = cfg.d_model // cfg.rwkv_head_size
+            total += B * H * cfg.rwkv_head_size ** 2 * 4 + 2 * B \
+                * cfg.d_model * 2
+    return total
+
+
+def _ctx_decode_flops(cfg, B, S) -> float:
+    L = _attn_layers(cfg)
+    dh, H = cfg.head_dim_, cfg.n_heads
+    eff = min(S, cfg.swa_window) if cfg.attention == "swa" else S
+    return L * 4 * B * eff * H * dh
+
+
+# ---------------------------------------------------------------------------
+# table generation
+# ---------------------------------------------------------------------------
+
+def load_dryrun(arch: str, shape: str, mesh: str,
+                tag: str = "") -> Optional[dict]:
+    suffix = f"__{tag}" if tag and tag != "baseline" else ""
+    f = DRYRUN_DIR / f"{arch}__{shape}__{mesh}{suffix}.json"
+    if not f.exists():
+        return None
+    return json.loads(f.read_text())
+
+
+def roofline_row(arch: str, shape: str, mesh: str = "16x16",
+                 tag: str = "") -> Optional[Dict]:
+    dr = load_dryrun(arch, shape, mesh, tag)
+    if dr is None:
+        return None
+    chips = dr["chips"]
+    a = analytic_cell(arch, shape, chips)
+    compute_t = a["flops_per_chip"] / PEAK_FLOPS
+    memory_t = a["bytes_per_chip"] / HBM_BW
+    coll_t = a["coll_bytes_per_chip"] / ICI_BW
+    terms = {"compute": compute_t, "memory": memory_t,
+             "collective": coll_t}
+    dominant = max(terms, key=terms.get)
+    step_t = max(terms.values())
+    mfu_bound = (a["model_flops"] / chips / step_t) / PEAK_FLOPS
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh,
+        "kind": dr["kind"], "tag": tag or "baseline",
+        "compute_s": compute_t, "memory_s": memory_t,
+        "collective_s": coll_t, "dominant": dominant,
+        "model_flops": a["model_flops"],
+        "step_flops": a["step_flops"],
+        "useful_ratio": a["model_flops"] / a["step_flops"],
+        "roofline_fraction_bound": mfu_bound,
+        "hlo_flops_per_chip_raw": dr["flops"],
+        "hlo_coll_bytes_raw": dr["collective_bytes"]["total"],
+        "temp_gib_per_chip": dr["memory"]["temp_bytes"] / 2**30,
+        "microbatches": dr["meta"].get("microbatches", 1),
+    }
+
+
+def full_table(mesh: str = "16x16", tag: str = "") -> List[Dict]:
+    rows = []
+    for arch, shape in applicable_cells():
+        r = roofline_row(arch, shape, mesh, tag)
+        if r:
+            rows.append(r)
+    return rows
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | kind | compute s | memory s | collective s | "
+           "dominant | useful ratio | roofline frac (bound) | GiB/chip |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction_bound']:.2%} "
+            f"| {r['temp_gib_per_chip']:.1f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    rows = full_table()
+    print(markdown_table(rows))

@@ -1,0 +1,94 @@
+"""Benchmark entry point: one section per paper table/figure plus the
+device tier and the roofline summary.
+
+Prints ``name,us_per_call,derived`` CSV rows (one per measurement) and a
+human-readable summary. ``--full`` lengthens runs; default is quick mode.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def _csv_rows(rows, key_metric="p99.99", scale=1000.0):
+    out = []
+    for r in rows:
+        name = r.get("figure", "bench")
+        for k in ("query", "rate", "nodes", "mode", "jobs", "batch"):
+            if k in r:
+                name += f".{k}={r[k]}"
+        if key_metric in r:
+            us = r[key_metric] * scale       # ms -> us
+        elif "us_per_call" in r:
+            us = r["us_per_call"]
+        elif "us_per_step" in r:
+            us = r["us_per_step"]
+        else:
+            us = 0.0
+        derived = ";".join(f"{k}={v}" for k, v in r.items()
+                           if k not in ("figure",))
+        out.append(f"{name},{us:.3f},{derived}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--skip-host", action="store_true",
+                    help="skip the wall-clock host-tier figures")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from . import bench_device_tier, bench_figures, roofline
+
+    all_rows = []
+    print("name,us_per_call,derived")
+
+    sections = []
+    if not args.skip_host:
+        sections += [
+            ("fig7", lambda: bench_figures.fig7_throughput_vs_latency(quick)),
+            ("fig8", lambda: bench_figures.fig8_scaleout_latency(quick)),
+            ("fig9", lambda: bench_figures.fig9_latency_distribution(quick)),
+            ("fig10", lambda: bench_figures.fig10_scaleout_throughput(quick)),
+            ("fig13", lambda: bench_figures.fig13_fault_tolerance_overhead(
+                quick)),
+            ("sec7.7", lambda: bench_figures.sec77_multitenancy(quick)),
+        ]
+    sections += [
+        ("device_q5", lambda: bench_device_tier.bench_vector_q5(quick=quick)),
+        ("kernels", lambda: bench_device_tier.bench_kernels(quick=quick)),
+    ]
+
+    for name, fn in sections:
+        try:
+            rows = fn()
+        except Exception as e:  # pragma: no cover
+            print(f"{name},0.0,ERROR={e!r}", flush=True)
+            continue
+        all_rows.extend(rows)
+        for line in _csv_rows(rows):
+            print(line, flush=True)
+
+    # roofline summary (from the dry-run artifacts, if present)
+    rl = roofline.full_table()
+    for r in rl:
+        print(f"roofline.{r['arch']}.{r['shape']},"
+              f"{max(r['compute_s'], r['memory_s'], r['collective_s']) * 1e6:.1f},"
+              f"dominant={r['dominant']};useful={r['useful_ratio']:.2f};"
+              f"bound={r['roofline_fraction_bound']:.3f};"
+              f"gib={r['temp_gib_per_chip']:.1f}", flush=True)
+
+    out = pathlib.Path(__file__).resolve().parents[1] / "experiments"
+    out.mkdir(exist_ok=True)
+    (out / "bench_results.json").write_text(
+        json.dumps({"figures": all_rows, "roofline": rl}, indent=1,
+                   default=float))
+    print(f"# wrote {out / 'bench_results.json'}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

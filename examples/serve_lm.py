@@ -1,0 +1,50 @@
+"""End-to-end driver (the paper's kind: a serving/streaming system):
+serve a small LM with batched requests through the continuous-batching
+server — requests are events, slots are credit-based admission, decode
+steps are the fused whole-DAG-per-chip tasklet.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.serve import BatchedLMServer
+from repro.models import lm
+
+ARCH = "qwen2-1.5b"
+N_REQUESTS = 24
+MAX_NEW = 24
+SLOTS = 8
+
+cfg = get_config(ARCH).reduced()
+print(f"serving {ARCH} (reduced: {cfg.n_layers}L d={cfg.d_model}) "
+      f"with {SLOTS} slots, {N_REQUESTS} requests x {MAX_NEW} new tokens")
+params = lm.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+server = BatchedLMServer(cfg, params, batch_slots=SLOTS,
+                         max_seq=8 + MAX_NEW + N_REQUESTS * 6 + 16)
+
+rng = np.random.RandomState(0)
+pending = [(i, rng.randint(0, cfg.vocab_size, 8).tolist())
+           for i in range(N_REQUESTS)]
+t0 = time.time()
+steps = 0
+admitted = 0
+while pending or server.active:
+    while pending and server.submit(*pending[0], MAX_NEW):
+        pending.pop(0)
+        admitted += 1
+    server.step()
+    steps += 1
+dt = time.time() - t0
+n_tok = sum(len(r["out"]) for r in server.completed)
+assert len(server.completed) == N_REQUESTS
+assert all(len(r["out"]) == MAX_NEW for r in server.completed)
+print(f"served {len(server.completed)} requests / {n_tok} tokens in "
+      f"{dt:.2f}s ({n_tok / dt:.0f} tok/s, {steps} decode steps, "
+      f"max concurrency {SLOTS})")
+print("serve_lm OK")

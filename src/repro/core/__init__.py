@@ -1,0 +1,34 @@
+"""Jet core: DAG execution engine with tasklets, cooperative scheduling,
+watermarks, windows, Chandy-Lamport snapshots and backpressure."""
+
+from .clock import Clock, VirtualClock, WallClock
+from .dag import DAG, Edge, PARTITION_COUNT, Routing, Vertex
+from .engine import (JetCluster, Job, JobConfig, JOB_COMPLETED, JOB_RUNNING)
+from .events import Barrier, DONE, Event, Watermark
+from .pipeline import Pipeline, group_aggregate
+from .processor import (FilterProcessor, FlatMapProcessor,
+                        FusedFunctionProcessor, Inbox, MapProcessor, Outbox,
+                        Processor, SinkProcessor)
+from .sources import (CollectorSink, Journal, JournalSource, ListSource,
+                      PacedGeneratorSource)
+from .tasklet import (GUARANTEE_AT_LEAST_ONCE, GUARANTEE_EXACTLY_ONCE,
+                      GUARANTEE_NONE)
+from .watermark import EventTimePolicy, WatermarkCoalescer
+from .window import (AggregateOperation, averaging, co_aggregate, counting,
+                     max_by, sliding, summing, to_list, tumbling)
+
+__all__ = [
+    "Clock", "VirtualClock", "WallClock",
+    "DAG", "Edge", "PARTITION_COUNT", "Routing", "Vertex",
+    "JetCluster", "Job", "JobConfig", "JOB_COMPLETED", "JOB_RUNNING",
+    "Barrier", "DONE", "Event", "Watermark",
+    "Pipeline", "group_aggregate",
+    "FilterProcessor", "FlatMapProcessor", "FusedFunctionProcessor",
+    "Inbox", "MapProcessor", "Outbox", "Processor", "SinkProcessor",
+    "CollectorSink", "Journal", "JournalSource", "ListSource",
+    "PacedGeneratorSource",
+    "GUARANTEE_AT_LEAST_ONCE", "GUARANTEE_EXACTLY_ONCE", "GUARANTEE_NONE",
+    "EventTimePolicy", "WatermarkCoalescer",
+    "AggregateOperation", "averaging", "co_aggregate", "counting", "max_by",
+    "sliding", "summing", "to_list", "tumbling",
+]

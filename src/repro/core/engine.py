@@ -1,0 +1,387 @@
+"""The Jet cluster engine: execution planning, cooperative scheduling,
+snapshot coordination, failure recovery and elasticity.
+
+Execution planning follows the paper exactly (§3.1, Fig. 3): every vertex is
+instantiated ``local_parallelism`` times on **every** node, with the default
+parallelism equal to the node's cooperative thread count so that *each worker
+runs the complete DAG*.  Edges become SPSC queues locally and
+:class:`~repro.core.backpressure.NetworkLink`s across nodes.  Keyed edges
+route by ``hash(key) % PARTITION_COUNT``; the partition table that assigns
+those partitions to nodes is the *same* table the IMap state backend uses —
+Jet's "partitioning of IMDG aligns with partitioning of the execution
+engine" invariant.
+
+The whole cluster is simulated in-process and driven by :meth:`JetCluster.step`
+(this container has one core; the cooperative model maps 1:1).
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from ..state import IMapService, SnapshotStore
+from .backpressure import NetworkLink
+from .clock import Clock, VirtualClock, WallClock
+from .dag import DAG, Edge, PARTITION_COUNT, Routing, Vertex
+from .events import MAX_TIME
+from .processor import ProcessorContext
+from .queues import SPSCQueue
+from .tasklet import (CooperativeWorker, EdgeCollector, InQueue,
+                      GUARANTEE_EXACTLY_ONCE, GUARANTEE_NONE,
+                      ProcessorTasklet, SnapshotContext)
+
+JOB_RUNNING = "running"
+JOB_COMPLETED = "completed"
+JOB_FAILED = "failed"
+JOB_RESTARTING = "restarting"
+
+
+class JobConfig:
+    def __init__(self, name: str = "job",
+                 processing_guarantee: str = GUARANTEE_NONE,
+                 snapshot_interval_s: float = 1.0):
+        self.name = name
+        self.processing_guarantee = processing_guarantee
+        self.snapshot_interval_s = snapshot_interval_s
+
+
+class _Instance:
+    """One deployed processor instance (vertex x node x local index)."""
+
+    __slots__ = ("vertex", "node", "local_index", "global_index", "tasklet")
+
+    def __init__(self, vertex: str, node: int, local_index: int,
+                 global_index: int):
+        self.vertex = vertex
+        self.node = node
+        self.local_index = local_index
+        self.global_index = global_index
+        self.tasklet: Optional[ProcessorTasklet] = None
+
+
+class ExecutionContext:
+    """One execution attempt of a job on a concrete topology."""
+
+    def __init__(self, job: "Job", cluster: "JetCluster"):
+        self.job = job
+        self.cluster = cluster
+        self.instances: Dict[str, List[_Instance]] = {}
+        self.tasklets: List[ProcessorTasklet] = []
+        self.links: List[NetworkLink] = []
+        self.ssctx: Optional[SnapshotContext] = None
+        self._build()
+
+    # ------------------------------------------------------------------ build --
+    def _build(self) -> None:
+        cluster, job = self.cluster, self.job
+        dag = job.dag
+        dag.validate()
+        nodes = sorted(cluster.node_ids)
+        n_nodes = len(nodes)
+        table = cluster.imap_service.table
+
+        writer = (cluster.snapshot_store.writer(job.id)
+                  if job.config.processing_guarantee != GUARANTEE_NONE else None)
+        self.ssctx = SnapshotContext(job.config.processing_guarantee, writer)
+
+        # 1. instantiate vertices
+        lp_of: Dict[str, int] = {}
+        for name, v in dag.vertices.items():
+            lp = v.local_parallelism if v.local_parallelism > 0 \
+                else cluster.cooperative_threads
+            lp_of[name] = lp
+            insts = []
+            for ni, node in enumerate(nodes):
+                for li in range(lp):
+                    insts.append(_Instance(name, node, li, ni * lp + li))
+            self.instances[name] = insts
+
+        # 2. create queues per edge: consumer-side InQueues and
+        #    producer-side collectors
+        in_queues: Dict[Tuple[str, int, int], List[InQueue]] = {}
+        collectors: Dict[Tuple[str, int, int], List[EdgeCollector]] = {}
+        for key in itertools.chain.from_iterable(
+                ((v, inst.node, inst.local_index) for inst in insts)
+                for v, insts in self.instances.items()):
+            in_queues[key] = []
+            collectors[key] = []
+
+        for edge in dag.edges:
+            self._wire_edge(edge, lp_of, nodes, table, in_queues, collectors)
+
+        # 3. build tasklets and assign to workers
+        snapshot_interval_ok = job.config.processing_guarantee != GUARANTEE_NONE
+        for name, insts in self.instances.items():
+            vertex = dag.vertices[name]
+            lp = lp_of[name]
+            in_edges = dag.in_edges(name)
+            for inst in insts:
+                processor = vertex.supplier()
+                owned = tuple(
+                    p for p in range(table.partition_count)
+                    if table.owner(p) == inst.node and p % lp == inst.local_index)
+                ctx = ProcessorContext(
+                    vertex_name=name, global_index=inst.global_index,
+                    local_index=inst.local_index,
+                    total_parallelism=lp * n_nodes, node_id=inst.node,
+                    node_count=n_nodes, partition_ids=owned,
+                    clock=cluster.clock)
+                key = (name, inst.node, inst.local_index)
+                spf = getattr(processor, "snapshot_partition", None)
+                tasklet = ProcessorTasklet(
+                    name=f"{name}#{inst.global_index}", processor=processor,
+                    in_queues=in_queues[key], collectors=collectors[key],
+                    ssctx=self.ssctx, vertex_name=name,
+                    global_index=inst.global_index,
+                    snapshot_pid_fn=spf,
+                    is_source=not in_edges)
+                processor.init(tasklet.outbox, ctx)
+                inst.tasklet = tasklet
+                self.tasklets.append(tasklet)
+                worker = cluster.nodes[inst.node].workers[
+                    inst.local_index % cluster.cooperative_threads]
+                worker.add(tasklet)
+        self.ssctx.tasklets = self.tasklets
+        self.ssctx.on_complete = self.job._on_snapshot_complete
+
+    def _wire_edge(self, edge: Edge, lp_of: Dict[str, int],
+                   nodes: List[int], table,
+                   in_queues, collectors) -> None:
+        lp_src, lp_dst = lp_of[edge.src], lp_of[edge.dst]
+        consumers: List[Tuple[int, int]] = []   # (node, local_index)
+        if edge.routing == Routing.ISOLATED and not edge.distributed:
+            if lp_src != lp_dst:
+                raise ValueError(
+                    f"isolated edge {edge} needs equal parallelism")
+        # producer instance -> its queue targets
+        for src_inst in self.instances[edge.src]:
+            queues = []
+            dests: List[Tuple[int, int]] = []
+            if edge.routing == Routing.ISOLATED and not edge.distributed:
+                dests = [(src_inst.node, src_inst.local_index)]
+            elif edge.distributed:
+                dests = [(n, li) for n in nodes for li in range(lp_dst)]
+            else:
+                dests = [(src_inst.node, li) for li in range(lp_dst)]
+            for (n, li) in dests:
+                if n == src_inst.node:
+                    q = SPSCQueue(edge.queue_size)
+                else:
+                    q = NetworkLink(self.cluster.clock,
+                                    latency_s=self.cluster.link_latency_s,
+                                    recv_capacity=edge.queue_size)
+                    self.links.append(q)
+                queues.append(q)
+                in_queues[(edge.dst, n, li)].append(
+                    InQueue(q, edge.dst_ordinal, priority=edge.priority))
+            p2q = None
+            if edge.routing == Routing.PARTITIONED:
+                p2q = [0] * PARTITION_COUNT
+                for pid in range(PARTITION_COUNT):
+                    if edge.distributed:
+                        owner = table.owner(pid % table.partition_count)
+                        dest = (owner, pid % lp_dst)
+                    else:
+                        dest = (src_inst.node, pid % lp_dst)
+                    p2q[pid] = dests.index(dest)
+            collectors[(edge.src, src_inst.node, src_inst.local_index)].append(
+                EdgeCollector(queues, edge.routing, edge.key_fn, p2q))
+
+    # -------------------------------------------------------------- restore --
+    def restore_from_snapshot(self, snapshot_id: int) -> int:
+        """Load processor state from a committed snapshot. Returns the
+        number of restored entries."""
+        store = self.cluster.snapshot_store
+        table = self.cluster.imap_service.table
+        count = 0
+        # group entries by (vertex, owning instance under the new topology)
+        for name, insts in self.instances.items():
+            lp = max(1, len(insts) // max(1, len(self.cluster.node_ids)))
+            by_instance: Dict[Tuple[int, int], List[Tuple[Any, Any]]] = {}
+            for pid in range(table.partition_count):
+                entries = store.entries_for_partition(self.job.id, snapshot_id,
+                                                      pid)
+                for vertex, key, value in entries:
+                    if vertex != name:
+                        continue
+                    dest = (table.owner(pid), pid % lp)
+                    by_instance.setdefault(dest, []).append((key, value))
+                    count += 1
+            for inst in insts:
+                items = by_instance.get((inst.node, inst.local_index))
+                if items:
+                    inst.tasklet.processor.restore_from_snapshot(items)
+            for inst in insts:
+                inst.tasklet.processor.finish_snapshot_restore()
+                inst.tasklet.last_snapshot_id = snapshot_id
+        self.ssctx.requested_id = snapshot_id
+        self.ssctx.completed_id = snapshot_id
+        return count
+
+    @property
+    def all_done(self) -> bool:
+        return all(t.is_done for t in self.tasklets)
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "tasklets": len(self.tasklets),
+            "links": len(self.links),
+            "items_in": sum(t.items_in for t in self.tasklets),
+            "items_out": sum(t.items_out for t in self.tasklets),
+            "calls": sum(t.calls for t in self.tasklets),
+            "idle_calls": sum(t.idle_calls for t in self.tasklets),
+        }
+
+
+class Job:
+    _ids = itertools.count()
+
+    def __init__(self, cluster: "JetCluster", dag: DAG, config: JobConfig):
+        self.cluster = cluster
+        self.dag = dag
+        self.config = config
+        self.id = f"{config.name}-{next(Job._ids)}"
+        self.status = JOB_RUNNING
+        self.execution: Optional[ExecutionContext] = None
+        self._next_snapshot_id = 1
+        self._last_snapshot_at = cluster.clock.now()
+        self.snapshots_taken = 0
+        self.restarts = 0
+
+    # -- snapshot coordination ----------------------------------------------------
+    def tick(self, now: float) -> None:
+        if (self.status != JOB_RUNNING
+                or self.config.processing_guarantee == GUARANTEE_NONE):
+            return
+        ssctx = self.execution.ssctx
+        if (now - self._last_snapshot_at >= self.config.snapshot_interval_s
+                and ssctx.completed_id == ssctx.requested_id):
+            ssctx.begin(self._next_snapshot_id)
+            self._next_snapshot_id += 1
+            self._last_snapshot_at = now
+
+    def _on_snapshot_complete(self, snapshot_id: int) -> None:
+        self.cluster.snapshot_store.commit(self.id, snapshot_id)
+        self.snapshots_taken += 1
+        # phase-2 release for transactional sinks (paper §4.5)
+        for t in self.execution.tasklets:
+            hook = getattr(t.processor, "on_snapshot_committed", None)
+            if hook is not None:
+                hook(snapshot_id)
+
+    # -- lifecycle -------------------------------------------------------------------
+    def start(self) -> None:
+        self.execution = ExecutionContext(self, self.cluster)
+
+    def restart(self) -> None:
+        """Rebuild the execution on the current topology and restore the
+        latest committed snapshot (paper §4.4 recovery protocol)."""
+        self.restarts += 1
+        self.status = JOB_RESTARTING
+        # drop the old execution (its tasklets/queues die with it)
+        old = self.execution
+        if old is not None:
+            for node in self.cluster.nodes.values():
+                for w in node.workers:
+                    w.tasklets = [t for t in w.tasklets
+                                  if t not in old.tasklets]
+        self.execution = ExecutionContext(self, self.cluster)
+        committed = self.cluster.snapshot_store.latest_committed(self.id)
+        if committed is not None:
+            self.execution.restore_from_snapshot(committed)
+        self._last_snapshot_at = self.cluster.clock.now()
+        self.status = JOB_RUNNING
+
+
+class JetNode:
+    def __init__(self, node_id: int, cooperative_threads: int):
+        self.node_id = node_id
+        self.workers = [CooperativeWorker(f"n{node_id}-w{i}")
+                        for i in range(cooperative_threads)]
+
+
+class JetCluster:
+    """An in-process Jet cluster simulation."""
+
+    def __init__(self, n_nodes: int = 1, cooperative_threads: int = 2,
+                 clock: Optional[Clock] = None,
+                 partition_count: int = PARTITION_COUNT,
+                 backup_count: int = 1,
+                 link_latency_s: float = 0.0005):
+        self.clock = clock or WallClock()
+        self.cooperative_threads = cooperative_threads
+        self.link_latency_s = link_latency_s
+        self.node_ids = list(range(n_nodes))
+        self.nodes: Dict[int, JetNode] = {
+            i: JetNode(i, cooperative_threads) for i in self.node_ids}
+        self.imap_service = IMapService(self.node_ids,
+                                        partition_count=partition_count,
+                                        backup_count=backup_count)
+        self.snapshot_store = SnapshotStore(self.imap_service)
+        self.jobs: List[Job] = []
+        self._next_node_id = n_nodes
+
+    # -- job control ---------------------------------------------------------------
+    def submit(self, dag: DAG, config: Optional[JobConfig] = None) -> Job:
+        job = Job(self, dag, config or JobConfig())
+        job.start()
+        self.jobs.append(job)
+        return job
+
+    # -- driver ---------------------------------------------------------------------
+    def step(self) -> bool:
+        """One scheduler iteration across the whole cluster."""
+        progress = False
+        for node in self.nodes.values():
+            for worker in node.workers:
+                progress |= worker.run_iteration()
+        for job in self.jobs:
+            if job.execution is not None:
+                for link in job.execution.links:
+                    progress |= link.pump()
+            job.tick(self.clock.now())
+            if (job.status == JOB_RUNNING and job.execution.all_done):
+                job.status = JOB_COMPLETED
+        if not progress and isinstance(self.clock, VirtualClock):
+            self.clock.advance(self.clock.auto_step)
+        return progress
+
+    def run_until_complete(self, job: Job, max_steps: int = 2_000_000) -> None:
+        for _ in range(max_steps):
+            if job.status == JOB_COMPLETED:
+                return
+            self.step()
+        raise TimeoutError(
+            f"job {job.id} did not complete in {max_steps} steps "
+            f"(stats: {job.execution.stats()})")
+
+    def run_steps(self, n: int) -> None:
+        for _ in range(n):
+            self.step()
+
+    # -- membership -----------------------------------------------------------------
+    def kill_node(self, node_id: int) -> None:
+        """Fail a member: IMap promotes backups; running jobs restart from
+        their latest committed snapshot on the surviving members."""
+        if len(self.node_ids) == 1:
+            raise ValueError("cannot kill the last node")
+        self.node_ids.remove(node_id)
+        del self.nodes[node_id]
+        self.imap_service.kill_member(node_id)
+        for job in self.jobs:
+            if job.status in (JOB_RUNNING, JOB_RESTARTING):
+                job.restart()
+
+    def add_node(self) -> int:
+        """Elastic scale-out: join a member, rebalance partitions, restart
+        jobs so the new member takes its share of the work (§4.3)."""
+        node_id = self._next_node_id
+        self._next_node_id += 1
+        self.node_ids.append(node_id)
+        self.nodes[node_id] = JetNode(node_id, self.cooperative_threads)
+        self.imap_service.add_member(node_id)
+        for job in self.jobs:
+            if job.status in (JOB_RUNNING, JOB_RESTARTING):
+                job.restart()
+        return node_id

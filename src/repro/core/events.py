@@ -1,0 +1,85 @@
+"""Stream items flowing along Jet DAG edges.
+
+Three kinds of items travel through queues, mirroring Hazelcast Jet:
+
+* data events  — ``(timestamp, key, value)`` triples, represented by
+  :class:`Event` (``__slots__`` for footprint; the datapath allocates one
+  object per event, nothing else),
+* watermarks   — :class:`Watermark`, monotone event-time progress markers,
+* barriers     — :class:`Barrier`, Chandy-Lamport snapshot markers,
+* end-of-data  — :class:`DoneItem`, closes a batch edge.
+
+Jet's wire format is binary; here the "wire" is an in-process queue so the
+items themselves are the format.
+"""
+
+from __future__ import annotations
+
+MIN_TIME = -(2**62)
+MAX_TIME = 2**62
+
+
+class Event:
+    """A timestamped, keyed data record."""
+
+    __slots__ = ("ts", "key", "value")
+
+    def __init__(self, ts: int, key, value):
+        self.ts = ts
+        self.key = key
+        self.value = value
+
+    def with_value(self, value) -> "Event":
+        return Event(self.ts, self.key, value)
+
+    def with_key(self, key) -> "Event":
+        return Event(self.ts, key, self.value)
+
+    def __repr__(self):  # pragma: no cover - debug aid
+        return f"Event(ts={self.ts}, key={self.key!r}, value={self.value!r})"
+
+
+class Watermark:
+    """Asserts that no event with ``ts < self.ts`` will arrive on this edge."""
+
+    __slots__ = ("ts",)
+
+    def __init__(self, ts: int):
+        self.ts = ts
+
+    def __repr__(self):  # pragma: no cover
+        return f"Watermark({self.ts})"
+
+
+class Barrier:
+    """Chandy-Lamport snapshot barrier.
+
+    ``snapshot_id`` increases monotonically per job.  ``terminal`` marks a
+    snapshot taken for graceful job suspension (export-and-stop).
+    """
+
+    __slots__ = ("snapshot_id", "terminal")
+
+    def __init__(self, snapshot_id: int, terminal: bool = False):
+        self.snapshot_id = snapshot_id
+        self.terminal = terminal
+
+    def __repr__(self):  # pragma: no cover
+        return f"Barrier({self.snapshot_id}{', terminal' if self.terminal else ''})"
+
+
+class DoneItem:
+    """End-of-stream marker for batch stages. A singleton per edge traversal."""
+
+    __slots__ = ()
+
+    def __repr__(self):  # pragma: no cover
+        return "DONE"
+
+
+DONE = DoneItem()
+
+
+def is_special(item) -> bool:
+    """True for control items (watermark / barrier / done)."""
+    return isinstance(item, (Watermark, Barrier, DoneItem))

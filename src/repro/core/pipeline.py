@@ -1,0 +1,434 @@
+"""The Pipeline API: fluent, composable stage graph that the planner lowers
+onto the Core DAG (paper §2.1–2.2, Listing 1/2).
+
+The planner performs Jet's two signature optimizations:
+
+* **operator fusion** — maximal chains of stateless stages (map / filter /
+  flat_map / re-key) with a single consumer collapse into ONE vertex running
+  a :class:`FusedFunctionProcessor` (one Python call per event for the whole
+  chain), connected by ISOLATED edges so data stays on its core;
+* **two-stage aggregation** — ``window().aggregate()`` lowers into a *local*
+  partitioned accumulate vertex followed by a *distributed* partitioned
+  combine vertex, so only closed frames travel across nodes.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+from .dag import DAG, Edge, Routing
+from .events import Event
+from .processor import (FusedFunctionProcessor, Inbox, Processor,
+                        SinkProcessor)
+from .window import (AccumulateByFrameProcessor, AggregateOperation,
+                     CombineFramesProcessor, SlidingWindowDef)
+
+
+# ---------------------------------------------------------------------------
+# Logical stages
+# ---------------------------------------------------------------------------
+
+
+class _Stage:
+    _ids = itertools.count()
+
+    def __init__(self, pipeline: "Pipeline", kind: str, name: str,
+                 upstreams: List["_Stage"], params: Dict[str, Any]):
+        self.pipeline = pipeline
+        self.kind = kind
+        self.name = f"{name}-{next(_Stage._ids)}"
+        self.upstreams = upstreams
+        self.params = params
+        self.downstream_count = 0
+        for up in upstreams:
+            up.downstream_count += 1
+        pipeline.stages.append(self)
+
+
+class GeneralStage:
+    """User-facing handle over a logical stage."""
+
+    def __init__(self, pipeline: "Pipeline", stage: _Stage):
+        self.pipeline = pipeline
+        self.stage = stage
+
+    # -- stateless transforms (fusable) -----------------------------------------
+    def map(self, fn: Callable[[Any], Any]) -> "GeneralStage":
+        return self._compute("map", fn)
+
+    def filter(self, pred: Callable[[Any], bool]) -> "GeneralStage":
+        return self._compute("filter", pred)
+
+    def flat_map(self, fn: Callable[[Any], Iterable[Any]]) -> "GeneralStage":
+        return self._compute("flat_map", fn)
+
+    def rekey(self, key_fn: Callable[[Any], Any]) -> "GeneralStage":
+        """Assign the grouping key (Jet's groupingKey)."""
+        return self._compute("rekey", key_fn)
+
+    def _compute(self, op: str, fn) -> "GeneralStage":
+        st = _Stage(self.pipeline, "compute", op, [self.stage],
+                    {"op": op, "fn": fn})
+        return GeneralStage(self.pipeline, st)
+
+    # -- keyed / windowed ---------------------------------------------------------
+    def with_key(self, key_fn: Callable[[Any], Any]) -> "KeyedStage":
+        return KeyedStage(self.pipeline, self.rekey(key_fn).stage)
+
+    # -- joins ----------------------------------------------------------------------
+    def hash_join(self, build: "GeneralStage",
+                  probe_key_fn: Callable[[Any], Any],
+                  build_key_fn: Callable[[Any], Any],
+                  combine_fn: Callable[[Any, Any], Any],
+                  inner: bool = True) -> "GeneralStage":
+        """Join this (probe, streaming) stage against a batch build stage
+        (Listing 2).  The build side is broadcast and fully consumed before
+        probing starts."""
+        st = _Stage(self.pipeline, "hash_join", "hash_join",
+                    [self.stage, build.stage],
+                    {"probe_key_fn": probe_key_fn, "build_key_fn": build_key_fn,
+                     "combine_fn": combine_fn, "inner": inner})
+        return GeneralStage(self.pipeline, st)
+
+    # -- sinks ----------------------------------------------------------------------
+    def write_to(self, sink_supplier: Callable[[], Processor]) -> None:
+        _Stage(self.pipeline, "sink", "sink", [self.stage],
+               {"supplier": sink_supplier})
+
+    def custom_transform(self, name: str,
+                         supplier: Callable[[], Processor],
+                         partitioned: bool = False,
+                         distributed: bool = False) -> "GeneralStage":
+        st = _Stage(self.pipeline, "custom", name, [self.stage],
+                    {"supplier": supplier, "partitioned": partitioned,
+                     "distributed": distributed})
+        return GeneralStage(self.pipeline, st)
+
+
+class KeyedStage(GeneralStage):
+    """A stage with a grouping key assigned; adds windowing on top of the
+    general transforms (a keyed custom_transform routes by the key)."""
+
+    def window(self, wdef: SlidingWindowDef) -> "WindowedStage":
+        return WindowedStage(self.pipeline, self.stage, wdef)
+
+
+class WindowedStage:
+    def __init__(self, pipeline: "Pipeline", stage: _Stage,
+                 wdef: SlidingWindowDef):
+        self.pipeline = pipeline
+        self.stage = stage
+        self.wdef = wdef
+
+    def aggregate(self, op: AggregateOperation) -> GeneralStage:
+        st = _Stage(self.pipeline, "window_agg", "win_agg", [self.stage],
+                    {"wdef": self.wdef, "op": op})
+        return GeneralStage(self.pipeline, st)
+
+    def aggregate2(self, other: KeyedStage,
+                   op: AggregateOperation) -> GeneralStage:
+        """Two-input windowed co-aggregation (windowed join substrate,
+        NEXMark Q8)."""
+        st = _Stage(self.pipeline, "window_agg2", "win_agg2",
+                    [self.stage, other.stage], {"wdef": self.wdef, "op": op})
+        return GeneralStage(self.pipeline, st)
+
+
+class Pipeline:
+    def __init__(self):
+        self.stages: List[_Stage] = []
+
+    @staticmethod
+    def create() -> "Pipeline":
+        return Pipeline()
+
+    def read_from(self, source_supplier: Callable[[], Processor],
+                  name: str = "source",
+                  local_parallelism: int = -1) -> GeneralStage:
+        st = _Stage(self, "source", name, [],
+                    {"supplier": source_supplier, "lp": local_parallelism})
+        return GeneralStage(self, st)
+
+    # ------------------------------------------------------------------ planner --
+    def to_dag(self) -> DAG:
+        return _Planner(self).plan()
+
+
+# ---------------------------------------------------------------------------
+# Join / batch-aggregate processors used by the planner
+# ---------------------------------------------------------------------------
+
+
+class HashJoinProcessor(Processor):
+    """Ordinal 1 = build (batch, priority 0), ordinal 0 = probe."""
+
+    def __init__(self, probe_key_fn, build_key_fn, combine_fn, inner=True):
+        self.probe_key_fn = probe_key_fn
+        self.build_key_fn = build_key_fn
+        self.combine_fn = combine_fn
+        self.inner = inner
+        self.table: Dict[Any, Any] = {}
+        self.build_done = False
+
+    def process(self, ordinal: int, inbox: Inbox) -> None:
+        if ordinal == 1:
+            while True:
+                ev = inbox.poll()
+                if ev is None:
+                    return
+                self.table[self.build_key_fn(ev.value)] = ev.value
+            return
+        offer = self.outbox.offer
+        while True:
+            ev = inbox.peek()
+            if ev is None:
+                return
+            k = self.probe_key_fn(ev.value)
+            match = self.table.get(k)
+            if match is not None or not self.inner:
+                if not offer(ev.with_value((ev.value, match))):
+                    return
+            inbox.remove()
+
+    def complete_edge(self, ordinal: int) -> bool:
+        if ordinal == 1:
+            self.build_done = True
+        return True
+
+    def save_to_snapshot(self) -> bool:
+        for k, v in self.table.items():
+            self.outbox.offer_to_snapshot(("ht", k), v)
+        return True
+
+    def restore_from_snapshot(self, items) -> None:
+        for (tag, k), v in items:
+            if tag == "ht":
+                self.table[k] = v
+
+
+class GroupAggregateProcessor(Processor):
+    """Batch keyed aggregation: accumulate everything, emit on complete."""
+
+    def __init__(self, op: AggregateOperation):
+        self.op = op
+        self.accs: Dict[Any, Any] = {}
+        self._emit: Optional[List] = None
+
+    def process(self, ordinal: int, inbox: Inbox) -> None:
+        op, accs = self.op, self.accs
+        acc_fn = op.accumulate_fns[min(ordinal, len(op.accumulate_fns) - 1)]
+        while True:
+            ev = inbox.poll()
+            if ev is None:
+                return
+            acc = accs.get(ev.key)
+            if acc is None:
+                acc = op.create()
+            accs[ev.key] = acc_fn(acc, ev)
+
+    def complete(self) -> bool:
+        if self._emit is None:
+            self._emit = [Event(0, k, self.op.export(a))
+                          for k, a in self.accs.items()]
+        while self._emit:
+            if not self.outbox.offer(self._emit[-1]):
+                return False
+            self._emit.pop()
+        return True
+
+    def save_to_snapshot(self) -> bool:
+        for k, acc in self.accs.items():
+            self.outbox.offer_to_snapshot(("acc", k), acc)
+        return True
+
+    def restore_from_snapshot(self, items) -> None:
+        for (tag, k), acc in items:
+            if tag == "acc":
+                cur = self.accs.get(k)
+                self.accs[k] = acc if cur is None else self.op.combine(cur, acc)
+
+
+# ---------------------------------------------------------------------------
+# Planner
+# ---------------------------------------------------------------------------
+
+
+def _compile_chain(ops: List[Tuple[str, Callable]]):
+    """Compose a fused op chain into one Event -> tuple(Event) closure."""
+    steps = []
+    for op, fn in ops:
+        if op == "map":
+            steps.append(lambda ev, f=fn: (ev.with_value(f(ev.value)),))
+        elif op == "filter":
+            steps.append(lambda ev, f=fn: (ev,) if f(ev.value) else ())
+        elif op == "flat_map":
+            steps.append(lambda ev, f=fn: tuple(
+                ev.with_value(v) for v in f(ev.value)))
+        elif op == "rekey":
+            steps.append(lambda ev, f=fn: (ev.with_key(f(ev.value)),))
+        else:  # pragma: no cover
+            raise ValueError(op)
+    if len(steps) == 1:
+        return steps[0]
+
+    def chain(ev, _steps=tuple(steps)):
+        evs = (ev,)
+        for s in _steps:
+            out: List[Event] = []
+            for e in evs:
+                out.extend(s(e))
+            if not out:
+                return ()
+            evs = out
+        return tuple(evs)
+
+    return chain
+
+
+class _Planner:
+    def __init__(self, pipeline: Pipeline):
+        self.p = pipeline
+        self.dag = DAG()
+        #: logical stage -> (dag vertex name, preferred out-routing hints)
+        self.vertex_of: Dict[_Stage, str] = {}
+        self._out_ordinals: Dict[str, int] = {}
+
+    def plan(self) -> DAG:
+        consumed: set = set()
+        for st in self.p.stages:
+            if st in consumed:
+                continue
+            if st.kind == "source":
+                self.dag.vertex(st.name, st.params["supplier"],
+                                st.params.get("lp", -1))
+                self.vertex_of[st] = st.name
+            elif st.kind == "compute":
+                chain, last = self._collect_chain(st, consumed)
+                name = last.name
+                fused = _compile_chain([(s.params["op"], s.params["fn"])
+                                        for s in chain])
+                self.dag.vertex(
+                    name, (lambda c=fused: FusedFunctionProcessor(c)))
+                self.vertex_of[last] = name
+                for s in chain:
+                    self.vertex_of[s] = name
+                self._connect(chain[0].upstreams[0], name,
+                              Edge(self._vname(chain[0].upstreams[0]), name,
+                                   routing=Routing.ISOLATED))
+            elif st.kind in ("window_agg", "window_agg2"):
+                self._plan_window_agg(st)
+            elif st.kind == "hash_join":
+                self._plan_hash_join(st)
+            elif st.kind == "sink":
+                self.dag.vertex(st.name, st.params["supplier"])
+                self.vertex_of[st] = st.name
+                self._connect(st.upstreams[0], st.name,
+                              Edge(self._vname(st.upstreams[0]), st.name,
+                                   routing=Routing.ISOLATED))
+            elif st.kind == "custom":
+                self.dag.vertex(st.name, st.params["supplier"])
+                self.vertex_of[st] = st.name
+                routing = (Routing.PARTITIONED if st.params["partitioned"]
+                           else Routing.ISOLATED)
+                e = Edge(self._vname(st.upstreams[0]), st.name, routing=routing,
+                         distributed=st.params["distributed"])
+                self._connect(st.upstreams[0], st.name, e)
+            elif st.kind == "custom2":
+                # keyed two-input processor (incremental joins): both sides
+                # partition+distribute so equal keys colocate
+                self.dag.vertex(st.name, st.params["supplier"])
+                self.vertex_of[st] = st.name
+                for i, up in enumerate(st.upstreams):
+                    e = Edge(self._vname(up), st.name, dst_ordinal=i,
+                             routing=Routing.PARTITIONED, distributed=True)
+                    self._connect_up(up, e)
+            else:  # pragma: no cover
+                raise ValueError(st.kind)
+        self.dag.validate()
+        return self.dag
+
+    # -- helpers -------------------------------------------------------------
+    def _vname(self, stage: _Stage) -> str:
+        return self.vertex_of[stage]
+
+    def _collect_chain(self, st: _Stage, consumed: set):
+        """Greedy maximal fusion of a stateless chain starting at ``st``."""
+        chain = [st]
+        consumed.add(st)
+        idx = self.p.stages.index(st)
+        cur = st
+        for nxt in self.p.stages[idx + 1:]:
+            if (nxt.kind == "compute" and nxt.upstreams == [cur]
+                    and cur.downstream_count == 1):
+                chain.append(nxt)
+                consumed.add(nxt)
+                cur = nxt
+            elif nxt.upstreams and cur in nxt.upstreams:
+                break
+        return chain, cur
+
+    def _next_ordinal(self, vertex: str, side: str) -> int:
+        key = f"{side}:{vertex}"
+        n = self._out_ordinals.get(key, 0)
+        self._out_ordinals[key] = n + 1
+        return n
+
+    def _connect(self, up_stage: _Stage, dst: str, edge: Edge) -> None:
+        src = self._vname(up_stage)
+        edge.src_ordinal = self._next_ordinal(src, "out")
+        if edge.dst_ordinal == 0:
+            edge.dst_ordinal = self._next_ordinal(dst, "in")
+        self.dag.edge(edge)
+
+    def _plan_window_agg(self, st: _Stage) -> None:
+        wdef: SlidingWindowDef = st.params["wdef"]
+        op: AggregateOperation = st.params["op"]
+        two_input = st.kind == "window_agg2"
+        acc_name = st.name + ".accumulate"
+        cmb_name = st.name + ".combine"
+        ordinal_map = {0: 0, 1: 1} if two_input else None
+        self.dag.vertex(acc_name,
+                        lambda w=wdef, o=op, m=ordinal_map:
+                        AccumulateByFrameProcessor(w, o, m))
+        self.dag.vertex(cmb_name,
+                        lambda w=wdef, o=op: CombineFramesProcessor(w, o))
+        # local partitioned edge(s) into the accumulator
+        for i, up in enumerate(st.upstreams):
+            e = Edge(self._vname(up), acc_name, dst_ordinal=i,
+                     routing=Routing.PARTITIONED)
+            self._connect_up(up, e)
+        # distributed partitioned edge to the combiner
+        e2 = Edge(acc_name, cmb_name, routing=Routing.PARTITIONED,
+                  distributed=True)
+        e2.src_ordinal = self._next_ordinal(acc_name, "out")
+        self.dag.edge(e2)
+        self.vertex_of[st] = cmb_name
+
+    def _connect_up(self, up: _Stage, edge: Edge) -> None:
+        src = self._vname(up)
+        edge.src_ordinal = self._next_ordinal(src, "out")
+        self.dag.edge(edge)
+
+    def _plan_hash_join(self, st: _Stage) -> None:
+        p = st.params
+        name = st.name
+        self.dag.vertex(
+            name, lambda: HashJoinProcessor(
+                p["probe_key_fn"], p["build_key_fn"], p["combine_fn"],
+                p["inner"]))
+        probe, build = st.upstreams
+        # build side: broadcast + distributed, higher drain priority (0)
+        eb = Edge(self._vname(build), name, dst_ordinal=1,
+                  routing=Routing.BROADCAST, distributed=True, priority=0)
+        self._connect_up(build, eb)
+        ep = Edge(self._vname(probe), name, dst_ordinal=0,
+                  routing=Routing.ISOLATED, priority=1)
+        self._connect_up(probe, ep)
+        self.vertex_of[st] = name
+
+
+def group_aggregate(op: AggregateOperation) -> Callable[[], Processor]:
+    """Supplier for a batch keyed aggregation vertex (use with
+    ``custom_transform(partitioned=True, distributed=True)``)."""
+    return lambda: GroupAggregateProcessor(op)

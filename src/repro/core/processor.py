@@ -1,0 +1,242 @@
+"""Jet processors: the custom logic of a DAG vertex.
+
+A :class:`Processor` consumes items from an :class:`Inbox` and emits to an
+:class:`Outbox`.  The owning tasklet refills the inbox from the inbound
+queues, repeatedly calls :meth:`Processor.process` until the inbox drains,
+and flushes the outbox downstream.  A processor must tolerate its outbox
+rejecting items (bounded capacity == backpressure): it returns with items
+still in the inbox and is called again later.
+
+This mirrors ``com.hazelcast.jet.core.Processor`` including the snapshot
+hooks used by the Chandy-Lamport protocol.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Any, Callable, Iterable, Iterator, List, Optional, Tuple
+
+from .events import DONE, Event, Watermark
+
+
+class Inbox:
+    """A batch of input items from one edge ordinal."""
+
+    __slots__ = ("_items",)
+
+    def __init__(self):
+        self._items: deque = deque()
+
+    def add(self, item):
+        self._items.append(item)
+
+    def peek(self):
+        return self._items[0] if self._items else None
+
+    def poll(self):
+        return self._items.popleft() if self._items else None
+
+    def remove(self):
+        self._items.popleft()
+
+    def clear(self):
+        self._items.clear()
+
+    def __len__(self):
+        return len(self._items)
+
+    def __iter__(self) -> Iterator:
+        return iter(self._items)
+
+    def is_empty(self) -> bool:
+        return not self._items
+
+
+class Outbox:
+    """Bounded emission buffer; ``offer`` returning False == backpressure.
+
+    The tasklet drains the outbox into the outbound edge queues between
+    ``process`` calls.  ``batch_limit`` bounds the number of items buffered
+    per execution slice, which also bounds tasklet latency (a slice stays
+    under ~1 ms of work, the paper's cooperative-yield budget).
+    """
+
+    __slots__ = ("_items", "_limit", "snapshot_queue")
+
+    def __init__(self, batch_limit: int = 512):
+        self._items: List[Any] = []
+        self._limit = batch_limit
+        # (key, value) pairs captured by save_to_snapshot(); drained by the
+        # tasklet into the snapshot store.
+        self.snapshot_queue: List[Tuple[Any, Any]] = []
+
+    def offer(self, item) -> bool:
+        if len(self._items) >= self._limit:
+            return False
+        self._items.append(item)
+        return True
+
+    def offer_to_snapshot(self, key, value) -> bool:
+        self.snapshot_queue.append((key, value))
+        return True
+
+    def drain(self) -> List[Any]:
+        items, self._items = self._items, []
+        return items
+
+    def __len__(self):
+        return len(self._items)
+
+
+class ProcessorContext:
+    """Runtime info handed to a processor at init time."""
+
+    __slots__ = (
+        "vertex_name",
+        "global_index",
+        "local_index",
+        "total_parallelism",
+        "node_id",
+        "node_count",
+        "partition_ids",
+        "clock",
+        "logger",
+    )
+
+    def __init__(self, vertex_name: str, global_index: int, local_index: int,
+                 total_parallelism: int, node_id: int, node_count: int,
+                 partition_ids: Tuple[int, ...], clock=None, logger=None):
+        self.vertex_name = vertex_name
+        self.global_index = global_index
+        self.local_index = local_index
+        self.total_parallelism = total_parallelism
+        self.node_id = node_id
+        self.node_count = node_count
+        # partitions owned by this processor instance (for keyed state)
+        self.partition_ids = partition_ids
+        self.clock = clock
+        self.logger = logger
+
+
+class Processor:
+    """Base processor. Subclasses override the hooks they need."""
+
+    #: False for processors that make blocking calls; the engine then runs
+    #: them on a dedicated non-cooperative thread (paper §3.2).
+    is_cooperative = True
+
+    def init(self, outbox: Outbox, ctx: ProcessorContext) -> None:
+        self.outbox = outbox
+        self.ctx = ctx
+
+    # -- data path ----------------------------------------------------------
+    def process(self, ordinal: int, inbox: Inbox) -> None:
+        """Consume as much of the inbox as possible, emitting via outbox."""
+        raise NotImplementedError
+
+    def try_process_watermark(self, wm: Watermark) -> bool:
+        """Return True when the watermark is fully handled and may be
+        forwarded; False to be called again (backpressured emission)."""
+        return True
+
+    def complete_edge(self, ordinal: int) -> bool:
+        """Called when an input edge is exhausted; True when done."""
+        return True
+
+    def complete(self) -> bool:
+        """Called after ALL input edges are exhausted; return True when the
+        processor has emitted everything (batch semantics)."""
+        return True
+
+    # -- snapshot hooks -------------------------------------------------------
+    def save_to_snapshot(self) -> bool:
+        """Emit state as (key, value) pairs via outbox.offer_to_snapshot.
+        Return True when finished (may be re-called under backpressure)."""
+        return True
+
+    def restore_from_snapshot(self, items: Iterable[Tuple[Any, Any]]) -> None:
+        """Reload state saved by :meth:`save_to_snapshot`."""
+
+    def finish_snapshot_restore(self) -> None:
+        """Called once after all snapshot items were restored."""
+
+    def close(self) -> None:
+        """Release resources at job end."""
+
+
+# ---------------------------------------------------------------------------
+# Built-in stateless processors (targets of the fusion planner)
+# ---------------------------------------------------------------------------
+
+
+class FusedFunctionProcessor(Processor):
+    """Executes a fused chain of map/filter/flatMap functions.
+
+    The pipeline planner collapses consecutive stateless stages into a single
+    vertex running this processor — Jet's operator fusion (paper §3.1).  The
+    chain is compiled once into a single Python closure so the per-event cost
+    is one call, not one call per stage.
+    """
+
+    def __init__(self, chain: Callable[[Event], Iterable[Event]]):
+        # chain: Event -> iterable of Events (possibly empty)
+        self._chain = chain
+        self._pending: deque = deque()
+
+    def process(self, ordinal: int, inbox: Inbox) -> None:
+        chain = self._chain
+        offer = self.outbox.offer
+        pending = self._pending
+        while pending:
+            if not offer(pending[0]):
+                return
+            pending.popleft()
+        while True:
+            item = inbox.peek()
+            if item is None:
+                return
+            if isinstance(item, Event):
+                for out in chain(item):
+                    if not offer(out):
+                        pending.append(out)
+                inbox.remove()
+                if pending:
+                    return
+            else:
+                # control items are handled by the tasklet, never seen here
+                return
+
+
+class MapProcessor(FusedFunctionProcessor):
+    def __init__(self, fn: Callable[[Event], Event]):
+        super().__init__(lambda ev: (fn(ev),))
+
+
+class FilterProcessor(FusedFunctionProcessor):
+    def __init__(self, pred: Callable[[Event], bool]):
+        super().__init__(lambda ev: (ev,) if pred(ev) else ())
+
+
+class FlatMapProcessor(FusedFunctionProcessor):
+    def __init__(self, fn: Callable[[Event], Iterable[Event]]):
+        super().__init__(fn)
+
+
+class SinkProcessor(Processor):
+    """Terminal vertex: hands events to a consumer callable.
+
+    The consumer is typically a results collector (tests/benchmarks) or an
+    external-system adapter (see repro.snapshot.sinks for transactional /
+    idempotent variants).
+    """
+
+    def __init__(self, consumer: Callable[[Event], None]):
+        self._consumer = consumer
+
+    def process(self, ordinal: int, inbox: Inbox) -> None:
+        consumer = self._consumer
+        while True:
+            item = inbox.poll()
+            if item is None:
+                return
+            consumer(item)

@@ -1,0 +1,80 @@
+"""Single-producer single-consumer bounded queues.
+
+Jet connects each pair of communicating tasklets with a wait-free SPSC ring
+buffer; a full queue is the local backpressure signal (the producer backs off
+from its cooperative thread instead of blocking).  Inside this cooperative
+single-core runtime the queues are stepped by one driver thread, so plain
+index arithmetic *is* wait-free; the API surface (offer/poll never block,
+``offer`` returning ``False`` == backpressure) is preserved exactly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+
+class SPSCQueue:
+    """Fixed-capacity ring buffer with non-blocking offer/poll."""
+
+    __slots__ = ("_buf", "_cap", "_head", "_tail")
+
+    def __init__(self, capacity: int = 1024):
+        if capacity <= 0:
+            raise ValueError("capacity must be positive")
+        self._cap = capacity
+        self._buf: List[Any] = [None] * capacity
+        self._head = 0  # next slot to poll
+        self._tail = 0  # next slot to fill
+
+    # -- producer side -----------------------------------------------------
+    def offer(self, item) -> bool:
+        """Enqueue ``item``; returns False (backpressure) when full."""
+        if self._tail - self._head == self._cap:
+            return False
+        self._buf[self._tail % self._cap] = item
+        self._tail += 1
+        return True
+
+    def remaining_capacity(self) -> int:
+        return self._cap - (self._tail - self._head)
+
+    # -- consumer side -----------------------------------------------------
+    def poll(self) -> Optional[Any]:
+        """Dequeue one item or return None when empty."""
+        if self._head == self._tail:
+            return None
+        idx = self._head % self._cap
+        item = self._buf[idx]
+        self._buf[idx] = None
+        self._head += 1
+        return item
+
+    def peek(self) -> Optional[Any]:
+        if self._head == self._tail:
+            return None
+        return self._buf[self._head % self._cap]
+
+    def drain_to(self, sink: list, limit: int) -> int:
+        """Move up to ``limit`` items into ``sink`` (a list). Returns count."""
+        n = min(limit, self._tail - self._head)
+        buf, cap, head = self._buf, self._cap, self._head
+        for i in range(n):
+            idx = (head + i) % cap
+            sink.append(buf[idx])
+            buf[idx] = None
+        self._head = head + n
+        return n
+
+    # -- shared -------------------------------------------------------------
+    def __len__(self) -> int:
+        return self._tail - self._head
+
+    @property
+    def capacity(self) -> int:
+        return self._cap
+
+    def is_empty(self) -> bool:
+        return self._head == self._tail
+
+    def is_full(self) -> bool:
+        return self._tail - self._head == self._cap

@@ -1,0 +1,267 @@
+"""Sources and sinks.
+
+* :class:`ListSource` — batch source over a fixed collection.
+* :class:`PacedGeneratorSource` — streaming source that emits synthetic
+  events on an ideal schedule (``rate`` events/second of *cluster clock*);
+  any delay in actually emitting an event counts against the measured
+  latency, exactly the paper's methodology (§7.1).  Deterministic in the
+  sequence number, so it is replayable after restore on an unchanged
+  topology.
+* :class:`Journal` + :class:`JournalSource` — a partitioned, replayable,
+  Kafka-like log.  Journal partitions are mapped onto the cluster's state
+  partitions, so offsets snapshot/restore through the same consistent-hash
+  routing as keyed state — sources stay aligned with the partition table
+  across topology changes (node loss / elastic scale-out).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Iterable, List, Optional, Sequence, Tuple
+
+from .events import Event, Watermark, MAX_TIME
+from .processor import Inbox, Processor
+from .watermark import EventTimePolicy
+
+
+class ListSource(Processor):
+    """Batch source: instance *i* of *N* emits ``items[i::N]``."""
+
+    def __init__(self, items: Sequence, ts_fn: Optional[Callable] = None,
+                 key_fn: Optional[Callable] = None):
+        self.items = items
+        self.ts_fn = ts_fn or (lambda v: 0)
+        self.key_fn = key_fn or (lambda v: None)
+        self._pos = None
+
+    def complete(self) -> bool:
+        if self._pos is None:
+            self._pos = self.ctx.global_index
+        items, step = self.items, self.ctx.total_parallelism
+        while self._pos < len(items):
+            v = items[self._pos]
+            if not self.outbox.offer(Event(self.ts_fn(v), self.key_fn(v), v)):
+                return False
+            self._pos += step
+        return True
+
+
+class PacedGeneratorSource(Processor):
+    """Streaming source paced against the cluster clock.
+
+    ``gen_fn(seq) -> (ts_ms, key, value)`` must be deterministic; ``rate``
+    is the aggregate events/second across all instances.  Event time starts
+    at 0 (ms) and the paper's latency clock is ``emit_wall_time -
+    ideal_time``; the engine exposes ``ideal_time`` via the event timestamp
+    so sinks can compute end-to-end latency.
+    """
+
+    def __init__(self, gen_fn: Callable[[int], Tuple[int, Any, Any]],
+                 rate: float, max_events: Optional[int] = None,
+                 wm_policy: Optional[Callable[[], EventTimePolicy]] = None,
+                 wm_stride: int = 1):
+        self.gen_fn = gen_fn
+        self.rate = rate
+        self.max_events = max_events
+        self.policy_factory = wm_policy or (lambda: EventTimePolicy(lag=0))
+        self.wm_stride = wm_stride
+        self._seq = None           # next seq for THIS instance
+        self._start = None         # absolute schedule anchor (cluster clock)
+        self.policy = None
+
+    def _setup(self):
+        if self._seq is None:      # a restore may have set the offset
+            self._seq = self.ctx.global_index
+        if self._start is None:    # a restore re-anchors to the ORIGINAL t0
+            self._start = self.ctx.clock.now()
+        self.policy = self.policy_factory()
+
+    def complete(self) -> bool:
+        if self.policy is None:
+            self._setup()
+        step = self.ctx.total_parallelism
+        rate = self.rate
+        clock, start = self.ctx.clock, self._start
+        gen = self.gen_fn
+        while True:
+            if self.max_events is not None and self._seq >= self.max_events:
+                return True
+            due = start + self._seq / rate
+            if clock.now() < due:
+                return False
+            ts, key, value = gen(self._seq)
+            if not self.outbox.offer(Event(ts, key, value)):
+                return False
+            self._seq += step
+            wm = self.policy.observe(ts)
+            if wm is not None and (self._seq // step) % self.wm_stride == 0:
+                if not self.outbox.offer(Watermark(wm)):
+                    return False
+
+    # replay support: offsets ride on the owned state partitions (like
+    # JournalSource) so any post-restart topology finds them.  The restart
+    # resumes from the MINIMUM saved sequence — exactly-once for the
+    # generator's own state, at-least-once for events in the residue gap
+    # when parallelism changed (documented; the journal source is the
+    # exactly-once-replay path).
+    def save_to_snapshot(self) -> bool:
+        for p in self.ctx.partition_ids:
+            self.outbox.offer_to_snapshot(("gen", p),
+                                          (self._seq, self._start))
+        return True
+
+    def snapshot_partition(self, skey):
+        if isinstance(skey, tuple) and skey[0] == "gen":
+            return skey[1]
+        return None
+
+    def restore_from_snapshot(self, items) -> None:
+        seqs = [val[0] for (tag, _p), val in items
+                if tag == "gen" and val and val[0] is not None]
+        starts = [val[1] for (tag, _p), val in items
+                  if tag == "gen" and val and val[1] is not None]
+        if seqs:
+            base = min(seqs)
+            total = self.ctx.total_parallelism
+            idx = self.ctx.global_index
+            # smallest seq >= base in this instance's residue class
+            self._seq = base + ((idx - base) % total)
+        if starts:
+            # the cluster clock is monotonic across restarts: anchoring to
+            # the original t0 keeps the ideal schedule (and therefore the
+            # measured latency of replayed events) honest
+            self._start = min(starts)
+
+
+class Journal:
+    """Shared, partitioned, replayable event log (stands in for Kafka)."""
+
+    def __init__(self, n_partitions: int = 16):
+        self.n_partitions = n_partitions
+        self.partitions: List[List[Tuple[int, Any, Any]]] = [
+            [] for _ in range(n_partitions)]
+
+    def append(self, ts: int, key, value) -> None:
+        self.partitions[hash(key) % self.n_partitions].append((ts, key, value))
+
+    def extend(self, records: Iterable[Tuple[int, Any, Any]]) -> None:
+        for ts, key, value in records:
+            self.append(ts, key, value)
+
+    def total(self) -> int:
+        return sum(len(p) for p in self.partitions)
+
+
+class JournalSource(Processor):
+    """Replayable source over a :class:`Journal`.
+
+    Journal partition *jp* is read by the instance that owns state
+    partition *jp* (``ctx.partition_ids``), and its offset snapshots under
+    partition *jp* — after a topology change, the new owner of *jp* finds
+    exactly the offset it needs (paper §4.5 "replayable source").
+    ``finite=True`` emits DONE at the end of the journal (batch replay);
+    otherwise the source idles waiting for more data.
+    """
+
+    def __init__(self, journal: Journal, finite: bool = True,
+                 wm_policy: Optional[Callable[[], EventTimePolicy]] = None,
+                 rate: Optional[float] = None):
+        self.journal = journal
+        self.finite = finite
+        self.policy_factory = wm_policy or (lambda: EventTimePolicy(lag=0))
+        #: events/second per instance, paced against the cluster clock
+        #: (None = drain as fast as possible)
+        self.rate = rate
+        self._offsets = None       # jp -> next index
+        self.policy = None
+        self._idle_wm_sent = False
+        self._emitted = 0
+        self._start = None
+
+    def _setup(self):
+        self._offsets = {
+            jp: 0 for jp in self.ctx.partition_ids
+            if jp < self.journal.n_partitions}
+        self.policy = self.policy_factory()
+        self._start = self.ctx.clock.now()
+        self._emitted = 0
+
+    def _due_budget(self) -> int:
+        if self.rate is None:
+            return 1 << 30
+        due = int((self.ctx.clock.now() - self._start) * self.rate)
+        return max(0, due - self._emitted)
+
+    def complete(self) -> bool:
+        if self._offsets is None:
+            self._setup()
+        if not self._offsets:
+            # no journal partitions assigned: don't hold back the coalesced
+            # watermark downstream
+            if not self._idle_wm_sent:
+                if self.outbox.offer(Watermark(MAX_TIME)):
+                    self._idle_wm_sent = True
+            return self.finite
+        # merge-read across partitions in event-time order: offsets may
+        # differ per partition (replay!), and reading one partition to
+        # exhaustion before the next would emit watermarks that make the
+        # other partitions' events late (premature window emission).
+        budget = self._due_budget()
+        parts = self.journal.partitions
+        while budget > 0:
+            best_jp, best_ts = -1, None
+            for jp, off in self._offsets.items():
+                part = parts[jp]
+                if off < len(part):
+                    ts = part[off][0]
+                    if best_ts is None or ts < best_ts:
+                        best_jp, best_ts = jp, ts
+            if best_jp < 0:
+                return self.finite  # all partitions exhausted
+            off = self._offsets[best_jp]
+            ts, key, value = parts[best_jp][off]
+            if not self.outbox.offer(Event(ts, key, value)):
+                return False
+            self._offsets[best_jp] = off + 1
+            budget -= 1
+            self._emitted += 1
+            wm = self.policy.observe(ts)
+            if wm is not None:
+                if not self.outbox.offer(Watermark(wm)):
+                    return False
+        return False
+
+    # -- replay protocol --------------------------------------------------------
+    def save_to_snapshot(self) -> bool:
+        for jp, off in self._offsets.items():
+            self.outbox.offer_to_snapshot(("off", jp), off)
+        return True
+
+    def snapshot_partition(self, skey) -> Optional[int]:
+        if isinstance(skey, tuple) and skey[0] == "off":
+            return skey[1]
+        return None
+
+    def restore_from_snapshot(self, items) -> None:
+        if self._offsets is None:
+            self._setup()
+        for (tag, jp), off in items:
+            if tag == "off" and jp in self._offsets:
+                self._offsets[jp] = max(self._offsets[jp], off)
+
+
+class CollectorSink(Processor):
+    """Collects events into a shared list; records arrival wall time for
+    latency measurement: appends ``(wall_now, event)``."""
+
+    def __init__(self, out: list, with_time: bool = False):
+        self.out = out
+        self.with_time = with_time
+
+    def process(self, ordinal: int, inbox: Inbox) -> None:
+        out, with_time = self.out, self.with_time
+        clock = self.ctx.clock
+        while True:
+            item = inbox.poll()
+            if item is None:
+                return
+            out.append((clock.now(), item) if with_time else item)

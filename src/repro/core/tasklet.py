@@ -1,0 +1,530 @@
+"""Tasklets and the cooperative scheduler.
+
+A :class:`ProcessorTasklet` adapts one processor instance to the cooperative
+execution protocol: ``call()`` performs one short slice of work — drain some
+input, run the processor, flush the outbox — and returns whether it made
+progress.  A :class:`CooperativeWorker` owns a set of tasklets and steps
+them round-robin, exactly the paper's "simply iterating over all tasklets
+repeatedly works pretty well" (§3.2).
+
+The tasklet also implements the two stream-protocol mechanisms that must be
+engine-level, not processor-level:
+
+* **watermark coalescing** across all input queues (min-rule), and
+* **Chandy-Lamport barrier handling**: in exactly-once mode a queue that
+  delivered barrier *n* is parked until every live input queue delivered
+  barrier *n* (alignment), then the processor state is snapshotted and the
+  barrier is forwarded; in at-least-once mode the first sighting snapshots
+  immediately and nothing is parked.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Any, Callable, List, Optional, Sequence
+
+from .dag import PARTITION_COUNT, Routing
+from .events import DONE, Barrier, DoneItem, Event, Watermark, MIN_TIME
+from .processor import Inbox, Outbox, Processor
+from .watermark import WatermarkCoalescer
+
+# tasklet lifecycle states
+RUNNING = "running"
+SAVING_SNAPSHOT = "saving_snapshot"
+EMITTING_BARRIER = "emitting_barrier"
+COMPLETING = "completing"
+EMITTING_DONE = "emitting_done"
+DONE_STATE = "done"
+
+GUARANTEE_NONE = "none"
+GUARANTEE_AT_LEAST_ONCE = "at_least_once"
+GUARANTEE_EXACTLY_ONCE = "exactly_once"
+
+
+class InQueue:
+    """One inbound queue (SPSC ring or the receiver side of a NetworkLink)
+    plus its stream-protocol state."""
+
+    __slots__ = ("q", "ordinal", "done", "parked_barrier", "seen_barrier",
+                 "priority")
+
+    def __init__(self, q, ordinal: int, priority: int = 0):
+        self.q = q
+        self.ordinal = ordinal
+        self.done = False
+        #: barrier id this queue is parked on (exactly-once alignment)
+        self.parked_barrier: Optional[int] = None
+        #: last barrier id delivered (at-least-once: no parking, but the
+        #: snapshot still waits for the barrier on every live queue)
+        self.seen_barrier: int = 0
+        #: lower value drains first; higher-priority queues are not polled
+        #: until every lower-value queue is done (hash-join build sides)
+        self.priority = priority
+
+
+class EdgeCollector:
+    """Routes a tasklet's output items onto one out-edge's queues.
+
+    ``queues[i]`` accepts ``offer(item) -> bool``; for distributed edges
+    some of them are NetworkLink producers.  ``partition_to_queue`` maps a
+    key partition to a queue index for PARTITIONED routing.  Control items
+    (watermarks, barriers, DONE) are *broadcast* to every queue with
+    resumable partial progress.
+    """
+
+    __slots__ = ("queues", "routing", "key_fn", "partition_to_queue",
+                 "_rr_cursor", "_bc_item", "_bc_remaining")
+
+    def __init__(self, queues: Sequence, routing: str,
+                 key_fn: Optional[Callable],
+                 partition_to_queue: Optional[List[int]] = None):
+        self.queues = list(queues)
+        self.routing = routing
+        self.key_fn = key_fn
+        self.partition_to_queue = partition_to_queue
+        self._rr_cursor = 0
+        self._bc_item = None
+        self._bc_remaining: List[int] = []
+
+    # -- data items ---------------------------------------------------------
+    def offer(self, item: Event) -> bool:
+        r = self.routing
+        if r == Routing.PARTITIONED:
+            key = self.key_fn(item) if self.key_fn else item.key
+            pid = hash(key) % PARTITION_COUNT
+            return self.queues[self.partition_to_queue[pid]].offer(item)
+        if r == Routing.ROUND_ROBIN:
+            n = len(self.queues)
+            for i in range(n):
+                qi = (self._rr_cursor + i) % n
+                if self.queues[qi].offer(item):
+                    self._rr_cursor = (qi + 1) % n
+                    return True
+            return False
+        if r == Routing.ISOLATED:
+            return self.queues[0].offer(item)
+        # BROADCAST of data items uses the same resumable path as control
+        return self.broadcast(item)
+
+    # -- control items --------------------------------------------------------
+    def broadcast(self, item) -> bool:
+        """Offer ``item`` to every queue; resumable under backpressure.
+        Only one broadcast may be in flight per collector at a time."""
+        if self._bc_item is not item:
+            self._bc_item = item
+            self._bc_remaining = list(range(len(self.queues)))
+        still = []
+        for qi in self._bc_remaining:
+            if not self.queues[qi].offer(item):
+                still.append(qi)
+        self._bc_remaining = still
+        if not still:
+            self._bc_item = None
+            return True
+        return False
+
+
+class SnapshotContext:
+    """Shared per-job snapshot coordination state (one per execution).
+
+    A snapshot completes when every tasklet has either acked its barrier or
+    become exempt (a tasklet whose inputs are exhausted will never see a
+    barrier; its state is final and empty of in-flight work)."""
+
+    __slots__ = ("guarantee", "requested_id", "writer", "tasklets", "_acked",
+                 "completed_id", "on_complete", "terminal_requested")
+
+    def __init__(self, guarantee: str, writer=None):
+        self.guarantee = guarantee
+        self.requested_id = 0       # bumped by the coordinator
+        self.writer = writer        # SnapshotWriter (state backend)
+        self.tasklets: List = []
+        self._acked: set = set()
+        self.completed_id = 0
+        self.on_complete: Optional[Callable[[int], None]] = None
+        self.terminal_requested = False
+
+    def begin(self, snapshot_id: int) -> None:
+        self.requested_id = snapshot_id
+        self._acked = set()
+        self._check()
+
+    def ack(self, snapshot_id: int, tasklet) -> None:
+        if snapshot_id != self.requested_id:
+            return
+        self._acked.add(id(tasklet))
+        self._check()
+
+    def notify_exempt(self, tasklet) -> None:
+        """A tasklet entered a terminal phase; re-evaluate completion."""
+        self._check()
+
+    def _check(self) -> None:
+        if self.completed_id == self.requested_id:
+            return
+        if all(id(t) in self._acked or t.is_snapshot_exempt
+               for t in self.tasklets):
+            self.completed_id = self.requested_id
+            if self.on_complete is not None:
+                self.on_complete(self.completed_id)
+
+
+class ProcessorTasklet:
+    """Drives one processor instance through the cooperative protocol."""
+
+    def __init__(self, name: str, processor: Processor,
+                 in_queues: List[InQueue],
+                 collectors: List[EdgeCollector],
+                 ssctx: SnapshotContext,
+                 vertex_name: str,
+                 global_index: int,
+                 snapshot_pid_fn: Optional[Callable[[Any], int]] = None,
+                 is_source: bool = False):
+        self.name = name
+        self.processor = processor
+        self.in_queues = in_queues
+        self.collectors = collectors
+        self.ssctx = ssctx
+        self.vertex_name = vertex_name
+        self.global_index = global_index
+        self.is_source = is_source or not in_queues
+        # per-ordinal inboxes
+        max_ord = max((iq.ordinal for iq in in_queues), default=-1)
+        self.inboxes = [Inbox() for _ in range(max_ord + 1)]
+        self.outbox = Outbox()
+        self._pending_out: deque = deque()
+        self._pending_wm: Optional[Watermark] = None
+        self._wm_processed = False
+        self.coalescer = WatermarkCoalescer(len(in_queues)) if in_queues else None
+        self.state = RUNNING
+        self.snapshot_in_progress: Optional[int] = None
+        #: snapshot id waiting for the inboxes to drain before it may start
+        self._armed_snapshot: Optional[int] = None
+        self.last_snapshot_id = 0
+        self._snapshot_pid_fn = snapshot_pid_fn
+        self._queue_cursor = 0
+        self._barrier_to_emit: Optional[Barrier] = None
+        # stats
+        self.items_in = 0
+        self.items_out = 0
+        self.calls = 0
+        self.idle_calls = 0
+
+    # ------------------------------------------------------------------ call --
+    def call(self) -> bool:
+        """One execution slice; returns True when progress was made."""
+        self.calls += 1
+        progress = False
+
+        # 1. flush anything already produced
+        if self._pending_out or len(self.outbox):
+            progress |= self._flush_outbox()
+            if self._pending_out:
+                self.idle_calls += not progress
+                return progress
+
+        # 2. pending watermark: only once every already-drained item has been
+        #    processed (all data <= a coalesced watermark is in the inboxes
+        #    by the time it advances, so this ordering is what makes window
+        #    emission see complete frames)
+        if (self._pending_wm is not None
+                and not any(len(ib) for ib in self.inboxes)):
+            if not self._forward_watermark():
+                self.idle_calls += not progress
+                return progress
+            progress = True
+
+        st = self.state
+        if st == RUNNING:
+            progress |= self._run_slice()
+        elif st == SAVING_SNAPSHOT:
+            progress |= self._save_snapshot_slice()
+        elif st == EMITTING_BARRIER:
+            progress |= self._emit_barrier_slice()
+        elif st == COMPLETING:
+            progress |= self._complete_slice()
+        elif st == EMITTING_DONE:
+            progress |= self._emit_done_slice()
+        if not progress:
+            self.idle_calls += 1
+        return progress
+
+    # -------------------------------------------------------------- running --
+    def _run_slice(self) -> bool:
+        progress = False
+        # source tasklets: react to coordinator-initiated snapshots
+        if self.is_source and self.ssctx.guarantee != GUARANTEE_NONE:
+            if self.ssctx.requested_id > self.last_snapshot_id:
+                self._begin_snapshot(self.ssctx.requested_id)
+                return True
+
+        if self.is_source:
+            # streaming/batch sources do their work in complete()
+            done = self.processor.complete()
+            emitted = self._flush_outbox()
+            progress |= emitted
+            if done:
+                self.state = EMITTING_DONE
+                return True
+            return progress
+
+        progress |= self._drain_inputs()
+        # run the processor over non-empty inboxes
+        for ordinal, inbox in enumerate(self.inboxes):
+            if len(inbox):
+                before = len(inbox)
+                self.processor.process(ordinal, inbox)
+                progress |= len(inbox) != before or len(self.outbox) > 0
+                if len(self.outbox):
+                    self._flush_outbox()
+        # watermark became due after this slice's inbox processing
+        if (self._pending_wm is not None
+                and not any(len(ib) for ib in self.inboxes)):
+            progress |= self._forward_watermark()
+        # a snapshot armed by a barrier starts only once every pre-barrier
+        # item has been fully processed and emitted (consistency of the cut)
+        if (self._armed_snapshot is not None
+                and not any(len(ib) for ib in self.inboxes)
+                and not self._pending_out and not len(self.outbox)):
+            sid = self._armed_snapshot
+            self._armed_snapshot = None
+            self._begin_snapshot(sid)
+            return True
+        # all inputs done?
+        if (self.state == RUNNING and self.in_queues
+                and all(iq.done for iq in self.in_queues)
+                and not any(len(ib) for ib in self.inboxes)):
+            self.state = COMPLETING
+            self.ssctx.notify_exempt(self)
+            progress = True
+        return progress
+
+    def _drain_inputs(self) -> bool:
+        """Poll input queues round-robin, handling control items."""
+        progress = False
+        n = len(self.in_queues)
+        exactly_once = self.ssctx.guarantee == GUARANTEE_EXACTLY_ONCE
+        # priority edges: only drain the lowest not-yet-done priority class
+        cur_priority = min((iq.priority for iq in self.in_queues
+                            if not iq.done), default=0)
+        for i in range(n):
+            iq = self.in_queues[(self._queue_cursor + i) % n]
+            if iq.done or iq.parked_barrier is not None:
+                continue
+            if iq.priority > cur_priority:
+                continue
+            inbox = self.inboxes[iq.ordinal]
+            # drain a bounded batch from this queue
+            for _ in range(256):
+                item = iq.q.poll()
+                if item is None:
+                    break
+                progress = True
+                if isinstance(item, Event):
+                    self.items_in += 1
+                    inbox.add(item)
+                    continue
+                if isinstance(item, Watermark):
+                    self._on_watermark(iq, item)
+                    break  # process data before more control items
+                if isinstance(item, Barrier):
+                    iq.seen_barrier = item.snapshot_id
+                    if exactly_once:
+                        iq.parked_barrier = item.snapshot_id
+                    self._recheck_alignment(item.snapshot_id)
+                    break
+                if isinstance(item, DoneItem):
+                    self._on_queue_done(iq)
+                    break
+        self._queue_cursor = (self._queue_cursor + 1) % max(n, 1)
+        return progress
+
+    # ------------------------------------------------------------ watermarks --
+    def _on_watermark(self, iq: InQueue, wm: Watermark) -> None:
+        qi = self.in_queues.index(iq)
+        new_ts = self.coalescer.observe(qi, wm.ts)
+        if new_ts is not None:
+            self._pending_wm = Watermark(new_ts)
+            self._wm_processed = False
+
+    def _forward_watermark(self) -> bool:
+        wm = self._pending_wm
+        if not self._wm_processed:
+            if not self.processor.try_process_watermark(wm):
+                self._flush_outbox()
+                return False
+            self._wm_processed = True
+            self._flush_outbox()
+        for c in self.collectors:
+            if not c.broadcast(wm):
+                return False
+        self._pending_wm = None
+        return True
+
+    # -------------------------------------------------------------- barriers --
+    def _recheck_alignment(self, snapshot_id: Optional[int] = None) -> None:
+        """Arm the snapshot once barrier ``snapshot_id`` was delivered on
+        every live queue.  Exactly-once additionally parks queues that are
+        already past the barrier (done in ``_drain_inputs``); at-least-once
+        keeps draining them, accepting replay-duplicates."""
+        if snapshot_id is None:
+            ids = [iq.seen_barrier for iq in self.in_queues
+                   if not iq.done and iq.seen_barrier > self.last_snapshot_id]
+            if not ids:
+                return
+            snapshot_id = min(ids)
+        if snapshot_id <= self.last_snapshot_id:
+            return
+        live = [iq for iq in self.in_queues if not iq.done]
+        if live and all(iq.seen_barrier >= snapshot_id for iq in live):
+            self._armed_snapshot = snapshot_id
+
+    def _begin_snapshot(self, snapshot_id: int) -> None:
+        self.snapshot_in_progress = snapshot_id
+        self.state = SAVING_SNAPSHOT
+
+    def _save_snapshot_slice(self) -> bool:
+        # transactional sinks key their prepared buffers by snapshot id
+        self.processor.current_snapshot_id = self.snapshot_in_progress
+        ok = self.processor.save_to_snapshot()
+        # drain snapshotted state into the store
+        writer = self.ssctx.writer
+        if writer is not None:
+            for key, value in self.outbox.snapshot_queue:
+                pid = (self._snapshot_pid_fn(key)
+                       if self._snapshot_pid_fn is not None else None)
+                if pid is None:
+                    pid = hash(key) % PARTITION_COUNT
+                writer.put(self.snapshot_in_progress, self.vertex_name,
+                           key, value, pid)
+        self.outbox.snapshot_queue.clear()
+        self._flush_outbox()
+        if ok:
+            self._barrier_to_emit = Barrier(self.snapshot_in_progress)
+            self.state = EMITTING_BARRIER
+        return True
+
+    def _emit_barrier_slice(self) -> bool:
+        b = self._barrier_to_emit
+        for c in self.collectors:
+            if not c.broadcast(b):
+                return True  # made progress, still emitting
+        # barrier fully forwarded: unpark queues, ack, resume
+        self.last_snapshot_id = b.snapshot_id
+        for iq in self.in_queues:
+            if iq.parked_barrier == b.snapshot_id:
+                iq.parked_barrier = None
+        self._barrier_to_emit = None
+        self.snapshot_in_progress = None
+        self.state = RUNNING
+        self.ssctx.ack(b.snapshot_id, self)
+        return True
+
+    # ------------------------------------------------------------- done/batch --
+    def _on_queue_done(self, iq: InQueue) -> None:
+        iq.done = True
+        qi = self.in_queues.index(iq)
+        new_ts = self.coalescer.queue_done(qi)
+        if new_ts is not None:
+            self._pending_wm = Watermark(new_ts)
+            self._wm_processed = False
+        ordinal_queues = [q for q in self.in_queues if q.ordinal == iq.ordinal]
+        if all(q.done for q in ordinal_queues):
+            self.processor.complete_edge(iq.ordinal)
+        # a queue finishing can complete a pending barrier alignment
+        if self.ssctx.guarantee != GUARANTEE_NONE:
+            self._recheck_alignment()
+
+    def _complete_slice(self) -> bool:
+        done = self.processor.complete()
+        self._flush_outbox()
+        if done:
+            self.state = EMITTING_DONE
+        return True
+
+    def _emit_done_slice(self) -> bool:
+        for c in self.collectors:
+            if not c.broadcast(DONE):
+                return True
+        self.state = DONE_STATE
+        self.processor.close()
+        self.ssctx.notify_exempt(self)
+        return True
+
+    # --------------------------------------------------------------- outbox --
+    def _flush_outbox(self) -> bool:
+        """Move outbox items to the edge collectors. Items go to every
+        collector (one per out-edge); resumable under backpressure."""
+        if len(self.outbox):
+            self._pending_out.extend(
+                (item, 0) for item in self.outbox.drain())
+        progress = False
+        while self._pending_out:
+            item, start_c = self._pending_out[0]
+            for ci in range(start_c, len(self.collectors)):
+                if not self.collectors[ci].offer(item):
+                    self._pending_out[0] = (item, ci)
+                    return progress
+            self._pending_out.popleft()
+            self.items_out += 1
+            progress = True
+        return progress
+
+    @property
+    def is_done(self) -> bool:
+        return self.state == DONE_STATE
+
+    @property
+    def is_snapshot_exempt(self) -> bool:
+        """True when this tasklet can no longer receive a barrier: its
+        inputs are exhausted (or it is a source that already finished)."""
+        return self.state in (COMPLETING, EMITTING_DONE, DONE_STATE)
+
+    def __repr__(self):  # pragma: no cover
+        return f"Tasklet({self.name}, state={self.state})"
+
+
+class CooperativeWorker:
+    """One worker == one CPU core.  Steps its tasklets round-robin.
+
+    Tracks per-tasklet wall time: a tasklet that hogs its slice (violating
+    the paper's <1 ms cooperative budget) is a *straggler* — the report
+    feeds the ops playbook (move the vertex to a non-cooperative thread, or
+    in the active-active deployment simply prefer the healthy replica)."""
+
+    __slots__ = ("tasklets", "name", "_time_in", "slice_budget_s",
+                 "budget_violations")
+
+    def __init__(self, name: str, slice_budget_s: float = 0.001):
+        self.name = name
+        self.tasklets: List[ProcessorTasklet] = []
+        self._time_in: dict = {}
+        self.slice_budget_s = slice_budget_s
+        self.budget_violations: dict = {}
+
+    def add(self, tasklet: ProcessorTasklet) -> None:
+        self.tasklets.append(tasklet)
+
+    def run_iteration(self) -> bool:
+        import time as _time
+        progress = False
+        for t in self.tasklets:
+            if not t.is_done:
+                t0 = _time.perf_counter()
+                progress |= t.call()
+                dt = _time.perf_counter() - t0
+                self._time_in[t.name] = self._time_in.get(t.name, 0.0) + dt
+                if dt > self.slice_budget_s:
+                    self.budget_violations[t.name] = \
+                        self.budget_violations.get(t.name, 0) + 1
+        return progress
+
+    def hot_tasklets(self, top: int = 5):
+        """(name, cumulative_s, budget_violations) sorted by time."""
+        return sorted(((n, s, self.budget_violations.get(n, 0))
+                       for n, s in self._time_in.items()),
+                      key=lambda x: -x[1])[:top]
+
+    @property
+    def all_done(self) -> bool:
+        return all(t.is_done for t in self.tasklets)

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: partition routing histogram.
+
+Jet's exchange operator must know how many events go to each partition
+before building the all-to-all (counting sort).  Histogramming is a
+scatter-add on CPU; here it is the same one-hot reduction as window_agg
+(matvec against ones) on the MXU:
+
+    counts[p] = sum_n (pid[n] == p)
+
+Grid: (P / BP) partition tiles x (N / BN) event tiles, event dim minormost
+so each partition tile accumulates across event tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BP = 128
+BN = 2048
+
+
+def _kernel(pid_ref, out_ref, *, BP: int):
+    pt = pl.program_id(0)
+    nt = pl.program_id(1)
+
+    @pl.when(nt == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    pids = pid_ref[...]                                       # (BN,)
+    base = pt * BP
+    iota = jax.lax.broadcasted_iota(jnp.int32, (pids.shape[0], BP), 1)
+    onehot = jnp.where(pids[:, None] == base + iota, 1.0, 0.0
+                       ).astype(jnp.float32)                  # (BN, BP)
+    out_ref[...] += jnp.sum(onehot, axis=0).astype(jnp.int32)
+
+
+def route_counts(pids, valid, n_partitions: int,
+                 block_p: int = BP, block_n: int = BN,
+                 interpret: bool = True):
+    """pids: (N,) int32 partition ids. Returns (P,) int32 counts."""
+    N = pids.shape[0]
+    P = n_partitions
+    bn = min(block_n, N)
+    bp = min(block_p, P)
+    assert N % bn == 0 and P % bp == 0
+    pids = jnp.where(valid, pids, -1).astype(jnp.int32)   # -1 matches nothing
+    return pl.pallas_call(
+        functools.partial(_kernel, BP=bp),
+        grid=(P // bp, N // bn),
+        in_specs=[pl.BlockSpec((bn,), lambda pt, nt: (nt,))],
+        out_specs=pl.BlockSpec((bp,), lambda pt, nt: (pt,)),
+        out_shape=jax.ShapeDtypeStruct((P,), jnp.int32),
+        interpret=interpret,
+    )(pids)
+
+
+def route_offsets(pids, valid, n_partitions: int, **kw):
+    """counts + exclusive-prefix offsets (the all-to-all send layout)."""
+    counts = route_counts(pids, valid, n_partitions, **kw)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(counts)[:-1]])
+    return counts, offsets

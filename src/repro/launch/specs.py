@@ -1,0 +1,134 @@
+"""Per-(architecture x input-shape) cell builders for the dry-run, the
+trainer and the server.
+
+``build_cell(arch, shape, mesh)`` returns a :class:`Cell`: the step
+function, ShapeDtypeStruct stand-ins for every input (weak-type-correct,
+shardable, no device allocation), matching in/out shardings, and the donate
+policy.  ``decode_*``/``long_*`` shapes lower ``serve_step`` (one token
+against a seq_len cache), ``prefill_*`` lowers the cache-filling prefill,
+``train_*`` lowers a full train step (fwd + bwd + sharded AdamW update).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, ShapeSpec, get_config
+from ..models import lm
+from ..models.config import ModelConfig
+from ..runtime.optimizer import AdamW
+from ..sharding.rules import (batch_sharding, cache_sharding, param_sharding,
+                              state_sharding)
+
+
+#: gradient-accumulation factor per arch for train_4k — chosen so the
+#: baseline fits 16 GiB/chip HBM (v5e); recorded with each dry-run result
+MICROBATCHES = {
+    "jamba-v0.1-52b": 8,      # M=16 only helps 6% (single-pod-only anyway)
+    "mixtral-8x7b": 2,
+    "phi3.5-moe-42b-a6.6b": 2,
+    "internlm2-20b": 4,       # 17.1 -> 13.3 GiB/chip (hillclimb A)
+    "llava-next-34b": 2,
+    "minitron-4b": 4,         # 16.8 -> 13.3 GiB/chip (hillclimb A)
+}
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable                    # jit-able step function
+    args: Tuple[Any, ...]           # ShapeDtypeStructs
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any              # None -> let the partitioner choose
+    donate_argnums: Tuple[int, ...]
+    cfg: ModelConfig
+    static_meta: dict
+
+
+def _batch_struct(cfg: ModelConfig, spec: ShapeSpec):
+    B, S = spec.global_batch, spec.seq_len
+    if cfg.modality == "vlm_stub" and spec.kind != "decode":
+        return {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                               jnp.bfloat16),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+
+def build_cell(arch: str, shape_name: str, mesh,
+               remat_policy: str = "nothing",
+               cache_dtype=jnp.bfloat16) -> Cell:
+    cfg = get_config(arch)
+    spec = SHAPES[shape_name]
+    meta = {"seq_len": spec.seq_len, "global_batch": spec.global_batch,
+            "cache_dtype": str(jnp.dtype(cache_dtype))}
+
+    if spec.kind == "train":
+        opt = AdamW()
+        mb = MICROBATCHES.get(arch, 1)
+        meta["microbatches"] = mb
+        step = lm.make_train_step(cfg, opt, compute_dtype=jnp.bfloat16,
+                                  remat_policy=remat_policy,
+                                  microbatches=mb)
+        params_s = jax.eval_shape(
+            lambda: lm.init_params(cfg, jax.random.PRNGKey(0), jnp.float32))
+        opt_s = jax.eval_shape(opt.init, params_s)
+        state_s = {"params": params_s, "opt": opt_s,
+                   "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        batch_s = _batch_struct(cfg, spec)
+        in_sh = (state_sharding(mesh, state_s), batch_sharding(mesh, batch_s))
+        return Cell(arch, shape_name, "train", step, (state_s, batch_s),
+                    in_sh, None, (0,), cfg, meta)
+
+    params_s = jax.eval_shape(
+        lambda: lm.init_params(cfg, jax.random.PRNGKey(0), jnp.bfloat16))
+    # serving: model-parallel only (no FSDP) — see rules._param_spec
+    p_sh = param_sharding(mesh, params_s, fsdp=False)
+
+    if spec.kind == "prefill":
+        from ..models import transformer
+
+        def prefill_fn(params, batch):
+            return transformer.prefill(
+                cfg, params, tokens=batch.get("tokens"),
+                embeds=batch.get("embeds"), compute_dtype=jnp.bfloat16)
+
+        batch_s = _batch_struct(cfg, spec)
+        batch_s.pop("labels")
+        cache_s = jax.eval_shape(
+            lambda: lm.init_cache(cfg, spec.global_batch, spec.seq_len,
+                                  jnp.bfloat16))
+        out_sh = (NamedSharding(mesh, P()), cache_sharding(mesh, cache_s))
+        in_sh = (p_sh, batch_sharding(mesh, batch_s))
+        return Cell(arch, shape_name, "prefill", prefill_fn,
+                    (params_s, batch_s), in_sh, out_sh, (), cfg, meta)
+
+    # decode: one token against a seq_len cache
+    serve = lm.make_serve_step(cfg, compute_dtype=jnp.bfloat16)
+    B = spec.global_batch
+    cache_s = jax.eval_shape(
+        lambda: lm.init_cache(cfg, B, spec.seq_len, cache_dtype))
+    c_sh = cache_sharding(mesh, cache_s)
+    token_s = jax.ShapeDtypeStruct((B,), jnp.int32)
+    tok_sh = batch_sharding(mesh, token_s)
+    pos_s = jax.ShapeDtypeStruct((), jnp.int32)
+    in_sh = (p_sh, c_sh, tok_sh, NamedSharding(mesh, P()))
+    out_sh = (tok_sh, c_sh)
+    return Cell(arch, shape_name, "decode", serve,
+                (params_s, cache_s, token_s, pos_s), in_sh, out_sh, (1,),
+                cfg, meta)
+
+
+def lower_cell(cell: Cell):
+    jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                     out_shardings=cell.out_shardings,
+                     donate_argnums=cell.donate_argnums)
+    return jitted.lower(*cell.args)

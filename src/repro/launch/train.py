@@ -1,0 +1,127 @@
+"""Training driver.
+
+CPU-scale end-to-end runs (the examples) and production-mesh launches use
+the same entry point::
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b \
+        --steps 100 --batch 8 --seq 256 --reduced --ckpt-dir /tmp/ckpt
+
+``--reduced`` swaps in the smoke-scale config; omit it (and add
+``--mesh 16x16``) on real hardware.  Restart-ability: the data pipeline is
+a pure function of the step (replayable source), so
+``--resume`` + checkpoint gives exactly-once training semantics.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config
+from ..models import lm
+from ..runtime.checkpoint import CheckpointManager
+from ..runtime.data import SyntheticLMData
+from ..runtime.optimizer import AdamW
+from ..sharding import constraints
+from ..sharding.rules import batch_sharding, state_sharding
+
+
+def build_mesh(spec: str):
+    if not spec:
+        return None
+    from .mesh import make_production_mesh, make_smoke_mesh
+    if spec == "16x16":
+        return make_production_mesh()
+    if spec == "2x16x16":
+        return make_production_mesh(multi_pod=True)
+    dims = tuple(int(x) for x in spec.split("x"))
+    axes = ("data", "model")[:len(dims)] if len(dims) == 2 else ("data",)
+    return make_smoke_mesh(dims, axes)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--schedule-steps", type=int, default=0,
+                    help="LR schedule horizon (default: --steps); set it "
+                         "when a run will be resumed past --steps")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--mesh", default="")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = build_mesh(args.mesh)
+    if mesh is not None:
+        constraints.set_mesh(mesh)
+
+    horizon = args.schedule_steps or args.steps
+    opt = AdamW(lr=args.lr, warmup_steps=max(2, horizon // 20),
+                total_steps=horizon)
+    step_fn = lm.make_train_step(cfg, opt,
+                                 compute_dtype=jnp.float32 if args.reduced
+                                 else jnp.bfloat16,
+                                 microbatches=args.microbatches)
+
+    params = lm.init_params(cfg, jax.random.PRNGKey(args.seed),
+                            jnp.float32)
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if mesh is not None:
+        sh = state_sharding(mesh, jax.eval_shape(lambda: state))
+        state = jax.tree.map(jax.device_put, state, sh)
+
+    data = SyntheticLMData(
+        cfg.vocab_size, args.batch, args.seq, seed=args.seed,
+        embed_dim=cfg.d_model if cfg.modality == "vlm_stub" else None)
+
+    ckpt = CheckpointManager(args.ckpt_dir, async_save=True) \
+        if args.ckpt_dir else None
+    start = 0
+    if ckpt is not None and args.resume and ckpt.latest_step() is not None:
+        state = ckpt.restore(state)
+        start = int(state["step"])
+        print(f"resumed from step {start}")
+
+    jitted = jax.jit(step_fn, donate_argnums=(0,))
+    losses = []
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in
+                 data.batch_at(step).items()}
+        state, metrics = jitted(state, batch)
+        if (step + 1) % args.log_every == 0 or step == args.steps - 1:
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            dt = time.time() - t0
+            tok_s = args.batch * args.seq * args.log_every / max(dt, 1e-9)
+            print(f"step {step + 1:5d}  loss {loss:8.4f}  "
+                  f"grad_norm {float(metrics['grad_norm']):8.3f}  "
+                  f"{tok_s:9.0f} tok/s", flush=True)
+            t0 = time.time()
+        if ckpt is not None and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(state, step + 1)
+    if ckpt is not None:
+        ckpt.save(state, args.steps)
+        ckpt.wait()
+    constraints.set_mesh(None)
+    return losses
+
+
+if __name__ == "__main__":
+    main()

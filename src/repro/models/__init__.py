@@ -1,0 +1,7 @@
+"""Model zoo: GQA transformers, MoE, RWKV-6, Mamba, hybrids — pure JAX,
+sharding-annotated, scan-over-layers."""
+
+from .config import ModelConfig
+from . import lm
+
+__all__ = ["ModelConfig", "lm"]

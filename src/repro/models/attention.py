@@ -1,0 +1,272 @@
+"""Grouped-query attention: full / sliding-window, chunked online-softmax
+for long sequences, and single-token decode against a KV cache.
+
+The chunked path is the pure-jnp counterpart of the Pallas flash kernels in
+``repro.kernels``: a ``lax.scan`` over KV chunks carrying the online-softmax
+running (max, denom, out) — memory O(S·chunk) instead of O(S²), which is
+what lets the 32k-prefill shapes fit per-device HBM in the dry-run.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.constraints import (constrain, constrain_heads,
+                                    constrain_scores)
+from .layers import apply_rope, normal_init
+
+NEG_INF = -1e30
+# use the chunked (online-softmax) path for S > threshold (measured: at
+# S=4096 the chunked path's saved online-softmax carries cost MORE than
+# the dense path's rematerialized score tensors)
+CHUNK_THRESHOLD = 4096
+KV_CHUNK = 1024
+
+BATCH = ("pod", "data")
+
+
+def _expand_kv(k, G: int):
+    """Repeat kv heads to the full query-head count.
+
+    GQA saves memory in the *cache*, not in compute; expanding for the
+    matmul keeps a single head dim (H = n_heads), which shards cleanly on
+    the ``model`` axis — sharding the split (kv_head, group) dims made
+    GSPMD replicate the score tensors (measured 51 GiB/device)."""
+    if G == 1:
+        return k
+    return jnp.repeat(k, G, axis=2)
+
+
+def init_attention(key, cfg, dtype):
+    D, dh = cfg.d_model, cfg.head_dim_
+    H, Hk = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    s = D ** -0.5
+    p = {"wq": normal_init(ks[0], (D, H * dh), s, dtype),
+         "wk": normal_init(ks[1], (D, Hk * dh), s, dtype),
+         "wv": normal_init(ks[2], (D, Hk * dh), s, dtype),
+         "wo": normal_init(ks[3], (H * dh, D), (H * dh) ** -0.5, dtype)}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * dh,), dtype)
+        p["bk"] = jnp.zeros((Hk * dh,), dtype)
+        p["bv"] = jnp.zeros((Hk * dh,), dtype)
+    return p
+
+
+def _project_qkv(params, x, cfg, compute_dtype):
+    B, S, D = x.shape
+    dh, H, Hk = cfg.head_dim_, cfg.n_heads, cfg.n_kv_heads
+    x = x.astype(compute_dtype)
+    q = x @ params["wq"].astype(compute_dtype)
+    k = x @ params["wk"].astype(compute_dtype)
+    v = x @ params["wv"].astype(compute_dtype)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(compute_dtype)
+        k = k + params["bk"].astype(compute_dtype)
+        v = v + params["bv"].astype(compute_dtype)
+    return (q.reshape(B, S, H, dh), k.reshape(B, S, Hk, dh),
+            v.reshape(B, S, Hk, dh))
+
+
+def _sdpa_decode(q, k, v, q_pos, k_pos, cfg):
+    """Single-token GQA attention against a sequence-sharded cache.
+
+    No kv expansion and no head sharding: the only sharded dim is the
+    cache sequence, so the softmax reductions and the PV contraction
+    partial-reduce over it with small psums (B,H,dh)-sized — the
+    sequence-parallel flash-decode schedule."""
+    B, Sq, H, dh = q.shape
+    Hk = k.shape[2]
+    G = H // Hk
+    qg = q.reshape(B, Hk, G, dh)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (dh ** -0.5)
+    mask = (k_pos <= q_pos[0])
+    if cfg.attention == "swa":
+        mask &= (q_pos[0] - k_pos) < cfg.swa_window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs.astype(v.dtype), v)
+    return out.reshape(B, 1, H, dh)
+
+
+def _sdpa_full(q, k, v, q_pos, k_pos, cfg):
+    """Dense causal (+ SWA) attention. q: (B,Sq,H,dh), k/v: (B,Sk,Hk,dh)."""
+    B, Sq, H, dh = q.shape
+    G = H // k.shape[2]
+    k = constrain_heads(_expand_kv(k, G))
+    v = constrain_heads(_expand_kv(v, G))
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = constrain_scores(scores * (dh ** -0.5))
+    mask = k_pos[None, :] <= q_pos[:, None]                    # causal
+    if cfg.attention == "swa":
+        mask &= (q_pos[:, None] - k_pos[None, :]) < cfg.swa_window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out
+
+
+def _sdpa_chunked(q, k, v, q_pos, k_pos, cfg, chunk=KV_CHUNK):
+    """Online-softmax over KV chunks; memory O(Sq * chunk) per head."""
+    B, Sq, H, dh = q.shape
+    G = H // k.shape[2]
+    Sk = k.shape[1]
+    n_chunks = -(-Sk // chunk)
+    pad = n_chunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=2**30)
+    Hk = k.shape[2]
+    kc = k.reshape(B, n_chunks, chunk, Hk, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, Hk, dh).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(n_chunks, chunk)
+    q = constrain_heads(q * (dh ** -0.5))
+
+    def step(carry, inputs):
+        m, l, o = carry          # (B,H,Sq), (B,H,Sq), (B,H,Sq,dh)
+        k_i, v_i, p_i = inputs   # (B,chunk,Hk,dh), ..., (chunk,)
+        k_i = constrain_heads(_expand_kv(k_i, G))
+        v_i = constrain_heads(_expand_kv(v_i, G))
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k_i,
+                       preferred_element_type=jnp.float32)
+        mask = p_i[None, :] <= q_pos[:, None]
+        if cfg.attention == "swa":
+            mask &= (q_pos[:, None] - p_i[None, :]) < cfg.swa_window
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_i = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, m_i)
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        o_new = (o * alpha[..., None]
+                 + jnp.einsum("bhqk,bkhd->bhqd", p.astype(v_i.dtype), v_i)
+                 .astype(jnp.float32))
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    o0 = jnp.zeros((B, H, Sq, dh), jnp.float32)
+    (m, l, o), _ = jax.lax.scan(step, (m0, l0, o0), (kc, vc, pc))
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(0, 2, 1, 3)                  # (B, Sq, H, dh)
+    return out.astype(q.dtype)
+
+
+def attention(params, x, cfg, *, positions, compute_dtype,
+              cache: Optional[dict] = None, pos=None,
+              chunked: Optional[bool] = None,
+              return_kv: bool = False, kv_pad_to: int = 0
+              ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Full-sequence (train/prefill) or single-token decode attention.
+
+    Train/prefill: ``positions`` (S,) int32; returns (y, None) — or, with
+    ``return_kv``, (y, cache) where cache is laid out exactly as
+    :func:`init_cache` expects (SWA: rolling slots; optionally padded to
+    ``kv_pad_to``) so decode can continue from a prefill.
+    Decode: ``cache`` = {"k","v"} of (B, S_max, Hk, dh), ``pos`` scalar =
+    current length; x is (B, 1, D); returns (y, new_cache).
+    """
+    B, S, D = x.shape
+    q, k, v = _project_qkv(params, x, cfg, compute_dtype)
+    q = constrain_heads(q)
+    if cache is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        use_chunked = (S > CHUNK_THRESHOLD) if chunked is None else chunked
+        sdpa = _sdpa_chunked if use_chunked else _sdpa_full
+        out = sdpa(q, k, v, positions, positions, cfg)
+        y = out.reshape(B, S, -1) @ params["wo"].astype(compute_dtype)
+        if not return_kv:
+            return y, None
+        kc, vc = k, v
+        if cfg.attention == "swa" and S >= cfg.swa_window:
+            W = cfg.swa_window
+            r = S % W
+            kc = jnp.roll(kc[:, -W:], r, axis=1)
+            vc = jnp.roll(vc[:, -W:], r, axis=1)
+        if kv_pad_to and kv_pad_to > kc.shape[1]:
+            padding = ((0, 0), (0, kv_pad_to - kc.shape[1]), (0, 0), (0, 0))
+            kc = jnp.pad(kc, padding)
+            vc = jnp.pad(vc, padding)
+        return y, {"k": kc, "v": vc}
+    # -- decode ---------------------------------------------------------------
+    q = apply_rope(q, jnp.full((1,), pos, jnp.int32), cfg.rope_theta)
+    k = apply_rope(k, jnp.full((1,), pos, jnp.int32), cfg.rope_theta)
+    S_max = cache["k"].shape[1]
+    quantized = cache["k"].dtype == jnp.int8
+    if cfg.attention == "swa" and S_max <= cfg.swa_window:
+        # rolling cache: slot = pos % window
+        slot = jnp.mod(pos, S_max)
+    else:
+        slot = pos
+    if quantized:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice(cache["k"], kq,
+                                              (0, slot, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], vq,
+                                              (0, slot, 0, 0)),
+            "k_scale": jax.lax.dynamic_update_slice(
+                cache["k_scale"], ks, (0, slot, 0)),
+            "v_scale": jax.lax.dynamic_update_slice(
+                cache["v_scale"], vs, (0, slot, 0)),
+        }
+        new_k = _dequantize_kv(new_cache["k"], new_cache["k_scale"],
+                               compute_dtype)
+        new_v = _dequantize_kv(new_cache["v"], new_cache["v_scale"],
+                               compute_dtype)
+    else:
+        new_k = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        new_v = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        new_cache = {"k": new_k, "v": new_v}
+    if cfg.attention == "swa" and S_max <= cfg.swa_window:
+        idx = jnp.arange(S_max)
+        k_pos = jnp.where(idx <= slot, pos - slot + idx,
+                          pos - slot - S_max + idx)
+        k_pos = jnp.where(k_pos < 0, 2**30, k_pos)
+    else:
+        k_pos = jnp.arange(S_max)
+    q_pos = jnp.full((1,), pos, jnp.int32)
+    out = _sdpa_decode(q, new_k.astype(compute_dtype),
+                       new_v.astype(compute_dtype), q_pos, k_pos, cfg)
+    y = out.reshape(B, 1, -1) @ params["wo"].astype(compute_dtype)
+    return y, new_cache
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype):
+    """KV cache. ``dtype=jnp.int8`` enables quantized storage with one
+    fp16 scale per (position, kv head) — decode is memory-roofline-bound
+    on reading the cache, so int8 halves the dominant term (§Perf)."""
+    dh, Hk = cfg.head_dim_, cfg.n_kv_heads
+    if cfg.attention == "swa":
+        max_seq = min(max_seq, cfg.swa_window)
+    cache = {"k": jnp.zeros((batch, max_seq, Hk, dh), dtype),
+             "v": jnp.zeros((batch, max_seq, Hk, dh), dtype)}
+    if dtype == jnp.int8:
+        cache["k_scale"] = jnp.zeros((batch, max_seq, Hk), jnp.float16)
+        cache["v_scale"] = jnp.zeros((batch, max_seq, Hk), jnp.float16)
+    return cache
+
+
+def _quantize_kv(x):
+    """(B, S, Hk, dh) -> int8 values + per-(pos, head) fp16 scales."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1),
+                        1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float16)
+
+
+def _dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32)
+            * scale.astype(jnp.float32)[..., None]).astype(dtype)

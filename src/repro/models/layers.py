@@ -1,0 +1,97 @@
+"""Shared layers: norms, rotary embeddings, initializers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def normal_init(key, shape, scale: float, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_norm(cfg, dtype):
+    if cfg.norm == "nonparametric_ln":
+        return {}
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((cfg.d_model,), dtype),
+                "bias": jnp.zeros((cfg.d_model,), dtype)}
+    return {"scale": jnp.ones((cfg.d_model,), dtype)}
+
+
+def apply_norm(params, x, cfg):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        x = x * jax.lax.rsqrt(jnp.mean(x * x, -1, keepdims=True)
+                              + cfg.norm_eps)
+        return (x * params["scale"].astype(jnp.float32)).astype(dt)
+    mean = jnp.mean(x, -1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), -1, keepdims=True)
+    x = (x - mean) * jax.lax.rsqrt(var + cfg.norm_eps)
+    if cfg.norm == "nonparametric_ln":  # OLMo: no learned affine
+        return x.astype(dt)
+    return (x * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, n_heads, head_dim); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., S, 1, dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def init_mlp(key, cfg, dtype, d_ff=None):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = D ** -0.5, F ** -0.5
+    return {"w_gate": normal_init(k1, (D, F), s_in, dtype),
+            "w_up": normal_init(k2, (D, F), s_in, dtype),
+            "w_down": normal_init(k3, (F, D), s_out, dtype)}
+
+
+def mlp(params, x, compute_dtype):
+    """SwiGLU feed-forward."""
+    x = x.astype(compute_dtype)
+    h = (jax.nn.silu(x @ params["w_gate"].astype(compute_dtype))
+         * (x @ params["w_up"].astype(compute_dtype)))
+    return h @ params["w_down"].astype(compute_dtype)
+
+
+def chunked_time_scan(step, init, xs, chunk: int = 256):
+    """``lax.scan`` over time with per-chunk rematerialization.
+
+    A plain scan saves its carry at every step for the backward pass —
+    for recurrent mixers that is O(T) state (34 GiB/device for Jamba's
+    Mamba layers at S=4096).  Scanning over chunks whose bodies are
+    ``jax.checkpoint``-ed saves the carry only at chunk boundaries and
+    recomputes inside: O(T/chunk + chunk) instead of O(T).
+    ``xs`` leaves are time-major (T, ...)."""
+    T = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    c = min(chunk, T)
+    while T % c:
+        c //= 2
+    n = T // c
+    xs_c = jax.tree.map(lambda x: x.reshape(n, c, *x.shape[1:]), xs)
+
+    def outer(carry, x_chunk):
+        return jax.lax.scan(step, carry, x_chunk)
+
+    outer = jax.checkpoint(
+        outer, policy=jax.checkpoint_policies.nothing_saveable,
+        prevent_cse=False)
+    carry, ys = jax.lax.scan(outer, init, xs_c)
+    ys = jax.tree.map(lambda y: y.reshape(T, *y.shape[2:]), ys)
+    return carry, ys

@@ -1,0 +1,151 @@
+"""LM task heads: loss, train/serve step builders."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer
+
+MOE_AUX_COEF = 0.01
+IGNORE_INDEX = -100
+
+
+def init_params(cfg, key, dtype=jnp.float32):
+    return transformer.init_params(cfg, key, dtype)
+
+
+def init_cache(cfg, batch, max_seq, dtype=jnp.bfloat16):
+    return transformer.init_cache(cfg, batch, max_seq, dtype)
+
+
+def cross_entropy(logits, labels):
+    """logits (B,S,V) fp32; labels (B,S) int32 with IGNORE_INDEX masking.
+
+    Written so the vocab dim stays sharded under pjit: the gold logit is
+    extracted with an iota-compare-select reduction (fuses into the reduce;
+    no gather) instead of ``take_along_axis`` (which forces an all-gather
+    of the full vocab dim — 13+ GiB/device at internlm2 scale)."""
+    mask = labels != IGNORE_INDEX
+    safe = jnp.where(mask, labels, 0)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1))
+    shifted = logits - m[..., None]
+    logz = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    gold = jnp.sum(jnp.where(iota == safe[..., None], shifted, 0.0), axis=-1)
+    nll = (logz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def loss_fn(cfg, params, batch, compute_dtype=jnp.bfloat16,
+            remat_policy="nothing"):
+    logits, aux = transformer.forward(
+        cfg, params, tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+        compute_dtype=compute_dtype, remat_policy=remat_policy)
+    loss = cross_entropy(logits, batch["labels"])
+    return loss + MOE_AUX_COEF * aux, {"ce_loss": loss, "moe_aux": aux}
+
+
+def make_train_step(cfg, optimizer, compute_dtype=jnp.bfloat16,
+                    remat_policy="nothing", grad_transform=None,
+                    microbatches: int = 1):
+    """Returns step(state, batch) -> (state, metrics).
+
+    ``state`` = {"params", "opt", "step"}.  ``grad_transform`` hooks in
+    distributed tricks (gradient compression, clipping) before the update.
+    ``microbatches`` > 1 enables gradient accumulation: the global batch is
+    split into M sequential microbatches scanned with full remat — peak
+    activation memory scales ~1/M at the cost of M smaller matmuls (the
+    standard fit-knob for the large train_4k cells)."""
+    from ..sharding.constraints import constrain, get_mesh, BATCH
+
+    def _constrain_grads(g):
+        """Pin gradient shardings to the parameter layout: the embedding
+        gradient otherwise materializes UNSHARDED (V, D) f32 per device
+        (the scatter-add cotangent of the lookup) — 1-2.3 GiB x several
+        copies at internlm/jamba scale."""
+        mesh = get_mesh()
+        if mesh is None:
+            return g
+        from ..sharding.rules import param_sharding
+        return jax.lax.with_sharding_constraint(g, param_sharding(mesh, g))
+
+    def grads_of(params, batch):
+        def lf(p):
+            return loss_fn(cfg, p, batch, compute_dtype, remat_policy)
+        (loss, metrics), g = jax.value_and_grad(lf, has_aux=True)(params)
+        return (loss, metrics), _constrain_grads(g)
+
+    def step(state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grads_of(state["params"], batch)
+        else:
+            M = microbatches
+
+            def split(x):
+                x = x.reshape(M, x.shape[0] // M, *x.shape[1:])
+                return constrain(x, None, BATCH, *([None] * (x.ndim - 2)))
+
+            mb = jax.tree.map(split, batch)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+
+            def micro(carry, b):
+                acc, loss_acc, aux_acc = carry
+                (loss, metrics), g = grads_of(state["params"], b)
+                acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), acc, g)
+                return (acc, loss_acc + loss,
+                        aux_acc + metrics["moe_aux"]), None
+
+            (grads, loss_sum, aux_sum), _ = jax.lax.scan(
+                micro, (g0, jnp.zeros((), jnp.float32),
+                        jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g: g / M, grads)
+            loss = loss_sum / M
+            metrics = {"ce_loss": loss, "moe_aux": aux_sum / M}
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        new_params, new_opt = optimizer.update(state["params"],
+                                               grads, state["opt"])
+        metrics = dict(metrics, loss=loss,
+                       grad_norm=global_norm(grads))
+        return {"params": new_params, "opt": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    return step
+
+
+def make_serve_step(cfg, compute_dtype=jnp.bfloat16, greedy=True):
+    """Returns decode(params, cache, token, pos) -> (next_token, cache)."""
+
+    def serve(params, cache, token, pos):
+        logits, new_cache = transformer.decode_step(
+            cfg, params, cache, token, pos, compute_dtype)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, new_cache
+
+    return serve
+
+
+def make_prefill(cfg, compute_dtype=jnp.bfloat16):
+    """Full-sequence forward for the prefill shapes (no cache write —
+    the benchmark measures the attention/ffn compute itself)."""
+
+    def prefill(params, tokens=None, embeds=None):
+        logits, _ = transformer.forward(cfg, params, tokens=tokens,
+                                        embeds=embeds,
+                                        compute_dtype=compute_dtype,
+                                        remat_policy="none")
+        return logits
+
+    return prefill
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))

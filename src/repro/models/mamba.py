@@ -1,0 +1,127 @@
+"""Mamba selective SSM mixer (Jamba's recurrent layer).
+
+Training/prefill runs the recurrence with ``lax.scan`` over time; decode is
+a single-step state update — the streaming-state form that makes SSM layers
+ideal Jet processors (O(1) state per step, DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import chunked_time_scan, normal_init
+
+
+def _dims(cfg):
+    di = cfg.expand * cfg.d_model
+    dt_rank = max(1, di // 16)
+    return di, dt_rank
+
+
+def init_mamba(key, cfg, dtype):
+    D = cfg.d_model
+    di, R = _dims(cfg)
+    N, Kc = cfg.d_state, cfg.d_conv
+    ks = jax.random.split(key, 6)
+    p = {
+        "in_proj": normal_init(ks[0], (D, 2 * di), D ** -0.5, dtype),
+        "conv_w": normal_init(ks[1], (di, Kc), Kc ** -0.5, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": normal_init(ks[2], (di, R + 2 * N), di ** -0.5, dtype),
+        "dt_proj": normal_init(ks[3], (R, di), R ** -0.5, dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),   # softplus(-4.6) ~ 0.01
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": normal_init(ks[4], (di, D), di ** -0.5, dtype),
+    }
+    return p
+
+
+def _ssm_inputs(params, x, cfg, compute_dtype, conv_state=None):
+    """Shared projections. x: (B, S, D) -> (xs, z, dt, Bs, Cs, new_conv)."""
+    B, S, D = x.shape
+    di, R = _dims(cfg)
+    N, Kc = cfg.d_state, cfg.d_conv
+    xz = x.astype(compute_dtype) @ params["in_proj"].astype(compute_dtype)
+    xs, z = jnp.split(xz, 2, axis=-1)                     # (B, S, di)
+    # causal depthwise conv of width Kc
+    if conv_state is None:
+        xp = jnp.pad(xs, ((0, 0), (Kc - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([conv_state.astype(compute_dtype), xs], axis=1)
+    w = params["conv_w"].astype(compute_dtype)
+    y = params["conv_b"].astype(compute_dtype)
+    conv = sum(xp[:, k:k + S, :] * w[:, k] for k in range(Kc)) + y
+    new_conv = xp[:, -(Kc - 1):, :] if Kc > 1 else None
+    xc = jax.nn.silu(conv)
+    proj = xc @ params["x_proj"].astype(compute_dtype)
+    dt, Bs, Cs = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt @ params["dt_proj"].astype(compute_dtype)
+                         + params["dt_bias"].astype(compute_dtype))
+    return xc, z, dt, Bs, Cs, new_conv
+
+
+def mamba(params, x, cfg, compute_dtype,
+          cache: Optional[dict] = None,
+          return_state: bool = False) -> Tuple[jnp.ndarray,
+                                               Optional[dict]]:
+    """cache = {"h": (B, di, N), "conv": (B, Kc-1, di)} for decode;
+    ``return_state`` (prefill) returns the final state in cache layout."""
+    B, S, D = x.shape
+    N = cfg.d_state
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))      # (di, N)
+    D_skip = params["D"].astype(jnp.float32)
+
+    if cache is None:
+        xc, z, dt, Bs, Cs, conv_tail = _ssm_inputs(params, x, cfg,
+                                                   compute_dtype)
+
+        def step(h, inp):
+            xc_t, dt_t, B_t, C_t = inp        # (B,di), (B,di), (B,N), (B,N)
+            dt32 = dt_t.astype(jnp.float32)
+            dA = jnp.exp(dt32[..., None] * A)                  # (B, di, N)
+            dBx = (dt32 * xc_t.astype(jnp.float32))[..., None] \
+                * B_t.astype(jnp.float32)[:, None, :]
+            h = h * dA + dBx
+            y = jnp.einsum("bdn,bn->bd", h, C_t.astype(jnp.float32))
+            return h, y
+
+        h0 = jnp.zeros((B, cfg.expand * D, N), jnp.float32)
+        xs_t = jnp.moveaxis(xc, 1, 0)
+        h_last, ys = chunked_time_scan(
+            step, h0, (xs_t, jnp.moveaxis(dt, 1, 0),
+                       jnp.moveaxis(Bs, 1, 0), jnp.moveaxis(Cs, 1, 0)))
+        y = jnp.moveaxis(ys, 0, 1)                              # (B, S, di)
+        y = y + xc.astype(jnp.float32) * D_skip
+        y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(compute_dtype)
+        out = y @ params["out_proj"].astype(compute_dtype)
+        if return_state:
+            return out, {"h": h_last, "conv": conv_tail}
+        return out, None
+
+    # -- decode: single step -------------------------------------------------------
+    xc, z, dt, Bs, Cs, new_conv = _ssm_inputs(
+        params, x, cfg, compute_dtype, conv_state=cache["conv"])
+    xc_t, dt_t = xc[:, 0], dt[:, 0]
+    B_t, C_t = Bs[:, 0], Cs[:, 0]
+    dt32 = dt_t.astype(jnp.float32)
+    dA = jnp.exp(dt32[..., None] * A)
+    dBx = (dt32 * xc_t.astype(jnp.float32))[..., None] \
+        * B_t.astype(jnp.float32)[:, None, :]
+    h = cache["h"].astype(jnp.float32) * dA + dBx
+    y = jnp.einsum("bdn,bn->bd", h, C_t.astype(jnp.float32))
+    y = y + xc_t.astype(jnp.float32) * D_skip
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32)))[:, None, :]
+    y = y.astype(compute_dtype) @ params["out_proj"].astype(compute_dtype)
+    return y, {"h": h.astype(cache["h"].dtype),
+               "conv": new_conv.astype(cache["conv"].dtype)}
+
+
+def init_mamba_cache(cfg, batch: int, dtype):
+    di, _ = _dims(cfg)
+    return {"h": jnp.zeros((batch, di, cfg.d_state), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.d_conv - 1, di), dtype)}

@@ -1,0 +1,194 @@
+"""Mixture-of-Experts FFN: top-k routing with per-expert capacity
+(GShard/Switch-style token dropping).
+
+Two execution paths:
+
+* **no mesh registered** (CPU smoke tests): dense gather/scatter dispatch
+  over the global token set.
+* **mesh registered** (the production path): a ``shard_map`` over the full
+  mesh.  Routing runs *locally per data shard* (no global cumsum — the
+  global-token formulation made GSPMD materialize (E, C_global, D) buffers
+  replicated per device, 92 GiB measured).  Experts are sharded on the
+  ``model`` axis: expert-parallel when ``E % model_size == 0`` (phi-3.5,
+  jamba), otherwise tensor-parallel inside every expert on the ffn dim
+  (mixtral's 8 experts on a 16-wide axis).  FSDP-sharded expert weights
+  are all-gathered over ``data`` just before use and the partial outputs
+  are ``psum``-ed over ``model`` — the exact two-stage
+  local-combine/global-combine plan Jet uses for keyed exchange
+  (DESIGN.md §2: tokens are events, experts are key partitions).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..sharding import constraints
+from .layers import normal_init
+
+
+def init_moe(key, cfg, dtype):
+    D = cfg.d_model
+    F = cfg.moe_d_ff or cfg.d_ff
+    E = cfg.n_experts
+    ks = jax.random.split(key, 4)
+    s_in, s_out = D ** -0.5, F ** -0.5
+    return {"router": normal_init(ks[0], (D, E), s_in, jnp.float32),
+            "w_gate": normal_init(ks[1], (E, D, F), s_in, dtype),
+            "w_up": normal_init(ks[2], (E, D, F), s_in, dtype),
+            "w_down": normal_init(ks[3], (E, F, D), s_out, dtype)}
+
+
+def capacity(n_tokens: int, cfg) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # pad to a multiple of 8 lanes
+
+
+def _route(xt, router, cfg, C: int):
+    """Local routing: returns (gates, flat_e, pos_c, keep, probs)."""
+    T = xt.shape[0]
+    E, K = cfg.n_experts, cfg.top_k
+    # bf16 matmul with fp32 accumulation: avoids materializing an fp32
+    # copy of every token (measured 268 MB/layer at jamba scale); the
+    # (T, E) logits stay fp32 for a stable softmax/top-k
+    logits = jnp.einsum("td,de->te", xt, router.astype(xt.dtype),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+    flat_e = expert_idx.reshape(-1)                       # (T*K,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot
+    pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], 1)[:, 0]
+    keep = pos < C
+    return gate_vals, expert_idx, flat_e, jnp.minimum(pos, C - 1), keep, probs
+
+
+def _aux_loss(probs, expert_idx, E):
+    f_e = jnp.mean(jnp.sum(jax.nn.one_hot(expert_idx, E), axis=1), axis=0)
+    p_e = jnp.mean(probs, axis=0)
+    return E * jnp.sum(f_e * p_e)
+
+
+def _expert_mlp(xe, w1, w3, w2, compute_dtype):
+    h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe,
+                                w1.astype(compute_dtype)))
+         * jnp.einsum("ecd,edf->ecf", xe, w3.astype(compute_dtype)))
+    return jnp.einsum("ecf,efd->ecd", h, w2.astype(compute_dtype))
+
+
+# ---------------------------------------------------------------------------
+# dense path (no mesh: smoke tests / single device)
+# ---------------------------------------------------------------------------
+
+
+def _moe_dense(params, x, cfg, compute_dtype):
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    C = capacity(T, cfg)
+    xt = x.reshape(T, D).astype(compute_dtype)
+    gates, expert_idx, flat_e, pos_c, keep, probs = _route(
+        xt, params["router"], cfg, C)
+    token_of = jnp.arange(T * K, dtype=jnp.int32) // K
+    contrib = xt[token_of] * keep[:, None].astype(compute_dtype)
+    xe = jnp.zeros((E, C, D), compute_dtype).at[flat_e, pos_c].add(contrib)
+    ye = _expert_mlp(xe, params["w_gate"], params["w_up"],
+                     params["w_down"], compute_dtype)
+    y_slots = ye[flat_e, pos_c]
+    w = (gates.reshape(-1) * keep).astype(compute_dtype)
+    y = (y_slots * w[:, None]).reshape(T, K, D).sum(1)
+    return y.reshape(B, S, D), _aux_loss(probs, expert_idx, E)
+
+
+# ---------------------------------------------------------------------------
+# shard_map path (production)
+# ---------------------------------------------------------------------------
+
+
+def _moe_sharded(params, x, cfg, compute_dtype, mesh):
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    msize = mesh.shape["model"]
+    ep = E % msize == 0                       # expert-parallel feasible?
+    # serving weights are bf16 and model-sharded only: no FSDP dim, no
+    # per-layer weight all-gathers (decode was paying 620 MB/token)
+    fsdp = params["w_gate"].dtype != jnp.bfloat16
+    batch = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    b_ok = B % _prod(mesh, batch) == 0 and B >= _prod(mesh, batch)
+    x_spec = P(batch if b_ok else None, None, None)
+    dsh = "data" if fsdp else None
+    if ep:
+        w1_spec = w3_spec = P("model", dsh, None)      # (E@m, D@fsdp, F)
+        w2_spec = P("model", dsh, None)                # (E@m, F@fsdp, D)
+    else:
+        w1_spec = w3_spec = P(None, dsh, "model")      # (E, D@fsdp, F@m)
+        w2_spec = P(None, "model", dsh)                # (E, F@m, D@fsdp)
+
+    def local(router, w1, w3, w2, xb):
+        Bl, Sl, _ = xb.shape
+        T = Bl * Sl
+        C = capacity(T, cfg)
+        xt = xb.reshape(T, D).astype(compute_dtype)
+        gates, expert_idx, flat_e, pos_c, keep, probs = _route(
+            xt, router, cfg, C)
+        token_of = jnp.arange(T * K, dtype=jnp.int32) // K
+        if ep:
+            E_loc = E // msize
+            first = jax.lax.axis_index("model") * E_loc
+            el = flat_e - first
+            mine = (el >= 0) & (el < E_loc) & keep
+            el_c = jnp.clip(el, 0, E_loc - 1)
+            contrib = xt[token_of] * mine[:, None].astype(compute_dtype)
+            xe = jnp.zeros((E_loc, C, D), compute_dtype).at[
+                el_c, pos_c].add(contrib)
+            if fsdp:  # materialize full D / F dims just before use
+                w1 = jax.lax.all_gather(w1, "data", axis=1, tiled=True)
+                w3 = jax.lax.all_gather(w3, "data", axis=1, tiled=True)
+                w2 = jax.lax.all_gather(w2, "data", axis=1, tiled=True)
+            ye = _expert_mlp(xe, w1, w3, w2, compute_dtype)
+            y_slots = ye[el_c, pos_c]
+            wgt = (gates.reshape(-1) * mine).astype(compute_dtype)
+        else:
+            contrib = xt[token_of] * keep[:, None].astype(compute_dtype)
+            xe = jnp.zeros((E, C, D), compute_dtype).at[
+                flat_e, pos_c].add(contrib)
+            if fsdp:
+                w1 = jax.lax.all_gather(w1, "data", axis=1, tiled=True)
+                w3 = jax.lax.all_gather(w3, "data", axis=1, tiled=True)
+                w2 = jax.lax.all_gather(w2, "data", axis=2, tiled=True)
+            ye = _expert_mlp(xe, w1, w3, w2, compute_dtype)  # partial on F
+            y_slots = ye[flat_e, pos_c]
+            wgt = (gates.reshape(-1) * keep).astype(compute_dtype)
+        y = (y_slots * wgt[:, None]).reshape(T, K, D).sum(1)
+        y = jax.lax.psum(y, "model")
+        aux = _aux_loss(probs, expert_idx, E)
+        if batch:
+            aux = jax.lax.pmean(aux, batch)
+        return y.reshape(Bl, Sl, D), aux
+
+    f = jax.shard_map(local, mesh=mesh,
+                      in_specs=(P(None, None), w1_spec, w3_spec, w2_spec,
+                                x_spec),
+                      out_specs=(x_spec, P()),
+                      check_vma=False)
+    return f(params["router"], params["w_gate"], params["w_up"],
+             params["w_down"], x)
+
+
+def _prod(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def moe_ffn(params, x, cfg, compute_dtype):
+    """x: (B, S, D) -> ((B, S, D), aux load-balancing loss)."""
+    mesh = constraints.get_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return _moe_dense(params, x, cfg, compute_dtype)
+    return _moe_sharded(params, x, cfg, compute_dtype, mesh)

@@ -1,0 +1,155 @@
+"""RWKV-6 "Finch" mixer: data-dependent decay linear attention + channel
+mix (Peng et al., arXiv:2404.05892).
+
+State per head is a (head_dim x head_dim) matrix updated multiplicatively
+by the data-dependent decay ``w`` — an O(1)-per-token streaming recurrence.
+Training scans over time; decode is a single state update.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import chunked_time_scan, normal_init
+
+LORA_DIM = 32
+DECAY_LORA = 64
+
+
+def _heads(cfg):
+    H = cfg.d_model // cfg.rwkv_head_size
+    return H, cfg.rwkv_head_size
+
+
+def init_rwkv6(key, cfg, dtype):
+    D = cfg.d_model
+    H, dh = _heads(cfg)
+    F = cfg.d_ff
+    ks = jax.random.split(key, 12)
+    s = D ** -0.5
+    return {
+        # time-mix ddlerp
+        "maa_x": jnp.zeros((D,), dtype),
+        "maa": jnp.zeros((5, D), dtype),                 # w,k,v,r,g
+        "tm_w1": normal_init(ks[0], (D, 5 * LORA_DIM), s, dtype),
+        "tm_w2": normal_init(ks[1], (5, LORA_DIM, D), LORA_DIM ** -0.5,
+                             dtype),
+        # data-dependent decay
+        "w0": jnp.full((D,), -6.0, dtype),
+        "td_w1": normal_init(ks[2], (D, DECAY_LORA), s, dtype),
+        "td_w2": normal_init(ks[3], (DECAY_LORA, D), DECAY_LORA ** -0.5,
+                             dtype),
+        "u": normal_init(ks[4], (H, dh), 0.1, dtype),    # bonus (time_faaaa)
+        "wr": normal_init(ks[5], (D, D), s, dtype),
+        "wk": normal_init(ks[6], (D, D), s, dtype),
+        "wv": normal_init(ks[7], (D, D), s, dtype),
+        "wg": normal_init(ks[8], (D, D), s, dtype),
+        "wo": normal_init(ks[9], (D, D), s, dtype),
+        "ln_x_scale": jnp.ones((D,), dtype),
+        "ln_x_bias": jnp.zeros((D,), dtype),
+        # channel-mix
+        "cm_maa_k": jnp.zeros((D,), dtype),
+        "cm_maa_r": jnp.zeros((D,), dtype),
+        "cm_wk": normal_init(ks[10], (D, F), s, dtype),
+        "cm_wv": normal_init(ks[11], (F, D), F ** -0.5, dtype),
+        "cm_wr": normal_init(jax.random.fold_in(key, 99), (D, D), s, dtype),
+    }
+
+
+def _shift(x, state):
+    """x_{t-1} with ``state`` as the t=-1 input. x: (B,S,D)."""
+    if x.shape[1] == 1:
+        return state[:, None, :]
+    prev = jnp.concatenate([state[:, None, :], x[:, :-1, :]], axis=1)
+    return prev
+
+
+def _group_norm(y, scale, bias, H, eps=1e-5):
+    """Per-head layernorm of (B, S, H*dh)."""
+    B, S, D = y.shape
+    yh = y.reshape(B, S, H, D // H).astype(jnp.float32)
+    mean = yh.mean(-1, keepdims=True)
+    var = ((yh - mean) ** 2).mean(-1, keepdims=True)
+    yh = (yh - mean) * jax.lax.rsqrt(var + eps)
+    return (yh.reshape(B, S, D) * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32))
+
+
+def time_mix(params, x, cfg, compute_dtype, state=None, shift_state=None):
+    """Returns (y, new_wkv_state, new_shift_state).
+
+    state: (B, H, dh, dh) wkv state; shift_state: (B, D) last input."""
+    B, S, D = x.shape
+    H, dh = _heads(cfg)
+    x = x.astype(compute_dtype)
+    if shift_state is None:
+        shift_state = jnp.zeros((B, D), compute_dtype)
+    xx = _shift(x, shift_state.astype(compute_dtype)) - x
+    xxx = x + xx * params["maa_x"].astype(compute_dtype)
+    lora = jnp.tanh(xxx @ params["tm_w1"].astype(compute_dtype))
+    lora = lora.reshape(B, S, 5, LORA_DIM)
+    mods = jnp.einsum("bsfl,fld->bsfd", lora,
+                      params["tm_w2"].astype(compute_dtype))    # (B,S,5,D)
+    maa = params["maa"].astype(compute_dtype)                    # (5, D)
+    xw, xk, xv, xr, xg = [x + xx * (maa[i] + mods[:, :, i, :])
+                          for i in range(5)]
+    w = (params["w0"].astype(jnp.float32)
+         + (jnp.tanh(xw @ params["td_w1"].astype(compute_dtype))
+            @ params["td_w2"].astype(compute_dtype)).astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(w))                                    # (B,S,D)
+    r = (xr @ params["wr"].astype(compute_dtype)).reshape(B, S, H, dh)
+    k = (xk @ params["wk"].astype(compute_dtype)).reshape(B, S, H, dh)
+    v = (xv @ params["wv"].astype(compute_dtype)).reshape(B, S, H, dh)
+    g = jax.nn.silu(xg @ params["wg"].astype(compute_dtype))
+    u = params["u"].astype(jnp.float32)                          # (H, dh)
+    wh = w.reshape(B, S, H, dh)
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp      # (B,H,dh) each
+        kv = jnp.einsum("bhi,bhj->bhij", k_t.astype(jnp.float32),
+                        v_t.astype(jnp.float32))
+        y_t = jnp.einsum("bhi,bhij->bhj", r_t.astype(jnp.float32),
+                         s + u[None, :, :, None] * kv)
+        s = w_t.astype(jnp.float32)[..., None] * s + kv
+        return s, y_t
+
+    if state is None:
+        state = jnp.zeros((B, H, dh, dh), jnp.float32)
+    if S == 1:
+        state, y = step(state, (r[:, 0], k[:, 0], v[:, 0], wh[:, 0]))
+        y = y[:, None]
+    else:
+        state, ys = chunked_time_scan(
+            step, state,
+            (jnp.moveaxis(r, 1, 0), jnp.moveaxis(k, 1, 0),
+             jnp.moveaxis(v, 1, 0), jnp.moveaxis(wh, 1, 0)))
+        y = jnp.moveaxis(ys, 0, 1)                               # (B,S,H,dh)
+    y = _group_norm(y.reshape(B, S, D), params["ln_x_scale"],
+                    params["ln_x_bias"], H)
+    y = (y.astype(compute_dtype) * g) @ params["wo"].astype(compute_dtype)
+    return y, state, x[:, -1, :]
+
+
+def channel_mix(params, x, cfg, compute_dtype, shift_state=None):
+    B, S, D = x.shape
+    x = x.astype(compute_dtype)
+    if shift_state is None:
+        shift_state = jnp.zeros((B, D), compute_dtype)
+    xx = _shift(x, shift_state.astype(compute_dtype)) - x
+    xk = x + xx * params["cm_maa_k"].astype(compute_dtype)
+    xr = x + xx * params["cm_maa_r"].astype(compute_dtype)
+    k = jnp.square(jax.nn.relu(xk @ params["cm_wk"].astype(compute_dtype)))
+    kv = k @ params["cm_wv"].astype(compute_dtype)
+    y = jax.nn.sigmoid(xr @ params["cm_wr"].astype(compute_dtype)) * kv
+    return y, x[:, -1, :]
+
+
+def init_rwkv_cache(cfg, batch: int, dtype):
+    H, dh = _heads(cfg)
+    D = cfg.d_model
+    return {"wkv": jnp.zeros((batch, H, dh, dh), jnp.float32),
+            "tm_shift": jnp.zeros((batch, D), dtype),
+            "cm_shift": jnp.zeros((batch, D), dtype)}

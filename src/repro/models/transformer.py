@@ -1,0 +1,275 @@
+"""Transformer assembly: scan-over-layer-groups, remat, KV/SSM caches.
+
+Layers are stacked into *groups* (``cfg.layer_kinds()``): homogeneous
+architectures have a 1-layer group scanned ``n_layers`` times; Jamba scans
+4 groups of [7x Mamba + 1x attention].  Group parameters are stacked on a
+leading axis and consumed by ``lax.scan`` — the compiled HLO contains each
+distinct block once, which keeps dry-run compile time and HLO size bounded
+for the 48-layer configs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import mamba as mamba_mod
+from . import moe as moe_mod
+from . import rwkv6 as rwkv_mod
+from ..sharding.constraints import (constrain_batch_seq, constrain_logits)
+from .layers import apply_norm, init_mlp, init_norm, mlp, normal_init
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, kind: str, ffn_kind: str, cfg, dtype) -> Dict[str, Any]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Dict[str, Any] = {"norm1": init_norm(cfg, dtype)}
+    if kind == "attn":
+        p["mixer"] = attn_mod.init_attention(k1, cfg, dtype)
+    elif kind == "mamba":
+        p["mixer"] = mamba_mod.init_mamba(k1, cfg, dtype)
+    elif kind == "rwkv6":
+        p["mixer"] = rwkv_mod.init_rwkv6(k1, cfg, dtype)
+        p["norm2"] = init_norm(cfg, dtype)
+        return p  # rwkv6 channel-mix plays the FFN role
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    p["norm2"] = init_norm(cfg, dtype)
+    p["ffn"] = (moe_mod.init_moe(k2, cfg, dtype) if ffn_kind == "moe"
+                else init_mlp(k2, cfg, dtype))
+    return p
+
+
+def init_group(key, cfg, dtype):
+    kinds, ffns = cfg.layer_kinds(), cfg.ffn_kinds()
+    keys = jax.random.split(key, len(kinds))
+    return {f"b{i}": init_block(keys[i], kinds[i], ffns[i], cfg, dtype)
+            for i in range(len(kinds))}
+
+
+def init_params(cfg, key, dtype=jnp.float32):
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    group_keys = jax.random.split(k_layers, cfg.n_groups)
+    stacked = jax.vmap(lambda k: init_group(k, cfg, dtype))(group_keys)
+    params = {
+        "embed": normal_init(k_emb, (cfg.vocab_size, cfg.d_model),
+                             cfg.d_model ** -0.5, dtype),
+        "groups": stacked,
+        "final_norm": init_norm(cfg, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal_init(
+            k_head, (cfg.d_model, cfg.vocab_size), cfg.d_model ** -0.5,
+            dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+
+def apply_block(bp, x, kind: str, ffn_kind: str, cfg, compute_dtype, *,
+                positions=None, cache=None, pos=None,
+                collect_cache: bool = False, kv_pad_to: int = 0):
+    """Returns (x, aux_loss, new_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(bp["norm1"], x, cfg)
+    if kind == "attn":
+        y, new_cache = attn_mod.attention(
+            bp["mixer"], h, cfg, positions=positions,
+            compute_dtype=compute_dtype, cache=cache, pos=pos,
+            return_kv=collect_cache, kv_pad_to=kv_pad_to)
+        x = x + y
+    elif kind == "mamba":
+        y, new_cache = mamba_mod.mamba(bp["mixer"], h, cfg, compute_dtype,
+                                       cache=cache,
+                                       return_state=collect_cache)
+        x = x + y
+    elif kind == "rwkv6":
+        st = cache or {}
+        y, wkv, tm_shift = rwkv_mod.time_mix(
+            bp["mixer"], h, cfg, compute_dtype,
+            state=st.get("wkv"), shift_state=st.get("tm_shift"))
+        x = x + y
+        h2 = apply_norm(bp["norm2"], x, cfg)
+        y2, cm_shift = rwkv_mod.channel_mix(
+            bp["mixer"], h2, cfg, compute_dtype,
+            shift_state=st.get("cm_shift"))
+        x = x + y2
+        new_cache = None
+        if cache is not None or collect_cache:
+            new_cache = {"wkv": wkv,
+                         "tm_shift": tm_shift,
+                         "cm_shift": cm_shift}
+            if cache is not None:
+                new_cache = {k: v.astype(cache[k].dtype)
+                             for k, v in new_cache.items()}
+        return x, aux, new_cache
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    h2 = apply_norm(bp["norm2"], x, cfg)
+    if ffn_kind == "moe":
+        y2, aux = moe_mod.moe_ffn(bp["ffn"], h2, cfg, compute_dtype)
+    else:
+        y2 = mlp(bp["ffn"], h2, compute_dtype)
+    return x + y2, aux, new_cache
+
+
+def _group_fn(cfg, compute_dtype, positions, x, gp, gcache=None, pos=None,
+              collect_cache=False, kv_pad_to=0, remat_blocks=False):
+    kinds, ffns = cfg.layer_kinds(), cfg.ffn_kinds()
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache = {} if (gcache is not None or collect_cache) else None
+    for i, (kind, ffn_kind) in enumerate(zip(kinds, ffns)):
+        bc = gcache.get(f"b{i}") if gcache is not None else None
+
+        def blk(bp, x, _kind=kind, _ffn=ffn_kind, _bc=bc):
+            y, aux, nc = apply_block(bp, x, _kind, _ffn, cfg,
+                                     compute_dtype, positions=positions,
+                                     cache=_bc, pos=pos,
+                                     collect_cache=collect_cache,
+                                     kv_pad_to=kv_pad_to)
+            return y, aux, nc
+
+        if remat_blocks and gcache is None and not collect_cache:
+            # hierarchical remat: during a group's backward only ONE
+            # block's recomputed forward is live (Jamba's 8-block group
+            # held 7 Mamba layers' intermediates at once: 64 GiB/device).
+            # prevent_cse=True: XLA CSE would merge the inner recompute
+            # back into the outer checkpoint's forward, undoing the win.
+            blk = jax.checkpoint(
+                blk, policy=jax.checkpoint_policies.nothing_saveable,
+                prevent_cse=True)
+        x, aux, nc = blk(gp[f"b{i}"], x)
+        aux_total = aux_total + aux
+        if new_cache is not None:
+            new_cache[f"b{i}"] = nc if nc is not None else {}
+    return x, aux_total, new_cache
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg, params, *, tokens=None, embeds=None, positions=None,
+            compute_dtype=jnp.bfloat16,
+            remat_policy: str = "nothing") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (logits[B,S,V], moe_aux_loss)."""
+    if embeds is None:
+        x = params["embed"].astype(compute_dtype)[tokens]
+    else:
+        x = embeds.astype(compute_dtype)
+    x = constrain_batch_seq(x)
+    B, S, D = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+
+    remat_on = remat_policy in ("nothing", "dots")
+
+    def body(x, gp):
+        y, aux, _ = _group_fn(cfg, compute_dtype, positions, x, gp,
+                              remat_blocks=remat_on and len(
+                                  cfg.layer_kinds()) > 1)
+        return constrain_batch_seq(y), aux
+
+    if remat_policy == "nothing":
+        policy = jax.checkpoint_policies.nothing_saveable
+    elif remat_policy == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        policy = None
+    if policy is not None:
+        body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+    x, auxs = jax.lax.scan(body, x, params["groups"])
+    x = apply_norm(params["final_norm"], x, cfg)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(compute_dtype)
+    logits = constrain_logits((x @ head).astype(jnp.float32))
+    return logits, jnp.sum(auxs)
+
+
+# ---------------------------------------------------------------------------
+# prefill (full sequence -> last-token logits + cache for decode)
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg, params, *, tokens=None, embeds=None,
+            compute_dtype=jnp.bfloat16, kv_pad_to: int = 0,
+            remat_policy: str = "nothing"):
+    """Serving prefill: run the full sequence, return (last_logits[B,V],
+    cache) with the cache laid out exactly as :func:`init_cache`/decode
+    expect (the realistic prefill contract: attention fills the KV cache,
+    SSM layers hand over their final recurrent state)."""
+    if embeds is None:
+        x = params["embed"].astype(compute_dtype)[tokens]
+    else:
+        x = embeds.astype(compute_dtype)
+    x = constrain_batch_seq(x)
+    B, S, D = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(x, gp):
+        y, _, gcache = _group_fn(cfg, compute_dtype, positions, x, gp,
+                                 collect_cache=True, kv_pad_to=kv_pad_to)
+        return constrain_batch_seq(y), gcache
+
+    # no remat: prefill is forward-only, nothing to rematerialize
+    x, caches = jax.lax.scan(body, x, params["groups"])
+    x = apply_norm(params["final_norm"], x[:, -1:, :], cfg)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(compute_dtype)
+    logits = (x[:, 0, :] @ head).astype(jnp.float32)
+    return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# decode (one token against the cache)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    kinds = cfg.layer_kinds()
+
+    def one_group(_):
+        gc = {}
+        for i, kind in enumerate(kinds):
+            if kind == "attn":
+                gc[f"b{i}"] = attn_mod.init_cache(cfg, batch, max_seq, dtype)
+            elif kind == "mamba":
+                gc[f"b{i}"] = mamba_mod.init_mamba_cache(cfg, batch, dtype)
+            elif kind == "rwkv6":
+                gc[f"b{i}"] = rwkv_mod.init_rwkv_cache(cfg, batch, dtype)
+        return gc
+
+    return jax.vmap(one_group)(jnp.arange(cfg.n_groups))
+
+
+def decode_step(cfg, params, cache, token, pos,
+                compute_dtype=jnp.bfloat16):
+    """token: (B,) int32; pos: scalar int32 (current length).
+    Returns (logits[B,V], new_cache)."""
+    x = params["embed"].astype(compute_dtype)[token][:, None, :]   # (B,1,D)
+    x = constrain_batch_seq(x)
+
+    def body(x, inp):
+        gp, gcache = inp
+        y, _, new_cache = _group_fn(cfg, compute_dtype, None, x, gp,
+                                    gcache=gcache, pos=pos)
+        return constrain_batch_seq(y), new_cache
+
+    x, new_cache = jax.lax.scan(body, x, (params["groups"], cache))
+    x = apply_norm(params["final_norm"], x, cfg)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(compute_dtype)
+    logits = (x[:, 0, :] @ head).astype(jnp.float32)
+    return logits, new_cache

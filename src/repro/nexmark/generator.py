@@ -1,0 +1,68 @@
+"""Deterministic NEXMark event generator (paper §7.1 configuration).
+
+* 10,000 distinct keys for persons and auctions, drawn pseudo-randomly,
+* configurable aggregate rate (events/second) — event time is the *ideal*
+  emission instant ``ts_ms = seq * 1000 / rate``,
+* the standard NEXMark mix: 1 person : 3 auctions : 46 bids per 50 events,
+* pure function of ``seq`` -> replayable by construction.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+from .model import Auction, Bid, CITIES, Person, US_STATES
+
+PERSON_PROPORTION = 1
+AUCTION_PROPORTION = 3
+BID_PROPORTION = 46
+TOTAL_PROPORTION = PERSON_PROPORTION + AUCTION_PROPORTION + BID_PROPORTION
+
+
+def _mix64(x: int) -> int:
+    """splitmix64 finalizer: cheap deterministic pseudo-randomness."""
+    x = (x + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+    return x ^ (x >> 31)
+
+
+class NexmarkGenerator:
+    """Callable ``gen(seq) -> (ts_ms, key, value)`` for the paced source."""
+
+    def __init__(self, rate: float, n_keys: int = 10_000,
+                 auction_filter_mod: int = 123):
+        self.rate = rate
+        self.n_keys = n_keys
+        self.auction_filter_mod = auction_filter_mod
+
+    def timestamp_ms(self, seq: int) -> int:
+        return int(seq * 1000 / self.rate)
+
+    def __call__(self, seq: int) -> Tuple[int, Any, Any]:
+        ts = self.timestamp_ms(seq)
+        r = _mix64(seq)
+        slot = seq % TOTAL_PROPORTION
+        if slot < PERSON_PROPORTION:
+            pid = r % self.n_keys
+            v = Person(pid, f"person-{pid}", f"p{pid}@example.com",
+                       CITIES[r % len(CITIES)],
+                       US_STATES[(r >> 8) % len(US_STATES)], ts)
+            return ts, pid, v
+        if slot < PERSON_PROPORTION + AUCTION_PROPORTION:
+            aid = r % self.n_keys
+            seller = (r >> 16) % self.n_keys
+            v = Auction(aid, seller, (r >> 24) % 10, 100 + r % 900,
+                        ts + 60_000, ts)
+            return ts, aid, v
+        aid = r % self.n_keys
+        bidder = (r >> 16) % self.n_keys
+        price = 100 + ((r >> 32) % 9900)
+        return ts, aid, Bid(aid, bidder, price, ts)
+
+
+def fill_journal(journal, generator: NexmarkGenerator, n_events: int) -> None:
+    """Pre-materialize events into a replayable journal (FT tests)."""
+    for seq in range(n_events):
+        ts, key, value = generator(seq)
+        journal.append(ts, key, value)

@@ -1,0 +1,6 @@
+"""Training/serving runtime: optimizer, data pipeline, checkpointing,
+distributed-optimization tricks."""
+
+from .optimizer import AdamW
+
+__all__ = ["AdamW"]

@@ -1,0 +1,67 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+Implemented directly over pytrees (no external deps).  Moments inherit the
+parameters' sharding via identical pytree structure, so FSDP-sharded
+parameters automatically give ZeRO-sharded optimizer state.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamW:
+    def __init__(self, lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 clip_norm: Optional[float] = 1.0,
+                 warmup_steps: int = 100, total_steps: int = 10_000):
+        self.lr = lr
+        self.b1, self.b2, self.eps = b1, b2, eps
+        self.weight_decay = weight_decay
+        self.clip_norm = clip_norm
+        self.warmup_steps = warmup_steps
+        self.total_steps = total_steps
+
+    def init(self, params) -> Dict[str, Any]:
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def schedule(self, step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, (step + 1) / self.warmup_steps)
+        prog = jnp.clip((step - self.warmup_steps)
+                        / max(1, self.total_steps - self.warmup_steps),
+                        0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return self.lr * warm * (0.1 + 0.9 * cos)
+
+    def update(self, params, grads, opt_state) -> Tuple[Any, Dict[str, Any]]:
+        count = opt_state["count"] + 1
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.clip_norm is not None:
+            gn = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                              for g in jax.tree_util.tree_leaves(g32)))
+            scale = jnp.minimum(1.0, self.clip_norm / (gn + 1e-9))
+            g32 = jax.tree.map(lambda g: g * scale, g32)
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                          opt_state["mu"], g32)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                          opt_state["nu"], g32)
+        c = count.astype(jnp.float32)
+        bc1 = 1 - b1 ** c
+        bc2 = 1 - b2 ** c
+        lr = self.schedule(count)
+
+        def upd(p, m, v):
+            step = m / bc1 / (jnp.sqrt(v / bc2) + self.eps)
+            step = step + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, {"mu": mu, "nu": nu, "count": count}

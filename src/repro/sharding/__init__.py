@@ -1,0 +1,5 @@
+from .rules import (batch_axes, batch_spec, cache_sharding, param_sharding,
+                    spec_to_sharding, state_sharding)
+
+__all__ = ["batch_axes", "batch_spec", "cache_sharding", "param_sharding",
+           "spec_to_sharding", "state_sharding"]

@@ -1,0 +1,107 @@
+"""Activation sharding constraints.
+
+GSPMD propagation alone can resolve a sharding conflict by replicating the
+*batch* (it did: un-constrained, the embedding gather made it all-gather
+activations and run the whole net with a replicated batch — 77 GiB/device).
+The launcher registers the mesh here; the model then pins activations at
+three anchor points (post-embed, scan carry, logits).  Without a registered
+mesh (CPU smoke tests) every constraint is a no-op.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+def _axis_ok(mesh: Mesh, dim: int, axes) -> bool:
+    if axes is None:
+        return True
+    axes = (axes,) if isinstance(axes, str) else axes
+    n = 1
+    for a in axes:
+        if a not in mesh.axis_names:
+            return False
+        n *= mesh.shape[a]
+    return dim % n == 0 and dim >= n
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint against the registered mesh; axes that are
+    absent from the mesh or do not divide the dim are dropped."""
+    if _MESH is None:
+        return x
+    axes = []
+    for dim, a in zip(x.shape, spec):
+        if isinstance(a, tuple):
+            a = tuple(s for s in a if s in _MESH.axis_names)
+            a = a if a and _axis_ok(_MESH, dim, a) else None
+            if a is not None and len(a) == 1:
+                a = a[0]
+        elif a is not None and not _axis_ok(_MESH, dim, a):
+            a = None
+        axes.append(a)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_MESH, P(*axes)))
+
+
+BATCH = ("pod", "data")
+
+
+def constrain_batch_seq(x):
+    """(B, S, D) residual-stream activations: batch over (pod, data) and
+    the *sequence* over ``model`` (Megatron-style sequence parallelism).
+
+    The scan-over-layers saves one carry per layer for the backward pass;
+    with the sequence replicated across the model axis those saves were
+    36 GiB/device for internlm2-20b — SP shards them 16-way.  Attention
+    and the FFN re-gather the sequence internally where they need it
+    (qkv projections / TP matmuls), which is exactly the Megatron-SP
+    all-gather/reduce-scatter pair."""
+    if x.ndim == 3 and x.shape[1] > 1:
+        return constrain(x, BATCH, "model", None)
+    rest = [None] * (x.ndim - 1)
+    return constrain(x, BATCH, *rest)
+
+
+def constrain_logits(x):
+    """(B, S, V) logits: batch over (pod, data), vocab over model."""
+    return constrain(x, BATCH, None, "model")
+
+
+def _model_size() -> int:
+    if _MESH is None or "model" not in _MESH.axis_names:
+        return 1
+    return _MESH.shape["model"]
+
+
+def constrain_heads(x):
+    """(B, S, H, dh) q/k/v: heads on ``model`` when they divide it, else
+    fall back to sequence-sharding (llava's 56 heads on a 16-wide axis)."""
+    if x.ndim != 4:
+        return x
+    if x.shape[2] % _model_size() == 0:
+        return constrain(x, BATCH, None, "model", None)
+    return constrain(x, BATCH, "model", None, None)
+
+
+def constrain_scores(x):
+    """(B, H, Sq, Sk) attention scores: heads on ``model`` with a
+    query-sequence fallback — without this, a non-dividing head count made
+    GSPMD replicate the scores (56 GiB/device for llava-next-34b)."""
+    if x.shape[1] % _model_size() == 0:
+        return constrain(x, BATCH, "model", None, None)
+    return constrain(x, BATCH, None, "model", None)

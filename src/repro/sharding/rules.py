@@ -1,0 +1,254 @@
+"""Sharding rules: FSDP + TP (+ EP) parameter layouts, batch/sequence
+activation layouts, and KV/SSM cache layouts.
+
+Strategy (baseline recorded in EXPERIMENTS.md §Roofline):
+
+* weights — tensor-parallel on ``model`` along heads / experts / ffn /
+  vocab, and FSDP on ``data`` along the other large dim.  Optimizer moments
+  mirror the parameters (ZeRO-3 for free).
+* activations — batch on ``(pod, data)``.
+* caches — batch on ``(pod, data)`` when it divides, otherwise the
+  *sequence* dim shards on ``data`` (sequence-parallel cache for
+  ``long_500k``'s global_batch=1); heads on ``model`` with a head-dim
+  fallback for small-kv-head archs (qwen2 has kv=2 < 16).
+
+Every axis assignment is divisibility-checked against the mesh; an axis
+that does not divide is dropped (replicated) rather than invalid.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fit(mesh: Mesh, dim: int, axes) -> Optional[Any]:
+    """axes if they divide dim (trying progressively smaller prefixes for
+    tuple axes), else None."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        return axes if dim % mesh.shape[axes] == 0 else None
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+    while axes:
+        if dim % _axis_size(mesh, axes) == 0:
+            return axes if len(axes) > 1 else axes[0]
+        axes = axes[:-1]
+    return None
+
+
+def _spec(mesh: Mesh, shape: Sequence[int], *dim_axes) -> P:
+    """Build a PartitionSpec, dropping non-dividing axes."""
+    assert len(dim_axes) == len(shape), (shape, dim_axes)
+    return P(*[_fit(mesh, d, a) for d, a in zip(shape, dim_axes)])
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            names.append(str(k.key))
+        elif isinstance(k, jax.tree_util.GetAttrKey):  # pragma: no cover
+            names.append(k.name)
+    return tuple(names)
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+_FSDP = "data"      # FSDP shards the non-TP large dim over data
+_TP = "model"
+
+
+def _param_spec(mesh: Mesh, names: Tuple[str, ...], shape,
+                fsdp: bool = True) -> P:
+    """Rule table keyed by the leaf parameter name.
+
+    ``fsdp=False`` (serving): weights shard on ``model`` only — bf16
+    inference weights fit HBM 16-way sharded, and FSDP gathers per decoded
+    token made rwkv6 decode collective-bound (measured ~640 MB/token of
+    f32 weight all-gathers)."""
+    leaf = names[-1]
+    in_groups = "groups" in names
+    core = shape[1:] if in_groups else shape     # drop stacked-layer dim
+
+    def wrap(spec: P) -> P:
+        spec = P(None, *spec) if in_groups else spec
+        if not fsdp:
+            spec = P(*[None if a == _FSDP else a for a in spec])
+        return spec
+
+    n = len(core)
+    # embed/lm_head: vocab-sharded ONLY.  Sharding their d_model dim over
+    # "data" makes the embedding gather / tied-head matmul conflict with
+    # the batch's data axis, and GSPMD resolves that by replicating the
+    # batch through the entire network (measured: 77 GiB/device).
+    if leaf == "embed":
+        return wrap(_spec(mesh, core, _TP, None))
+    if leaf == "lm_head":
+        return wrap(_spec(mesh, core, None, _TP))
+    if leaf in ("wq", "wk", "wv", "wg", "wr", "in_proj", "cm_wk", "cm_wr",
+                "tm_w1", "td_w1"):
+        if n == 2:
+            return wrap(_spec(mesh, core, _FSDP, _TP))
+    if leaf in ("wo", "out_proj", "cm_wv", "dt_proj", "td_w2"):
+        if n == 2:
+            return wrap(_spec(mesh, core, _TP, _FSDP))
+    if leaf in ("w_gate", "w_up"):
+        if n == 2:   # dense MLP (D, F)
+            return wrap(_spec(mesh, core, _FSDP, _TP))
+        # MoE (E, D, F): expert-parallel when E divides the model axis,
+        # otherwise TP inside each expert
+        if core[0] % mesh.shape[_TP] == 0:
+            return wrap(_spec(mesh, core, _TP, _FSDP, None))
+        return wrap(_spec(mesh, core, None, _FSDP, _TP))
+    if leaf == "w_down":
+        if n == 2:   # dense MLP (F, D)
+            return wrap(_spec(mesh, core, _TP, _FSDP))
+        # MoE (E, F, D): align with the shard_map specs in models/moe.py
+        if core[0] % mesh.shape[_TP] == 0:
+            return wrap(_spec(mesh, core, _TP, _FSDP, None))
+        return wrap(_spec(mesh, core, None, _TP, _FSDP))
+    if leaf == "router":
+        return wrap(P(*[None] * n))  # small; shard_map wants it replicated
+    if leaf in ("conv_w", "x_proj", "A_log"):
+        return wrap(_spec(mesh, core, _TP, None))
+    if leaf in ("conv_b", "dt_bias", "D"):
+        return wrap(_spec(mesh, core, _TP))
+    if leaf == "u":
+        return wrap(_spec(mesh, core, _TP, None))
+    # default: shard the largest dim over data if it is big and divides
+    if core and max(core) >= 4096:
+        big = core.index(max(core))
+        axes = [None] * n
+        axes[big] = _FSDP
+        return wrap(_spec(mesh, core, *axes))
+    return wrap(P(*[None] * n))
+
+
+def param_sharding(mesh: Mesh, params_shape, fsdp: bool = True) -> Any:
+    """NamedSharding pytree matching an (eval_shape'd) params pytree."""
+    def f(path, leaf):
+        spec = _param_spec(mesh, _path_names(path), leaf.shape, fsdp=fsdp)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(f, params_shape)
+
+
+def state_sharding(mesh: Mesh, state_shape) -> Any:
+    """Train state = {params, opt{mu,nu,count}, step}: moments mirror the
+    parameter shardings (ZeRO-3)."""
+    def f(path, leaf):
+        names = _path_names(path)
+        if names[-1] in ("count", "step") or leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        # strip the leading state key ("params" / "opt"+"mu"/"nu")
+        core = tuple(n for n in names
+                     if n not in ("params", "opt", "mu", "nu", "step"))
+        spec = _param_spec(mesh, core, leaf.shape)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(f, state_shape)
+
+
+# ---------------------------------------------------------------------------
+# activations / batches
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(mesh: Mesh, shape, seq_dim: Optional[int] = None) -> P:
+    """Shard dim 0 (batch) over (pod, data); if batch cannot shard and a
+    sequence dim is given, shard the sequence instead (SP)."""
+    ba = _fit(mesh, shape[0], batch_axes(mesh))
+    axes = [None] * len(shape)
+    if ba is not None and shape[0] >= _axis_size(mesh, batch_axes(mesh)):
+        axes[0] = ba
+    elif seq_dim is not None:
+        axes[seq_dim] = _fit(mesh, shape[seq_dim], "data")
+    return P(*axes)
+
+
+def batch_sharding(mesh: Mesh, tree) -> Any:
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, batch_spec(mesh, leaf.shape)), tree)
+
+
+# ---------------------------------------------------------------------------
+# decode caches
+# ---------------------------------------------------------------------------
+
+
+def _cache_spec(mesh: Mesh, names: Tuple[str, ...], shape) -> P:
+    """Cache leaves all carry a leading groups dim.
+
+    k/v: (G, B, S, Hk, dh);  h: (G, B, di, N);  conv: (G, B, K-1, di);
+    wkv: (G, B, H, dh, dh);  *_shift: (G, B, D)."""
+    leaf = names[-1]
+    ba = batch_axes(mesh)
+    G, B = shape[0], shape[1]
+    batch_ok = B % _axis_size(mesh, ba) == 0 and B >= _axis_size(mesh, ba)
+    b_axis = ba if batch_ok else None
+    if leaf in ("k", "v"):
+        # sequence-sharded over `model` (plus `data` when the batch can't
+        # shard): decode attends to the local context chunk and combines
+        # with small psums.  Sharding heads/head-dim instead forces a
+        # full-cache reshard when GQA kv heads expand (measured 2+ GiB of
+        # all-gather per decoded token).
+        S = shape[2]
+        seq_axes = _TP if batch_ok else ("data", "model")
+        return _spec(mesh, shape, None, b_axis, seq_axes, None, None)
+    if leaf in ("k_scale", "v_scale"):
+        # (G, B, S, Hk): follow the quantized cache's sequence sharding
+        seq_axes = _TP if batch_ok else ("data", "model")
+        return _spec(mesh, shape, None, b_axis, seq_axes, None)
+    if leaf == "h":
+        return _spec(mesh, shape, None, b_axis,
+                     _TP if batch_ok else ("data", "model"), None)
+    if leaf == "conv":
+        return _spec(mesh, shape, None, b_axis, None,
+                     _TP if batch_ok else ("data", "model"))
+    if leaf == "wkv":
+        if batch_ok:
+            return _spec(mesh, shape, None, b_axis, _TP, None, None)
+        return _spec(mesh, shape, None, None, _TP, "data", None)
+    if leaf in ("tm_shift", "cm_shift"):
+        return _spec(mesh, shape, None, b_axis,
+                     _TP if batch_ok else ("data", "model"))
+    # unknown cache leaf: batch only
+    axes = [None] * len(shape)
+    if batch_ok:
+        axes[1] = ba
+    return _spec(mesh, shape, *axes)
+
+
+def cache_sharding(mesh: Mesh, cache_shape) -> Any:
+    def f(path, leaf):
+        return NamedSharding(mesh,
+                             _cache_spec(mesh, _path_names(path), leaf.shape))
+    return jax.tree_util.tree_map_with_path(f, cache_shape)
+
+
+def spec_to_sharding(mesh: Mesh, tree_of_specs) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,9 @@
+"""Exactly-once delivery endpoints (paper §4.5): transactional and
+idempotent sinks, active-active deployment helper."""
+
+from .sinks import (ExternalCollector, IdempotentSink,
+                    TransactionalSink)
+from .active_active import ActiveActiveRunner
+
+__all__ = ["ExternalCollector", "IdempotentSink",
+           "TransactionalSink", "ActiveActiveRunner"]

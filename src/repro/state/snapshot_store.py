@@ -1,0 +1,77 @@
+"""Snapshot storage on top of the IMap service (paper §2.4, §4.4).
+
+Jet stores each job snapshot in an IMap whose partitioning matches the
+computation's key partitioning, so a processor's state snapshot lives on
+the same member as the processor (primary) plus its backups.  Snapshots are
+two-phase: entries accumulate under an *ongoing* id and become visible to
+recovery only after :meth:`commit` (all tasklets acked the barrier).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+from .imap import IMap, IMapService
+
+
+class SnapshotWriter:
+    """Tasklets write through this; bound to one (job, snapshot) epoch."""
+
+    def __init__(self, store: "SnapshotStore", job_id: str):
+        self.store = store
+        self.job_id = job_id
+
+    def put(self, snapshot_id: int, vertex: str, key, value, pid: int) -> None:
+        imap = self.store._map(self.job_id, snapshot_id)
+        imap.put_with_pid((vertex, key), value, pid)
+
+
+class SnapshotStore:
+    def __init__(self, service: IMapService):
+        self.service = service
+        # job -> latest committed snapshot id
+        self.committed: Dict[str, int] = {}
+        # job -> {snapshot_id: {"offsets": {...}}} (source replay positions)
+        self.meta: Dict[str, Dict[int, Dict[str, Any]]] = {}
+
+    def _map(self, job_id: str, snapshot_id: int) -> IMap:
+        return IMap(self.service, f"__jet.snapshot.{job_id}.{snapshot_id}")
+
+    def writer(self, job_id: str) -> SnapshotWriter:
+        return SnapshotWriter(self, job_id)
+
+    # -- lifecycle -------------------------------------------------------------
+    def commit(self, job_id: str, snapshot_id: int) -> None:
+        prev = self.committed.get(job_id)
+        self.committed[job_id] = snapshot_id
+        # retire the previous snapshot's storage (Jet keeps exactly one,
+        # alternating between two map names; dropping the old one is the
+        # equivalent here)
+        if prev is not None and prev != snapshot_id:
+            self._map(job_id, prev).destroy()
+
+    def latest_committed(self, job_id: str) -> Optional[int]:
+        return self.committed.get(job_id)
+
+    def set_meta(self, job_id: str, snapshot_id: int, key: str, value) -> None:
+        self.meta.setdefault(job_id, {}).setdefault(snapshot_id, {})[key] = value
+
+    def get_meta(self, job_id: str, snapshot_id: int, key: str, default=None):
+        return self.meta.get(job_id, {}).get(snapshot_id, {}).get(key, default)
+
+    # -- recovery ---------------------------------------------------------------
+    def entries_for_partition(self, job_id: str, snapshot_id: int,
+                              pid: int) -> List[Tuple[str, Any, Any]]:
+        """[(vertex, key, value)] for one partition of a committed snapshot."""
+        imap = self._map(job_id, snapshot_id)
+        return [(vertex, key, value)
+                for (vertex, key), value in imap.entries_for_partition(pid).items()]
+
+    def vertex_entries(self, job_id: str, snapshot_id: int,
+                       vertex: str) -> List[Tuple[Any, Any]]:
+        imap = self._map(job_id, snapshot_id)
+        return [(key, value) for (v, key), value in imap.items().items()
+                if v == vertex]
+
+    def size(self, job_id: str, snapshot_id: int) -> int:
+        return len(self._map(job_id, snapshot_id))

@@ -1,0 +1,330 @@
+"""StreamExecutor: the device-tier Jet runtime.
+
+One compiled ``step``: ingest an event batch -> (optional) keyed exchange
+across the ``data`` mesh axis -> stage-1 pane accumulation -> stage-2
+reduce-scatter combine -> window emission, plus a ``snapshot`` collective
+that ring-replicates the sharded state to the next chip (the IMDG backup
+replica, DESIGN.md §2).
+
+Key design points mirroring the paper:
+
+* whole DAG per chip — the step is ONE fused XLA program;
+* partitioning of state == partitioning of compute — key bucket ``k``
+  lives on data-shard ``k % n_shards``, and the stage-2 combine is a
+  ``psum_scatter`` over ``data`` that deposits exactly the buckets each
+  chip owns (two-stage aggregation as a single collective);
+* credit-based backpressure — the host ingestion loop sizes each step's
+  admission to ~3x the measured per-interval processing rate (the
+  adaptive receive window, §3.3);
+* snapshots are consistent cuts by construction (step boundary), stored
+  as a ring-shifted replica on the neighbouring chip + an optional host
+  copy in the IMap service.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .window import VectorWindowSpec, accumulate, emit, window_state_init
+
+ACK_INTERVAL_S = 0.1
+WINDOW_FILL_FACTOR = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamJobConfig:
+    window: VectorWindowSpec
+    batch_size: int = 4096          # events per step (global)
+    snapshot_every: int = 0         # steps between snapshots (0 = off)
+    #: keyed-exchange plan (SPMD only):
+    #:  - "reduce": stage-1 accumulates FULL-width panes locally, one
+    #:    psum_scatter combines+deposits (bytes ~ R*K/chip — wins when the
+    #:    key space is small);
+    #:  - "route": events all-to-all to their bucket owners first, panes
+    #:    stay owner-local (bytes ~ events/chip — wins when R*K >> batch,
+    #:    and is Jet's own exchange-operator plan).  Per-destination
+    #:    capacity = 2x fair share; overflow counts into
+    #:    ``dropped_conflict`` (backpressure's job to keep ~0).
+    exchange: str = "reduce"
+    route_capacity_factor: float = 2.0
+
+
+class StreamExecutor:
+    """Single-host executor (1 device) or SPMD over a mesh's data axis."""
+
+    def __init__(self, cfg: StreamJobConfig, mesh: Optional[Mesh] = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.n_shards = 1 if mesh is None else int(mesh.shape["data"])
+        spec = cfg.window
+        assert spec.n_key_buckets % self.n_shards == 0
+        self._step = jax.jit(self._build_step(), donate_argnums=(0,))
+        self._snapshot = jax.jit(self._build_snapshot(), donate_argnums=())
+        self._restore = jax.jit(self._build_restore())
+        # telemetry for the adaptive receive window
+        self._processed_since_ack = 0
+        self._last_ack = time.monotonic()
+        self._receive_window = cfg.batch_size * WINDOW_FILL_FACTOR
+
+    # ------------------------------------------------------------- build --
+    def _shard_state(self, state):
+        if self.mesh is None:
+            return state
+        specs = {"panes": P(None, "data"), "slot_frame": P(),
+                 "watermark": P(), "next_emit": P(),
+                 "dropped_late": P(), "dropped_conflict": P()}
+        return {k: jax.device_put(
+            v, NamedSharding(self.mesh, specs[k])) for k, v in state.items()}
+
+    def init_state(self):
+        return self._shard_state(window_state_init(self.cfg.window))
+
+    def _build_step(self):
+        spec = self.cfg.window
+        n_shards = self.n_shards
+        if self.mesh is None:
+            def step1(state, batch):
+                state = accumulate(spec, state, batch["ts"], batch["key"],
+                                   batch["value"], batch["valid"],
+                                   batch.get("wm"))
+                return emit(spec, state)
+            return step1
+
+        mesh = self.mesh
+        K_loc = spec.n_key_buckets // n_shards
+        if self.cfg.exchange == "route":
+            return self._build_step_route(mesh, K_loc)
+
+        def local_step(state, batch):
+            # stage 1: accumulate THIS shard's slice of the batch into
+            # full-width panes (local partial results — Jet stage 1)
+            st1 = {
+                "panes": jnp.zeros((spec.ring_len, spec.n_key_buckets),
+                                   state["panes"].dtype),
+                "slot_frame": state["slot_frame"],
+                "watermark": state["watermark"],
+                "next_emit": state["next_emit"],
+                "dropped_late": state["dropped_late"],
+                "dropped_conflict": state["dropped_conflict"],
+            }
+            st1 = accumulate(spec, st1, batch["ts"], batch["key"],
+                             batch["value"], batch["valid"],
+                             batch.get("wm"))
+            # watermark must coalesce across shards (min rule over what
+            # every producer has seen — here every shard sees a slice of
+            # the same paced source, so the min is the safe watermark)
+            wm = jax.lax.pmin(st1["watermark"], "data")
+            # stage 2: the keyed exchange + combine in ONE collective —
+            # psum_scatter deposits the summed buckets on their owners
+            partial = st1["panes"]                       # (R, K)
+            mine = jax.lax.psum_scatter(partial, "data", scatter_dimension=1,
+                                        tiled=True)      # (R, K/n)
+            st2 = {
+                "panes": state["panes"] + mine,
+                "slot_frame": st1["slot_frame"],
+                "watermark": wm,
+                "next_emit": state["next_emit"],
+                # counters are per-shard; aggregate so they stay replicated
+                "dropped_late": jax.lax.psum(
+                    st1["dropped_late"] - state["dropped_late"], "data")
+                + state["dropped_late"],
+                "dropped_conflict": jax.lax.psum(
+                    st1["dropped_conflict"] - state["dropped_conflict"],
+                    "data") + state["dropped_conflict"],
+            }
+            # slot_frame bookkeeping must be globally agreed
+            st2["slot_frame"] = jax.lax.pmax(st2["slot_frame"], "data")
+            loc_spec = dataclasses.replace(spec, n_key_buckets=K_loc)
+            new_state, out = emit(loc_spec, st2)
+            return new_state, out
+
+        in_specs = ({"panes": P(None, "data"), "slot_frame": P(),
+                     "watermark": P(), "next_emit": P(),
+                     "dropped_late": P(), "dropped_conflict": P()},
+                    {"ts": P("data"), "key": P("data"),
+                     "value": P("data"), "valid": P("data"), "wm": P()})
+        out_specs = (in_specs[0],
+                     {"results": P(None, "data"), "window_ends": P(),
+                      "valid": P()})
+
+        def step_spmd(state, batch):
+            return jax.shard_map(local_step, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs,
+                                 check_vma=False)(state, batch)
+        return step_spmd
+
+    def _build_step_route(self, mesh, K_loc: int):
+        """Route-then-accumulate exchange: events all-to-all to their
+        bucket owners; panes are owner-local (R, K/n) — the exchange moves
+        O(events) bytes instead of O(R*K) (DESIGN.md: Jet's exchange
+        operator; the counting-sort positions are kernels/route.py's job
+        on real TPU)."""
+        spec = self.cfg.window
+        n = self.n_shards
+        B_loc = self.cfg.batch_size // n
+        C = max(8, int(B_loc / n * self.cfg.route_capacity_factor))
+
+        def local_step(state, batch):
+            ts, key = batch["ts"], batch["key"]
+            value, valid = batch["value"], batch["valid"]
+            dest = jnp.where(valid, key // K_loc, n)           # (B_loc,)
+            onehot = jax.nn.one_hot(dest, n, dtype=jnp.int32)
+            pos = (jnp.cumsum(onehot, axis=0) - onehot)
+            pos = jnp.take_along_axis(
+                pos, jnp.minimum(dest, n - 1)[:, None], 1)[:, 0]
+            keep = valid & (pos < C)
+            n_overflow = jnp.sum(valid & ~keep, dtype=jnp.int32)
+            d = jnp.where(keep, dest, n - 1)                   # clamp
+            p = jnp.minimum(pos, C - 1)
+
+            def scatter(x, fill):
+                buf = jnp.full((n, C) + x.shape[1:], fill, x.dtype)
+                return buf.at[d, p].set(jnp.where(
+                    keep.reshape(keep.shape + (1,) * (x.ndim - 1)), x, fill))
+
+            s_ts = scatter(ts, 0)
+            s_key = scatter(key, 0)
+            s_val = scatter(value, 0.0)
+            s_ok = scatter(keep, False)
+            r_ts = jax.lax.all_to_all(s_ts, "data", 0, 0, tiled=True)
+            r_key = jax.lax.all_to_all(s_key, "data", 0, 0, tiled=True)
+            r_val = jax.lax.all_to_all(s_val, "data", 0, 0, tiled=True)
+            r_ok = jax.lax.all_to_all(s_ok, "data", 0, 0, tiled=True)
+            first = jax.lax.axis_index("data") * K_loc
+            loc_spec = dataclasses.replace(spec, n_key_buckets=K_loc)
+            st = dict(state)
+            st = accumulate(loc_spec, st, r_ts.reshape(-1),
+                            (r_key.reshape(-1) - first), r_val.reshape(-1),
+                            r_ok.reshape(-1), batch.get("wm"))
+            # watermark frontier comes from the PRE-ROUTE local slice
+            # (sources are ts-ordered per shard); coalesce with pmin
+            frontier = jnp.max(jnp.where(valid, ts, -1)).astype(jnp.int32)
+            wm = jax.lax.pmin(
+                jnp.maximum(frontier, state["watermark"]), "data")
+            if batch.get("wm") is not None:
+                wm = jnp.maximum(wm, jnp.asarray(batch["wm"], jnp.int32))
+            st["watermark"] = wm
+            st["slot_frame"] = jax.lax.pmax(st["slot_frame"], "data")
+            # counters replicate via psum of per-shard deltas
+            ring_delta = st["dropped_conflict"] - state["dropped_conflict"]
+            st["dropped_conflict"] = state["dropped_conflict"] + \
+                jax.lax.psum(ring_delta + n_overflow, "data")
+            st["dropped_late"] = state["dropped_late"] + jax.lax.psum(
+                st["dropped_late"] - state["dropped_late"], "data")
+            return emit(loc_spec, st)
+
+        in_specs = ({"panes": P(None, "data"), "slot_frame": P(),
+                     "watermark": P(), "next_emit": P(),
+                     "dropped_late": P(), "dropped_conflict": P()},
+                    {"ts": P("data"), "key": P("data"),
+                     "value": P("data"), "valid": P("data"), "wm": P()})
+        out_specs = (in_specs[0],
+                     {"results": P(None, "data"), "window_ends": P(),
+                      "valid": P()})
+
+        def step_spmd(state, batch):
+            return jax.shard_map(local_step, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs,
+                                 check_vma=False)(state, batch)
+        return step_spmd
+
+    # ------------------------------------------------------- snapshots --
+    def _build_snapshot(self):
+        """Ring-replicate the sharded panes to the next data shard — the
+        in-memory backup replica (no disk), exactly Jet's IMDG scheme."""
+        if self.mesh is None:
+            return lambda state: jax.tree.map(jnp.copy, state)
+        mesh = self.mesh
+        n = self.n_shards
+        perm = [(i, (i + 1) % n) for i in range(n)]
+
+        def snap(state):
+            def local(panes):
+                return jax.lax.ppermute(panes, "data", perm)
+            backup = jax.shard_map(local, mesh=mesh,
+                                   in_specs=P(None, "data"),
+                                   out_specs=P(None, "data"),
+                                   check_vma=False)(state["panes"])
+            return dict(state, panes=backup)
+        return snap
+
+    def _build_restore(self):
+        """Recover a lost shard's panes from its ring neighbour."""
+        if self.mesh is None:
+            return lambda backup: backup
+        mesh = self.mesh
+        n = self.n_shards
+        perm = [((i + 1) % n, i) for i in range(n)]
+
+        def restore(backup_state):
+            def local(panes):
+                return jax.lax.ppermute(panes, "data", perm)
+            panes = jax.shard_map(local, mesh=mesh,
+                                  in_specs=P(None, "data"),
+                                  out_specs=P(None, "data"),
+                                  check_vma=False)(backup_state["panes"])
+            return dict(backup_state, panes=panes)
+        return restore
+
+    # ---------------------------------------------------------- elastic --
+    def migrate_state(self, state, target: "StreamExecutor"):
+        """Elastic rescale: re-lay the sharded window state out on the
+        target executor's mesh (key buckets re-partition block-wise; the
+        collectives stay correct because ownership is layout-defined)."""
+        host = jax.tree.map(lambda x: jax.device_get(x), state)
+        return target._shard_state(host)
+
+    # ------------------------------------------------------------- run --
+    def step(self, state, batch):
+        out = self._step(state, batch)
+        self._processed_since_ack += int(batch["valid"].sum())
+        return out
+
+    def snapshot(self, state):
+        return self._snapshot(state)
+
+    def restore(self, backup):
+        return self._restore(backup)
+
+    # adaptive receive window (paper §3.3): how many events the source may
+    # admit before the next ack
+    def admissible(self) -> int:
+        now = time.monotonic()
+        if now - self._last_ack >= ACK_INTERVAL_S:
+            rate = self._processed_since_ack
+            if rate > 0:
+                target = rate * WINDOW_FILL_FACTOR
+                self._receive_window = max(
+                    self.cfg.batch_size,
+                    (self._receive_window + target) // 2)
+            self._processed_since_ack = 0
+            self._last_ack = now
+        return self._receive_window
+
+    # ------------------------------------------------------------ bench --
+    def run_stream(self, event_gen: Callable[[int, int], Dict],
+                   n_steps: int, collect: bool = True):
+        """Drive ``n_steps`` steps; returns (state, results list)."""
+        state = self.init_state()
+        results = []
+        B = self.cfg.batch_size
+        for i in range(n_steps):
+            batch = event_gen(i * B, B)
+            state, out = self.step(state, batch)
+            if self.cfg.snapshot_every and (i + 1) % self.cfg.snapshot_every == 0:
+                self._last_backup = self.snapshot(state)
+            if collect:
+                valid = np.asarray(out["valid"])
+                if valid.any():
+                    results.append(
+                        (np.asarray(out["window_ends"])[valid],
+                         np.asarray(out["results"])[valid.nonzero()[0]]))
+        return state, results

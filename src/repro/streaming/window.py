@@ -1,0 +1,161 @@
+"""Vectorized sliding-window aggregation (device tier).
+
+Events arrive as fixed-size array batches ``{ts, key, value, valid}``.
+Keys are hashed into ``n_key_buckets``; per (bucket, frame) partial
+accumulators live in a ring of ``ring_len`` frame slots — the same
+pane-based plan as the host tier (core/window.py), vectorized:
+
+* **accumulate** (Jet stage 1): the batch scatters into the (K, R) pane
+  matrix (``segment-sum`` here; the MXU-tiled one-hot-matmul version is
+  the Pallas kernel in ``kernels/window_agg`` — DESIGN.md "scatter-add ->
+  one-hot matmul"),
+* **combine + emit** (Jet stage 2): when the watermark crosses a slide
+  boundary, the window result per key is ``panes_ring @ window_mask`` —
+  one matvec per emitted window.
+
+Frame/window convention: frame ``f`` covers event time
+``[f*slide, (f+1)*slide)``; the window whose LAST frame is ``L`` covers
+frames ``[L-F+1, L]`` and its end is ``w_end = (L+1)*slide``; it emits
+once the watermark reaches ``w_end``.
+
+All shapes are static; a step emits at most ``max_windows_per_step``
+windows, each tagged valid/invalid; events that arrive after their last
+window emitted are dropped and counted (``dropped_late``), events whose
+ring slot is still occupied by a live older frame are dropped and counted
+(``dropped_conflict`` — bounded by pacing ingestion against emission,
+which is the executor's credit-based backpressure job).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class VectorWindowSpec:
+    size_ms: int
+    slide_ms: int
+    n_key_buckets: int = 1024
+    max_windows_per_step: int = 4
+    ring_margin: int = 4
+
+    @property
+    def frames_per_window(self) -> int:
+        assert self.size_ms % self.slide_ms == 0
+        return self.size_ms // self.slide_ms
+
+    @property
+    def ring_len(self) -> int:
+        return self.frames_per_window + self.ring_margin
+
+
+def window_state_init(spec: VectorWindowSpec, dtype=jnp.float32) -> Dict:
+    return {
+        # per (frame slot, key bucket) partial aggregate — slot-major so
+        # the accumulate scatter lands without a transpose and emission is
+        # one (E, R) @ (R, K) matmul
+        "panes": jnp.zeros((spec.ring_len, spec.n_key_buckets), dtype),
+        # frame id stored in each ring slot (-1 = empty)
+        "slot_frame": jnp.full((spec.ring_len,), -1, jnp.int32),
+        "watermark": jnp.asarray(-1, jnp.int32),
+        # next window end (ms) to emit; -1 = not yet initialised
+        "next_emit": jnp.asarray(-1, jnp.int32),
+        "dropped_late": jnp.asarray(0, jnp.int32),
+        "dropped_conflict": jnp.asarray(0, jnp.int32),
+    }
+
+
+def accumulate(spec: VectorWindowSpec, state: Dict, ts, key_bucket, value,
+               valid, wm_hint=None) -> Dict:
+    """Jet stage 1, vectorized pane accumulation.
+
+    ``wm_hint``: optional scalar watermark heartbeat (idle-source marker):
+    advances event time without carrying data."""
+    K, R, F = spec.n_key_buckets, spec.ring_len, spec.frames_per_window
+    frame = (ts // spec.slide_ms).astype(jnp.int32)
+    slot = frame % R
+
+    # lateness: frames below min_frame have had their last window emitted
+    ne = state["next_emit"]
+    min_frame = jnp.where(ne < 0, jnp.int32(-(2**30)),
+                          ne // spec.slide_ms - F)
+    live = valid & (frame >= min_frame)
+    n_late = jnp.sum(valid & ~live, dtype=jnp.int32)
+
+    # ring-slot conflicts: slot occupied by a DIFFERENT still-live frame
+    slot_frame = state["slot_frame"]
+    occupant = slot_frame[slot]
+    conflict = live & (occupant >= 0) & (occupant != frame)
+    n_conflict = jnp.sum(conflict, dtype=jnp.int32)
+    live = live & ~conflict
+
+    combined = slot * K + key_bucket.astype(jnp.int32)
+    contrib = jnp.where(live, value, 0.0).astype(state["panes"].dtype)
+    panes = state["panes"].reshape(R * K).at[combined].add(
+        contrib, mode="drop").reshape(R, K)
+
+    # record which frame now lives in each touched slot (scatter-max;
+    # measured 25x faster than the one-hot formulation at R~100)
+    slot_frame = slot_frame.at[jnp.where(live, slot, R)].max(
+        jnp.where(live, frame, -1), mode="drop")
+
+    wm = jnp.maximum(state["watermark"],
+                     jnp.max(jnp.where(valid, ts, -1)).astype(jnp.int32))
+    if wm_hint is not None:
+        wm = jnp.maximum(wm, jnp.asarray(wm_hint, jnp.int32))
+    return dict(state, panes=panes, slot_frame=slot_frame, watermark=wm,
+                dropped_late=state["dropped_late"] + n_late,
+                dropped_conflict=state["dropped_conflict"] + n_conflict)
+
+
+def emit(spec: VectorWindowSpec, state: Dict
+         ) -> Tuple[Dict, Dict[str, jnp.ndarray]]:
+    """Jet stage 2, vectorized: emit up to ``max_windows_per_step`` window
+    results with end <= watermark; evict the frame each emission retires."""
+    K, R, F = spec.n_key_buckets, spec.ring_len, spec.frames_per_window
+    slide = spec.slide_ms
+    E = spec.max_windows_per_step
+
+    wm = state["watermark"]
+    # initialise next_emit from the first frame present
+    first_frame = jnp.min(jnp.where(state["slot_frame"] >= 0,
+                                    state["slot_frame"], 2**30))
+    ne0 = jnp.where(state["next_emit"] < 0,
+                    (first_frame + 1) * slide,
+                    state["next_emit"])
+
+    # all E candidate windows in ONE matmul: masks (E, R) @ panes (R, K)
+    panes, slot_frame = state["panes"], state["slot_frame"]
+    w_ends = ne0 + jnp.arange(E, dtype=jnp.int32) * slide
+    ready = (w_ends <= wm) & (ne0 < 2**30)                      # (E,)
+    L = w_ends // slide - 1                                     # (E,)
+    ring_f = slot_frame                                         # (R,)
+    in_win = ((ring_f[None, :] > (L - F)[:, None])
+              & (ring_f[None, :] <= L[:, None])
+              & (ring_f[None, :] >= 0) & ready[:, None])
+    masks = jnp.where(in_win, 1.0, 0.0).astype(panes.dtype)     # (E, R)
+    results = masks @ panes                                     # (E, K)
+    # evict every frame retired by an emitted window (single pass)
+    evict = jnp.any((ring_f[None, :] == (L - F + 1)[:, None])
+                    & ready[:, None], axis=0) & (ring_f >= 0)
+    panes = jnp.where(evict[:, None], 0.0, panes)
+    slot_frame = jnp.where(evict, -1, slot_frame)
+    n_emitted = jnp.sum(ready, dtype=jnp.int32)
+    new_next = jnp.where(ne0 < 2**30, ne0 + n_emitted * slide,
+                         state["next_emit"])
+    out_state = dict(state, panes=panes, slot_frame=slot_frame,
+                     next_emit=new_next)
+    return out_state, {"results": results, "window_ends": w_ends,
+                       "valid": ready}
+
+
+def step(spec: VectorWindowSpec, state: Dict, batch: Dict
+         ) -> Tuple[Dict, Dict]:
+    """One fused accumulate+emit step (the whole-DAG-per-chip tasklet)."""
+    state = accumulate(spec, state, batch["ts"], batch["key"],
+                       batch["value"], batch["valid"], batch.get("wm"))
+    return emit(spec, state)

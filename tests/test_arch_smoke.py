@@ -1,0 +1,129 @@
+"""Per-architecture smoke tests: a REDUCED config of the same family runs
+one forward and one train step on CPU; outputs have the right shapes and
+no NaNs.  Decode smoke: prefill-free single-token steps against a fresh
+cache."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, REGISTRY, SHAPES, applicable_cells
+from repro.models import lm
+from repro.runtime.optimizer import AdamW
+
+B, S = 2, 32
+
+
+def make_batch(cfg, key):
+    kt, kl = jax.random.split(key)
+    if cfg.modality == "vlm_stub":
+        # the vision tower is stubbed: precomputed patch/text embeddings
+        embeds = jax.random.normal(kt, (B, S, cfg.d_model), jnp.float32)
+        labels = jax.random.randint(kl, (B, S), 0, cfg.vocab_size)
+        return {"embeds": embeds, "labels": labels}
+    tokens = jax.random.randint(kt, (B, S), 0, cfg.vocab_size)
+    labels = jax.random.randint(kl, (B, S), 0, cfg.vocab_size)
+    return {"tokens": tokens, "labels": labels}
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def arch_setup(request):
+    cfg = REGISTRY[request.param].reduced()
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(cfg, key, jnp.float32)
+    return cfg, params
+
+
+def test_forward_shapes_no_nan(arch_setup):
+    cfg, params = arch_setup
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    from repro.models.transformer import forward
+    logits, aux = forward(cfg, params, tokens=batch.get("tokens"),
+                          embeds=batch.get("embeds"),
+                          compute_dtype=jnp.float32)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert np.isfinite(float(aux))
+
+
+def test_train_step_reduces_loss_and_is_finite(arch_setup):
+    cfg, params = arch_setup
+    opt = AdamW(lr=1e-3, warmup_steps=1, total_steps=10)
+    step = jax.jit(lm.make_train_step(cfg, opt, compute_dtype=jnp.float32))
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    batch = make_batch(cfg, jax.random.PRNGKey(2))
+    losses = []
+    for _ in range(3):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert all(np.isfinite(l) for l in losses)
+    # same batch thrice: loss must drop
+    assert losses[-1] < losses[0]
+
+
+def test_decode_step_finite(arch_setup):
+    cfg, params = arch_setup
+    if cfg.modality == "vlm_stub":
+        pass  # decode still works off token embeddings
+    serve = jax.jit(lm.make_serve_step(cfg, compute_dtype=jnp.float32),
+                    static_argnames=())
+    cache = lm.init_cache(cfg, B, 64, jnp.float32)
+    token = jnp.zeros((B,), jnp.int32)
+    for pos in range(3):
+        token, cache = serve(params, cache, token, jnp.int32(pos))
+        assert token.shape == (B,)
+        assert np.all(np.asarray(token) >= 0)
+        assert np.all(np.asarray(token) < cfg.vocab_size)
+
+
+def test_decode_matches_forward_prefix():
+    """Greedy decode over a prefix equals argmax of the full forward —
+    KV/SSM caches are consistent with the parallel path."""
+    cfg = REGISTRY["qwen2-1.5b"].reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (1, 8), 0,
+                                cfg.vocab_size)
+    from repro.models.transformer import decode_step, forward
+    logits, _ = forward(cfg, params, tokens=tokens,
+                        compute_dtype=jnp.float32)
+    cache = lm.init_cache(cfg, 1, 16, jnp.float32)
+    step_logits = []
+    for pos in range(8):
+        lg, cache = decode_step(cfg, params, cache, tokens[:, pos],
+                                jnp.int32(pos), compute_dtype=jnp.float32)
+        step_logits.append(lg)
+    got = jnp.stack(step_logits, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(logits),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch",
+                         ["rwkv6-7b", "jamba-v0.1-52b", "mixtral-8x7b"])
+def test_decode_matches_forward_prefix_stateful(arch):
+    """Same consistency check for the stateful/recurrent families."""
+    cfg = REGISTRY[arch].reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (1, 6), 0,
+                                cfg.vocab_size)
+    from repro.models.transformer import decode_step, forward
+    logits, _ = forward(cfg, params, tokens=tokens,
+                        compute_dtype=jnp.float32)
+    cache = lm.init_cache(cfg, 1, 16, jnp.float32)
+    outs = []
+    for pos in range(6):
+        lg, cache = decode_step(cfg, params, cache, tokens[:, pos],
+                                jnp.int32(pos), compute_dtype=jnp.float32)
+        outs.append(lg)
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(logits),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_cell_skip_rules():
+    cells = applicable_cells()
+    # 10 archs x 4 shapes minus the 7 pure-full-attention long_500k skips
+    assert len(cells) == 40 - 7
+    longs = {a for a, s in cells if s == "long_500k"}
+    assert longs == {"mixtral-8x7b", "rwkv6-7b", "jamba-v0.1-52b"}

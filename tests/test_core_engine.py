@@ -1,0 +1,149 @@
+"""End-to-end behaviour tests for the Jet core engine (host tier)."""
+
+import pytest
+
+from repro.core import (CollectorSink, Event, JetCluster, JobConfig, Journal,
+                        JournalSource, ListSource, Pipeline, VirtualClock,
+                        counting, sliding, summing, to_list, tumbling)
+from repro.core.engine import JOB_COMPLETED
+
+
+def make_cluster(n_nodes=1, threads=2, **kw):
+    return JetCluster(n_nodes=n_nodes, cooperative_threads=threads,
+                      clock=VirtualClock(), **kw)
+
+
+def run_batch(cluster, pipeline, config=None):
+    job = cluster.submit(pipeline.to_dag(), config)
+    cluster.run_until_complete(job)
+    return job
+
+
+# ---------------------------------------------------------------------------
+# stateless pipeline + fusion
+# ---------------------------------------------------------------------------
+
+def test_map_filter_fusion_single_node():
+    cluster = make_cluster()
+    out = []
+    p = Pipeline.create()
+    (p.read_from(lambda: ListSource(list(range(100))))
+       .map(lambda x: x * 2)
+       .filter(lambda x: x % 4 == 0)
+       .map(lambda x: x + 1)
+       .write_to(lambda: CollectorSink(out)))
+    dag = p.to_dag()
+    # fusion: source, ONE fused compute vertex, sink
+    assert len(dag.vertices) == 3
+    run_batch(cluster, p)
+    values = sorted(ev.value for ev in out)
+    assert values == sorted(x * 2 + 1 for x in range(100) if (x * 2) % 4 == 0)
+
+
+def test_flat_map_and_multinode():
+    cluster = make_cluster(n_nodes=3)
+    out = []
+    p = Pipeline.create()
+    (p.read_from(lambda: ListSource(list(range(50))))
+       .flat_map(lambda x: [x, -x])
+       .write_to(lambda: CollectorSink(out)))
+    run_batch(cluster, p)
+    assert len(out) == 100
+    assert sorted(ev.value for ev in out) == sorted(
+        v for x in range(50) for v in (x, -x))
+
+
+# ---------------------------------------------------------------------------
+# windowed aggregation (two-stage)
+# ---------------------------------------------------------------------------
+
+def journal_source_pipeline(events, out, wdef, op=None):
+    """events: (ts, key, payload); the value carries (key, payload) so the
+    pipeline can re-key on it."""
+    journal = Journal(n_partitions=8)
+    journal.extend((ts, key, (key, payload)) for ts, key, payload in events)
+    p = Pipeline.create()
+    (p.read_from(lambda: JournalSource(journal), name="src")
+       .with_key(lambda v: v[0])
+       .window(wdef)
+       .aggregate(op or counting())
+       .write_to(lambda: CollectorSink(out)))
+    return p
+
+
+def test_tumbling_window_counts():
+    cluster = make_cluster()
+    out = []
+    # 90 events: key k%5 at ts k*10 + j for j in 0..2
+    events = [(k * 10 + j, k % 5, 1) for k in range(30) for j in range(3)]
+    p = journal_source_pipeline(events, out, tumbling(100))
+    run_batch(cluster, p)
+    # every window of 100ms contains 10 k-slots x 3 events = 30 events,
+    # 2 per key per... verify by recomputing
+    expect = {}
+    for ts, key, _ in events:
+        w_end = (ts // 100 + 1) * 100
+        expect[(w_end, key)] = expect.get((w_end, key), 0) + 1
+    got = {(ev.value.window_end, ev.value.key): ev.value.value for ev in out}
+    assert got == expect
+
+
+@pytest.mark.parametrize("n_nodes", [1, 3])
+def test_sliding_window_counts_multinode(n_nodes):
+    cluster = make_cluster(n_nodes=n_nodes)
+    out = []
+    events = [(i, i % 4, 1) for i in range(200)]
+    p = journal_source_pipeline(events, out, sliding(40, 10))
+    run_batch(cluster, p)
+    expect = {}
+    for ts, key, _ in events:
+        first_w = (ts // 10 + 1) * 10
+        for w in range(first_w, first_w + 40, 10):
+            expect[(w, key)] = expect.get((w, key), 0) + 1
+    got = {(ev.value.window_end, ev.value.key): ev.value.value for ev in out}
+    assert got == expect
+
+
+def test_sliding_window_sum_matches_counting_path():
+    """summing() exercises the deduct fast path; verify against oracle."""
+    cluster = make_cluster()
+    out = []
+    events = [(i * 3, i % 5, i) for i in range(150)]
+    p = journal_source_pipeline(events, out, sliding(60, 20),
+                                op=summing(lambda ev: ev.value[1]))
+    run_batch(cluster, p)
+    expect = {}
+    for ts, key, v in events:
+        first_w = (ts // 20 + 1) * 20
+        for w in range(first_w, first_w + 60, 20):
+            expect[(w, key)] = expect.get((w, key), 0) + v
+    got = {(ev.value.window_end, ev.value.key): ev.value.value for ev in out}
+    assert got == expect
+
+
+# ---------------------------------------------------------------------------
+# hash join
+# ---------------------------------------------------------------------------
+
+def test_hash_join_stream_with_batch_side():
+    cluster = make_cluster(n_nodes=2)
+    out = []
+    side = [("a", 1), ("b", 2), ("c", 3)]
+    stream = [(i, None, ["a", "b", "c", "d"][i % 4]) for i in range(40)]
+    journal = Journal(n_partitions=8)
+    journal.extend(stream)
+
+    p = Pipeline.create()
+    build = p.read_from(lambda: ListSource(side), name="side")
+    (p.read_from(lambda: JournalSource(journal), name="stream")
+       .hash_join(build,
+                  probe_key_fn=lambda v: v,
+                  build_key_fn=lambda kv: kv[0],
+                  combine_fn=None)
+       .write_to(lambda: CollectorSink(out)))
+    run_batch(cluster, p)
+    # "d" has no match -> dropped by inner join; others matched
+    assert len(out) == 30
+    for ev in out:
+        probe, match = ev.value
+        assert match[0] == probe

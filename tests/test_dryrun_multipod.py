@@ -1,0 +1,70 @@
+"""Multi-pod dry-run smoke: lower + compile a representative cell on the
+production 2x16x16 mesh (512 host devices) inside a subprocess so the
+main test process keeps its single device.
+
+The full 33-cell x 2-mesh sweep runs via ``python -m repro.launch.dryrun
+--all --both-meshes`` (artifacts in experiments/dryrun/); this test keeps
+the machinery honest in CI at ~1 min cost.
+"""
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    import json
+    from repro.launch.dryrun import run_cell
+    res = {}
+    for arch, shape, mp in [("olmo-1b", "train_4k", True),
+                            ("qwen2-1.5b", "decode_32k", True),
+                            ("rwkv6-7b", "long_500k", False)]:
+        r = run_cell(arch, shape, multi_pod=mp)
+        res[f"{arch}/{shape}"] = {
+            "chips": r["chips"], "flops": r["flops"],
+            "coll": r["collective_bytes"]["total"],
+            "temp_gib": r["memory"]["temp_bytes"] / 2**30}
+    print("RESULT " + json.dumps(res))
+""")
+
+
+@pytest.mark.slow
+def test_multipod_dryrun_compiles():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.abspath(
+                   os.path.join(os.path.dirname(__file__), "..", "src")))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout[-2000:] + "\n" + r.stderr[-2000:]
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")][0]
+    res = json.loads(line[len("RESULT "):])
+    # multi-pod cells really used 512 chips and produced analysable output
+    assert res["olmo-1b/train_4k"]["chips"] == 512
+    assert res["olmo-1b/train_4k"]["flops"] > 0
+    assert res["qwen2-1.5b/decode_32k"]["chips"] == 512
+    # every compiled cell fits v5e HBM
+    for k, v in res.items():
+        assert v["temp_gib"] < 16.0, (k, v)
+
+
+def test_dryrun_artifacts_cover_all_cells():
+    """The committed sweep artifacts cover every applicable cell on both
+    meshes (the actual deliverable-(e) evidence)."""
+    from repro.configs import applicable_cells
+    d = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+    if not d.exists():
+        pytest.skip("dry-run artifacts not generated yet")
+    missing = []
+    for arch, shape in applicable_cells():
+        for mesh in ("16x16", "2x16x16"):
+            f = d / f"{arch}__{shape}__{mesh}.json"
+            if not f.exists():
+                missing.append(f.name)
+    assert not missing, f"missing dry-run artifacts: {missing[:10]}"

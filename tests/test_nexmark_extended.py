@@ -1,0 +1,101 @@
+"""NEXMark Q3 / Q4 / Q7 — the benchmark patterns beyond the paper's
+evaluated five (incremental join, join + windowed aggregate, global max)."""
+
+import pytest
+
+from repro.core import (CollectorSink, JetCluster, Journal, JournalSource,
+                        VirtualClock)
+from repro.nexmark import NexmarkGenerator, queries
+from repro.nexmark.generator import fill_journal
+from repro.nexmark.model import Auction, Bid, Person
+
+N_EVENTS = 3000
+GEN = NexmarkGenerator(rate=10_000, n_keys=40)
+
+
+def make_journal(n=N_EVENTS):
+    j = Journal(n_partitions=8)
+    fill_journal(j, GEN, n)
+    return j
+
+
+def run(pipeline, n_nodes=2):
+    cluster = JetCluster(n_nodes=n_nodes, cooperative_threads=2,
+                         clock=VirtualClock())
+    job = cluster.submit(pipeline.to_dag())
+    cluster.run_until_complete(job)
+    return job
+
+
+def all_events(n=N_EVENTS):
+    return [GEN(i) for i in range(n)]
+
+
+def test_q3_incremental_join():
+    out = []
+    j1, j2 = make_journal(), make_journal()
+    p = queries.q3(lambda: JournalSource(j1), lambda: JournalSource(j2),
+                   lambda: CollectorSink(out), states=("OR", "ID", "CA"),
+                   category=0)
+    run(p)
+    # oracle: cross product of matching persons x auctions per seller id
+    persons, auctions = {}, {}
+    for _, _, v in all_events():
+        if isinstance(v, Person) and v.state in ("OR", "ID", "CA"):
+            persons.setdefault(v.id, []).append(v)
+        elif isinstance(v, Auction) and v.category == 0:
+            auctions.setdefault(v.seller, []).append(v)
+    expect = sorted((pn.name, a.id) for k in persons
+                    for pn in persons[k] for a in auctions.get(k, ()))
+    got = sorted((name, aid) for ev in out
+                 for (name, _city, _state, aid) in [ev.value])
+    assert got == expect
+    assert len(got) > 0, "oracle produced no matches — tune the generator"
+
+
+def test_q4_category_average():
+    out = []
+    j1, j2 = make_journal(), make_journal()
+    p = queries.q4(lambda: JournalSource(j1), lambda: JournalSource(j2),
+                   lambda: CollectorSink(out), window_ms=100)
+    run(p)
+    # oracle: for each (window, category), mean over join-emission prices;
+    # the incremental join emits a (category, price) at max(ts) of the pair
+    # — here both journals share timestamps so bid ts dominates iff the
+    # auction arrived earlier.  Rebuild exactly what the join emits:
+    auctions, bids = {}, {}
+    for _, _, v in all_events():
+        if isinstance(v, Auction):
+            auctions.setdefault(v.id, []).append(v)
+        elif isinstance(v, Bid):
+            bids.setdefault(v.auction, []).append(v)
+    sums = {}
+    for aid, austs in auctions.items():
+        for a in austs:
+            for b in bids.get(aid, ()):
+                ts = b.ts  # join emits at the later arrival; see note below
+                w = (max(a.ts, b.ts) // 100 + 1) * 100
+                key = (w, a.category)
+                s, c = sums.get(key, (0, 0))
+                sums[key] = (s + b.price, c + 1)
+    expect = {k: s / c for k, (s, c) in sums.items()}
+    got = {(ev.value.window_end, ev.value.key): ev.value.value for ev in out}
+    assert set(got) == set(expect)
+    for k in expect:
+        assert got[k] == pytest.approx(expect[k], rel=1e-9)
+
+
+def test_q7_highest_bid_per_period():
+    out = []
+    j = make_journal()
+    p = queries.q7(lambda: JournalSource(j), lambda: CollectorSink(out),
+                   window_ms=50)
+    run(p)
+    best = {}
+    for _, _, v in all_events():
+        if isinstance(v, Bid):
+            w = (v.ts // 50 + 1) * 50
+            if w not in best or v.price > best[w]:
+                best[w] = v.price
+    got = {ev.value.window_end: ev.value.value.price for ev in out}
+    assert got == best

@@ -1,0 +1,127 @@
+"""Hypothesis property tests for system invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CollectorSink, JetCluster, Journal, JournalSource,
+                        Pipeline, VirtualClock, counting, sliding, summing)
+from repro.core.queues import SPSCQueue
+from repro.state import PartitionTable
+
+
+# ---------------------------------------------------------------------------
+# SPSC queue: FIFO + capacity under arbitrary interleavings
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.one_of(st.integers(0, 1000),
+                          st.just("POLL")), max_size=200),
+       st.integers(1, 16))
+def test_spsc_fifo_and_capacity(ops, cap):
+    q = SPSCQueue(cap)
+    model = []
+    for op in ops:
+        if op == "POLL":
+            got = q.poll()
+            want = model.pop(0) if model else None
+            assert got == want
+        else:
+            ok = q.offer(op)
+            assert ok == (len(model) < cap)
+            if ok:
+                model.append(op)
+        assert len(q) == len(model)
+        assert q.is_full() == (len(model) == cap)
+
+
+# ---------------------------------------------------------------------------
+# Consistent hashing: full cover, replica distinctness, bounded movement
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 12), st.integers(0, 1))
+def test_partition_table_invariants(n_members, backup):
+    t = PartitionTable(list(range(n_members)), partition_count=128,
+                       backup_count=backup)
+    for p in range(128):
+        reps = t.replicas(p)
+        assert len(reps) == min(backup + 1, n_members)
+        assert len(set(reps)) == len(reps)
+        assert all(r in t.members for r in reps)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(3, 10))
+def test_partition_movement_bounded_on_single_join(n):
+    t = PartitionTable(list(range(n)), partition_count=271)
+    before = [t.owner(p) for p in range(271)]
+    t.change_membership(list(range(n + 1)))
+    after = [t.owner(p) for p in range(271)]
+    moved = sum(b != a for b, a in zip(before, after))
+    # consistent hashing: ~1/(n+1) ideal; assert well below full reshuffle
+    assert moved <= 271 * (2.5 / (n + 1)) + 8
+
+
+# ---------------------------------------------------------------------------
+# Windowed aggregation vs oracle under random streams (end-to-end engine)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1),
+       st.sampled_from([(40, 10), (60, 20), (100, 100)]),
+       st.integers(1, 3))
+def test_windowed_counts_match_oracle_random_streams(seed, wdef, n_nodes):
+    size, slide = wdef
+    rng = np.random.RandomState(seed)
+    n = int(rng.randint(50, 300))
+    events = [(int(ts), int(rng.randint(0, 7)), 1)
+              for ts in np.sort(rng.randint(0, 500, n))]
+    journal = Journal(n_partitions=8)
+    journal.extend((ts, k, (k, v)) for ts, k, v in events)
+    out = []
+    p = Pipeline.create()
+    (p.read_from(lambda: JournalSource(journal), name="src")
+       .with_key(lambda v: v[0])
+       .window(sliding(size, slide))
+       .aggregate(counting())
+       .write_to(lambda: CollectorSink(out)))
+    cluster = JetCluster(n_nodes=n_nodes, cooperative_threads=2,
+                         clock=VirtualClock())
+    job = cluster.submit(p.to_dag())
+    cluster.run_until_complete(job)
+    expect = {}
+    for ts, key, _ in events:
+        fw = (ts // slide + 1) * slide
+        for w in range(fw, fw + size, slide):
+            expect[(w, key)] = expect.get((w, key), 0) + 1
+    got = {(ev.value.window_end, ev.value.key): ev.value.value for ev in out}
+    assert got == expect
+
+
+# ---------------------------------------------------------------------------
+# Sum aggregation: mass conservation per window span
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_tumbling_sum_mass_conservation(seed):
+    rng = np.random.RandomState(seed)
+    n = int(rng.randint(50, 200))
+    events = [(int(ts), int(rng.randint(0, 5)), float(rng.randint(1, 10)))
+              for ts in np.sort(rng.randint(0, 300, n))]
+    journal = Journal(n_partitions=8)
+    journal.extend((ts, k, (k, v)) for ts, k, v in events)
+    out = []
+    p = Pipeline.create()
+    (p.read_from(lambda: JournalSource(journal), name="src")
+       .with_key(lambda v: v[0])
+       .window(sliding(50, 50))           # tumbling: each event counted once
+       .aggregate(summing(lambda ev: ev.value[1]))
+       .write_to(lambda: CollectorSink(out)))
+    cluster = JetCluster(n_nodes=2, cooperative_threads=2,
+                         clock=VirtualClock())
+    job = cluster.submit(p.to_dag())
+    cluster.run_until_complete(job)
+    total_emitted = sum(ev.value.value for ev in out)
+    total_input = sum(v for _, _, v in events)
+    assert abs(total_emitted - total_input) < 1e-9

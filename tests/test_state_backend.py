@@ -1,0 +1,92 @@
+"""State backend: consistent hashing, replication, failover, rebalance."""
+
+import pytest
+
+from repro.state import IMap, IMapService, PartitionTable
+
+
+def test_partition_table_covers_all_partitions():
+    t = PartitionTable([0, 1, 2], partition_count=271, backup_count=1)
+    for p in range(271):
+        reps = t.replicas(p)
+        assert len(reps) == 2
+        assert len(set(reps)) == 2
+        assert t.owner(p) == reps[0]
+
+
+def test_partition_table_balance():
+    t = PartitionTable(list(range(5)), partition_count=271)
+    counts = [len(t.partitions_of(m)) for m in range(5)]
+    assert sum(counts) == 271
+    # consistent hashing with 64 vnodes: no member should be wildly off
+    assert max(counts) < 3 * (271 / 5)
+
+
+def test_consistent_hashing_minimal_movement():
+    t = PartitionTable(list(range(10)), partition_count=271)
+    before = [t.owner(p) for p in range(271)]
+    t.change_membership(list(range(11)))
+    after = [t.owner(p) for p in range(271)]
+    moved = sum(b != a for b, a in zip(before, after))
+    # ideal is 271/11 ~ 25; allow generous slack but far below reshuffle-all
+    assert moved < 271 * 0.35
+
+
+def test_imap_put_get_and_replication():
+    svc = IMapService([0, 1, 2], partition_count=32, backup_count=1)
+    m = IMap(svc, "test")
+    for i in range(100):
+        m.put(f"k{i}", i)
+    assert all(m.get(f"k{i}") == i for i in range(100))
+    # every partition's data exists on exactly 2 members
+    for pid in range(32):
+        holders = [mem for mem, store in svc.stores.items()
+                   if ("test", pid) in store]
+        entries = svc.entries("test", pid)
+        if entries:
+            assert len(holders) == 2
+
+
+def test_imap_survives_member_failure():
+    svc = IMapService([0, 1, 2], partition_count=32, backup_count=1)
+    m = IMap(svc, "t")
+    for i in range(200):
+        m.put(i, i * i)
+    lost = svc.kill_member(1)
+    assert lost == []
+    assert all(m.get(i) == i * i for i in range(200))
+    assert svc.promoted_partitions > 0
+    # replication is re-established on the survivors
+    for pid in range(32):
+        if svc.entries("t", pid):
+            holders = [mem for mem, store in svc.stores.items()
+                       if ("t", pid) in store]
+            assert len(holders) == 2
+
+
+def test_imap_double_failure_with_backup_1_loses_nothing_sequential():
+    """Sequential failures re-replicate in between: no loss."""
+    svc = IMapService([0, 1, 2, 3], partition_count=64, backup_count=1)
+    m = IMap(svc, "t")
+    for i in range(300):
+        m.put(i, i)
+    assert svc.kill_member(0) == []
+    assert svc.kill_member(2) == []
+    assert all(m.get(i) == i for i in range(300))
+
+
+def test_imap_elastic_add_member_migrates_about_one_nth():
+    svc = IMapService(list(range(4)), partition_count=271, backup_count=1)
+    m = IMap(svc, "t")
+    for i in range(500):
+        m.put(i, i)
+    moved = svc.add_member(4)
+    assert all(m.get(i) == i for i in range(500))
+    # ~1/5th of partitions move (generous upper bound)
+    assert moved < 271 * 0.45
+    svc._garbage_collect()
+    # stale copies dropped: each partition on exactly backup+1 members
+    for pid in range(271):
+        holders = [mem for mem, store in svc.stores.items()
+                   if ("t", pid) in store]
+        assert len(holders) <= 2
