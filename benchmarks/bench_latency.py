@@ -1,0 +1,330 @@
+"""The paper's headline metric: event-time -> emission latency at the
+99.99th percentile, plus events/s/core, on BOTH tiers.
+
+Methodology (paper §7.1): the latency clock for a window result starts at
+the *ideal occurrence time* of its window end — the generator's pacing
+schedule pins event time to wall time — and stops when the engine emits
+the result at the sink.  Scheduling delay, batching delay, snapshot
+pauses: everything the engine does shows up in the number.  Latencies are
+recorded into an HdrHistogram-style log-bucketed histogram so the p99.99
+is a real measured quantile, not an interpolation over a handful of
+samples.
+
+Results land in ``BENCH_latency.json`` at the repo root so successive PRs
+accumulate a perf trajectory.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+REPORT_PCTS = (50.0, 90.0, 99.0, 99.9, 99.99)
+
+
+class LatencyHistogram:
+    """HdrHistogram-style fixed-precision histogram of microsecond values.
+
+    Values are bucketed logarithmically by magnitude with
+    ``2**sub_bucket_bits`` linear sub-buckets per power of two, giving a
+    bounded relative error (~1/2**sub_bucket_bits) across the whole range
+    with O(1) record cost and compact storage — the same scheme
+    HdrHistogram uses, sized here for 1 us .. ~60 s.
+    """
+
+    def __init__(self, max_value_us: int = 60_000_000,
+                 sub_bucket_bits: int = 7):
+        self.sub_bucket_bits = sub_bucket_bits
+        self.sub_bucket_count = 1 << sub_bucket_bits
+        # number of magnitude buckets needed to cover max_value_us
+        buckets = 1
+        top = self.sub_bucket_count
+        while top < max_value_us:
+            top <<= 1
+            buckets += 1
+        self.bucket_count = buckets
+        self.max_value_us = max_value_us
+        # bucket 0 holds values [0, sub_bucket_count) at resolution 1;
+        # bucket b >= 1 holds [sub_bucket_count * 2**(b-1), ... * 2**b)
+        # in sub_bucket_count/2 live sub-buckets of width 2**b
+        self.counts = np.zeros(
+            (buckets + 1) * self.sub_bucket_count, dtype=np.int64)
+        self.total = 0
+        self.min_us = float("inf")
+        self.max_us = 0.0
+
+    def _index(self, v: int) -> int:
+        if v < self.sub_bucket_count:
+            return v
+        bucket = v.bit_length() - self.sub_bucket_bits
+        sub = v >> bucket
+        return (bucket << self.sub_bucket_bits) + sub
+
+    def record(self, value_us: float) -> None:
+        v = int(value_us)
+        if v < 0:
+            v = 0
+        elif v > self.max_value_us:
+            v = self.max_value_us
+        self.counts[self._index(v)] += 1
+        self.total += 1
+        if value_us < self.min_us:
+            self.min_us = value_us
+        if value_us > self.max_us:
+            self.max_us = value_us
+
+    def record_many(self, values_us) -> None:
+        for v in values_us:
+            self.record(v)
+
+    def percentile(self, pct: float) -> float:
+        """Value (us) at the given percentile, upper-bucket-edge biased."""
+        if self.total == 0:
+            return float("nan")
+        target = int(np.ceil(pct / 100.0 * self.total))
+        running = 0
+        nz = np.nonzero(self.counts)[0]
+        for idx in nz:
+            running += int(self.counts[idx])
+            if running >= target:
+                bucket = idx >> self.sub_bucket_bits
+                sub = idx & (self.sub_bucket_count - 1)
+                width = 1 if bucket == 0 else 1 << bucket
+                base = sub if bucket == 0 else sub << bucket
+                return float(base + width - 1)
+        return self.max_us
+
+    def summary_ms(self) -> Dict[str, float]:
+        out = {f"p{p:g}": round(self.percentile(p) / 1000.0, 3)
+               for p in REPORT_PCTS}
+        out["min"] = round(0.0 if self.total == 0 else self.min_us / 1000.0, 3)
+        out["max"] = round(self.max_us / 1000.0, 3)
+        out["samples"] = self.total
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Host tier: NEXMark Q5 through the cooperative tasklet engine
+# ---------------------------------------------------------------------------
+
+
+def host_q5_latency(rate: float = 20_000, duration_s: float = 4.0,
+                    window_ms: int = 1000, slide_ms: int = 20,
+                    n_keys: int = 100, threads: int = 2,
+                    warmup_s: float = 1.0) -> Dict:
+    """Paced Q5 on the host tier; returns percentiles + events/s/core.
+
+    The whole cluster simulation runs on one OS thread, so aggregate
+    events/s == events/s/core."""
+    from repro.core import (JetCluster, JobConfig, PacedGeneratorSource,
+                            WallClock)
+    from repro.core.engine import JOB_COMPLETED
+    from repro.nexmark import NexmarkGenerator, queries
+    from .common import _SinkAdapter
+
+    clock = WallClock()
+    cluster = JetCluster(n_nodes=1, cooperative_threads=threads, clock=clock)
+    gen = NexmarkGenerator(rate=rate, n_keys=n_keys)
+    hist = LatencyHistogram()
+    total = int(rate * duration_s)
+    t0_holder = [None]
+    cut_holder = [None]
+    end_holder = [None]
+
+    def sink(ev):
+        now = clock.now()
+        # window result event time is window_end - 1 (ms since t0)
+        ideal = t0_holder[0] + (ev.ts + 1) / 1000.0
+        # drop warmup and the end-of-stream flush (windows emitted early
+        # when the finite source completes have ideal times in the future)
+        if cut_holder[0] <= now and ideal <= end_holder[0]:
+            hist.record((now - ideal) * 1e6)
+
+    p = queries.q5(
+        lambda: PacedGeneratorSource(gen, rate=rate, max_events=total),
+        lambda: _SinkAdapter(sink), window_ms=window_ms, slide_ms=slide_ms)
+    t0_holder[0] = clock.now()
+    cut_holder[0] = t0_holder[0] + warmup_s
+    end_holder[0] = t0_holder[0] + total / rate
+    job = cluster.submit(p.to_dag(), JobConfig())
+    deadline = time.monotonic() + duration_s * 3 + 10
+    t_start = time.monotonic()
+    while job.status != JOB_COMPLETED and time.monotonic() < deadline:
+        cluster.step()
+    wall = time.monotonic() - t_start
+    stats = job.execution.stats()
+    return {
+        "tier": "host", "query": "q5", "rate": rate,
+        "window_ms": window_ms, "slide_ms": slide_ms,
+        "events_per_sec_per_core": round(total / wall, 0),
+        "latency_ms": hist.summary_ms(),
+        "engine": {k: stats[k] for k in ("items_in", "items_out", "calls",
+                                         "idle_calls")},
+    }
+
+
+def host_q5_saturation(n_events: int = 800_000, threads: int = 2,
+                       probe_rate: float = 2_000_000) -> float:
+    """Max sustained events/s/core: pace far beyond capacity (every event
+    is always due) and measure the wall time to drain a fixed stream."""
+    from repro.core import (JetCluster, PacedGeneratorSource, WallClock)
+    from repro.core.engine import JOB_COMPLETED
+    from repro.nexmark import NexmarkGenerator, queries
+    from .common import _SinkAdapter
+
+    cluster = JetCluster(n_nodes=1, cooperative_threads=threads,
+                         clock=WallClock())
+    gen = NexmarkGenerator(rate=probe_rate, n_keys=100)
+    p = queries.q5(
+        lambda: PacedGeneratorSource(gen, rate=probe_rate,
+                                     max_events=n_events),
+        lambda: _SinkAdapter(lambda ev: None), window_ms=1000, slide_ms=20)
+    job = cluster.submit(p.to_dag())
+    t0 = time.monotonic()
+    deadline = t0 + 120
+    while job.status != JOB_COMPLETED and time.monotonic() < deadline:
+        cluster.step()
+    wall = time.monotonic() - t0
+    return n_events / wall
+
+
+# ---------------------------------------------------------------------------
+# Device tier: vectorized Q5 through the compiled StreamExecutor
+# ---------------------------------------------------------------------------
+
+
+def device_q5_latency(steps: int = 2000, batch: int = 4096,
+                      n_keys: int = 4096, warmup: int = 50) -> Dict:
+    """Per-step event->emission latency of the compiled datapath.
+
+    Each step ingests 10 ms of event time; the latency clock starts when
+    the batch exists on the host (its events' generation instant) and
+    stops when the emitted window results are materialized host-side —
+    staging, compute and readback all show up in the number.  Throughput
+    is measured separately over the *pipelined* path (``run_stream``-style
+    prefetching, no per-step sync).
+    """
+    import jax
+    from repro.streaming import (StreamExecutor, StreamJobConfig,
+                                 VectorWindowSpec)
+
+    spec = VectorWindowSpec(size_ms=1000, slide_ms=10, n_key_buckets=n_keys,
+                            max_windows_per_step=2, ring_margin=8)
+    ex = StreamExecutor(StreamJobConfig(window=spec, batch_size=batch))
+    rng = np.random.RandomState(0)
+
+    def make_batch(i):
+        ts = i * 10 + np.sort(rng.randint(0, 10, batch)).astype(np.int32)
+        return {"ts": ts,
+                "key": rng.randint(0, n_keys, batch).astype(np.int32),
+                "value": np.ones((batch,), np.float32),
+                "valid": np.ones((batch,), bool),
+                "wm": np.asarray(-1, np.int32)}
+
+    hist = LatencyHistogram()
+    state = ex.init_state()
+    # compile + warmup
+    for i in range(warmup):
+        staged, cnt = ex.stage_batch(make_batch(i))
+        state, out = ex.step(state, staged, valid_count=cnt)
+    jax.block_until_ready(state["panes"])
+
+    # latency mode: one batch at a time, synced at the sink
+    for i in range(warmup, warmup + steps):
+        b = make_batch(i)
+        t_gen = time.perf_counter()
+        staged, cnt = ex.stage_batch(b)
+        state, out = ex.step(state, staged, valid_count=cnt)
+        valid = np.asarray(out["valid"])        # sink materialization
+        if valid.any():
+            np.asarray(out["results"])
+        t_emit = time.perf_counter()
+        hist.record((t_emit - t_gen) * 1e6)
+
+    # throughput mode: pipelined ingestion, no per-step sync
+    n_tp = max(steps // 2, 100)
+    batches = [make_batch(warmup + steps + i) for i in range(n_tp)]
+    t0 = time.perf_counter()
+    nxt = ex.stage_batch(batches[0])
+    for i in range(n_tp):
+        staged, cnt = nxt
+        if i + 1 < n_tp:
+            nxt = ex.stage_batch(batches[i + 1])
+        state, out = ex.step(state, staged, valid_count=cnt)
+    jax.block_until_ready(state["panes"])
+    dt = time.perf_counter() - t0
+    return {
+        "tier": "device", "query": "q5-vectorized", "batch": batch,
+        "keys": n_keys, "steps": steps,
+        "events_per_sec_per_core": round(n_tp * batch / dt, 0),
+        "latency_ms": hist.summary_ms(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def run(quick: bool = True) -> Dict:
+    host_rate = 20_000
+    host = host_q5_latency(rate=host_rate,
+                           duration_s=4.0 if quick else 10.0)
+    host["saturation_events_per_sec_per_core"] = round(
+        host_q5_saturation(n_events=600_000 if quick else 2_000_000), 0)
+    device = device_q5_latency(steps=1000 if quick else 10_000)
+    return {
+        "meta": {
+            "metric": "event-time -> emission latency (ms), "
+                      "HdrHistogram-style recording",
+            "pcts": list(REPORT_PCTS),
+            "host_config": {"query": "q5", "rate": host_rate,
+                            "window_ms": 1000, "slide_ms": 20},
+            "quick": quick,
+        },
+        "host": host,
+        "device": device,
+    }
+
+
+def write_report(result: Dict,
+                 path: Optional[pathlib.Path] = None) -> pathlib.Path:
+    if path is None:
+        path = pathlib.Path(__file__).resolve().parents[1] / \
+            "BENCH_latency.json"
+    path.write_text(json.dumps(result, indent=1, default=float) + "\n")
+    return path
+
+
+def rows(quick: bool = True) -> List[Dict]:
+    """CSV-row shaped output for benchmarks.run."""
+    result = run(quick)
+    write_report(result)
+    out = []
+    for tier in ("host", "device"):
+        r = result[tier]
+        lat = r["latency_ms"]
+        row = {"figure": f"latency_{tier}",
+               "events_per_sec_per_core": r["events_per_sec_per_core"],
+               **{k: lat[k] for k in ("p50", "p99", "p99.9", "p99.99")},
+               "samples": lat["samples"]}
+        if "saturation_events_per_sec_per_core" in r:
+            row["saturation_events_per_sec_per_core"] = \
+                r["saturation_events_per_sec_per_core"]
+        out.append(row)
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    result = run(quick=not args.full)
+    p = write_report(result)
+    print(json.dumps(result, indent=1, default=float))
+    print(f"# wrote {p}")

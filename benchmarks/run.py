@@ -37,31 +37,47 @@ def _csv_rows(rows, key_metric="p99.99", scale=1000.0):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke target: only the p99.99 latency harness "
+                         "(both tiers); emits BENCH_latency.json")
     ap.add_argument("--skip-host", action="store_true",
                     help="skip the wall-clock host-tier figures")
     args = ap.parse_args()
     quick = not args.full
 
-    from . import bench_device_tier, bench_figures, roofline
+    from . import bench_device_tier, bench_figures, bench_latency, roofline
 
     all_rows = []
     print("name,us_per_call,derived")
 
-    sections = []
-    if not args.skip_host:
+    if args.quick:
+        # CI smoke target: the latency harness alone keeps the perf
+        # trajectory (BENCH_latency.json) accumulating per PR; it always
+        # runs both tiers, taking precedence over --skip-host
+        sections = [("latency", lambda: bench_latency.rows(quick=quick))]
+    else:
+        sections = []
+        if not args.skip_host:
+            # the latency harness drives the wall-clock host tier too
+            sections.append(
+                ("latency", lambda: bench_latency.rows(quick=quick)))
+            sections += [
+                ("fig7",
+                 lambda: bench_figures.fig7_throughput_vs_latency(quick)),
+                ("fig8", lambda: bench_figures.fig8_scaleout_latency(quick)),
+                ("fig9",
+                 lambda: bench_figures.fig9_latency_distribution(quick)),
+                ("fig10",
+                 lambda: bench_figures.fig10_scaleout_throughput(quick)),
+                ("fig13",
+                 lambda: bench_figures.fig13_fault_tolerance_overhead(quick)),
+                ("sec7.7", lambda: bench_figures.sec77_multitenancy(quick)),
+            ]
         sections += [
-            ("fig7", lambda: bench_figures.fig7_throughput_vs_latency(quick)),
-            ("fig8", lambda: bench_figures.fig8_scaleout_latency(quick)),
-            ("fig9", lambda: bench_figures.fig9_latency_distribution(quick)),
-            ("fig10", lambda: bench_figures.fig10_scaleout_throughput(quick)),
-            ("fig13", lambda: bench_figures.fig13_fault_tolerance_overhead(
-                quick)),
-            ("sec7.7", lambda: bench_figures.sec77_multitenancy(quick)),
+            ("device_q5",
+             lambda: bench_device_tier.bench_vector_q5(quick=quick)),
+            ("kernels", lambda: bench_device_tier.bench_kernels(quick=quick)),
         ]
-    sections += [
-        ("device_q5", lambda: bench_device_tier.bench_vector_q5(quick=quick)),
-        ("kernels", lambda: bench_device_tier.bench_kernels(quick=quick)),
-    ]
 
     for name, fn in sections:
         try:

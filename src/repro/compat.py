@@ -1,0 +1,43 @@
+"""Version-compatibility shims for jax APIs used across the repo.
+
+The repo targets both pre- and post-0.5 jax: ``shard_map`` moved from
+``jax.experimental`` to the top level (renaming ``check_rep`` to
+``check_vma``), ``AbstractMesh`` changed its constructor signature, and
+``Compiled.cost_analysis`` switched between returning a dict and a
+one-element list of dicts.  Centralising the differences here keeps the
+call sites clean.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.5: top-level shard_map with check_vma
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:  # jax < 0.5: experimental shard_map with check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` with replication checking off, on any jax."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check})
+
+
+def abstract_mesh(axis_sizes, axis_names):
+    """Build an ``AbstractMesh`` across both constructor generations."""
+    AbstractMesh = jax.sharding.AbstractMesh
+    try:  # newer: AbstractMesh(axis_sizes, axis_names)
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:  # older: AbstractMesh(((name, size), ...))
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """Normalise ``Compiled.cost_analysis()`` to a flat dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}

@@ -18,6 +18,7 @@ from collections import deque
 from typing import Any, Deque, Optional, Tuple
 
 from .clock import Clock
+from .events import Event
 
 ACK_INTERVAL_S = 0.1
 WINDOW_FILL_FACTOR = 3
@@ -58,6 +59,20 @@ class NetworkLink:
         self.items_sent += 1
         return True
 
+    def offer_many(self, items, start: int = 0, end=None) -> int:
+        """Send a batch while credit allows; returns the count accepted."""
+        n = (len(items) if end is None else end) - start
+        credit = self.acked_seq + self.receive_window - self.sent_seq
+        if n > credit:
+            n = credit
+        if n <= 0:
+            return 0
+        due = self.clock.now() + self.latency
+        self._in_flight.extend((due, it) for it in items[start:start + n])
+        self.sent_seq += n
+        self.items_sent += n
+        return n
+
     def remaining_capacity(self) -> int:
         return max(0, self.acked_seq + self.receive_window - self.sent_seq)
 
@@ -67,6 +82,33 @@ class NetworkLink:
             return None
         self._processed += 1
         return self._recv.popleft()
+
+    def poll_prefix(self, limit: int):
+        """Batched control-aware drain; see ``SPSCQueue.poll_prefix``."""
+        recv = self._recv
+        n = len(recv)
+        if limit < n:
+            n = limit
+        if n <= 0:
+            return (), None
+        events = []
+        append = events.append
+        popleft = recv.popleft
+        ctrl = None
+        consumed = 0
+        while consumed < n:
+            item = recv[0]
+            if item.__class__ is Event or isinstance(item, Event):
+                append(item)
+                popleft()
+                consumed += 1
+            else:
+                ctrl = item
+                popleft()
+                consumed += 1
+                break
+        self._processed += consumed
+        return events, ctrl
 
     def peek(self) -> Optional[Any]:
         return self._recv[0] if self._recv else None

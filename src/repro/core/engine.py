@@ -18,6 +18,7 @@ The whole cluster is simulated in-process and driven by :meth:`JetCluster.step`
 from __future__ import annotations
 
 import itertools
+import time as _time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..state import IMapService, SnapshotStore
@@ -35,6 +36,16 @@ JOB_RUNNING = "running"
 JOB_COMPLETED = "completed"
 JOB_FAILED = "failed"
 JOB_RESTARTING = "restarting"
+
+# progressive idle backoff (paper §3.2: spin -> yield -> park).  An idle
+# scheduler first busy-spins (lowest wake-up latency), then yields its
+# timeslice, then parks in escalating naps so an idle job stops burning
+# the core.  The park ceiling bounds the extra latency a waking event can
+# observe, keeping the tail budget in check.
+IDLE_SPIN_ITERS = 64
+IDLE_YIELD_ITERS = 192
+IDLE_PARK_MIN_S = 0.00005
+IDLE_PARK_MAX_S = 0.0002
 
 
 class JobConfig:
@@ -308,10 +319,14 @@ class JetCluster:
                  clock: Optional[Clock] = None,
                  partition_count: int = PARTITION_COUNT,
                  backup_count: int = 1,
-                 link_latency_s: float = 0.0005):
+                 link_latency_s: float = 0.0005,
+                 idle_backoff: bool = True):
         self.clock = clock or WallClock()
         self.cooperative_threads = cooperative_threads
         self.link_latency_s = link_latency_s
+        #: progressive spin->yield->park when a wall-clock driver is idle
+        self.idle_backoff = idle_backoff
+        self._idle_streak = 0
         self.node_ids = list(range(n_nodes))
         self.nodes: Dict[int, JetNode] = {
             i: JetNode(i, cooperative_threads) for i in self.node_ids}
@@ -343,8 +358,18 @@ class JetCluster:
             job.tick(self.clock.now())
             if (job.status == JOB_RUNNING and job.execution.all_done):
                 job.status = JOB_COMPLETED
-        if not progress and isinstance(self.clock, VirtualClock):
+        if progress:
+            self._idle_streak = 0
+        elif isinstance(self.clock, VirtualClock):
             self.clock.advance(self.clock.auto_step)
+        elif self.idle_backoff:
+            self._idle_streak = streak = self._idle_streak + 1
+            if streak > IDLE_YIELD_ITERS:
+                park = IDLE_PARK_MIN_S * (1 << min(streak - IDLE_YIELD_ITERS,
+                                                   8))
+                _time.sleep(min(park, IDLE_PARK_MAX_S))
+            elif streak > IDLE_SPIN_ITERS:
+                _time.sleep(0)      # yield the timeslice
         return progress
 
     def run_until_complete(self, job: Job, max_steps: int = 2_000_000) -> None:

@@ -156,6 +156,128 @@ class Pipeline:
 
 
 # ---------------------------------------------------------------------------
+# Source fusion: run a stateless chain at the source's own outbox
+# ---------------------------------------------------------------------------
+
+
+class _ChainOutbox:
+    """Outbox facade that applies a fused stateless chain at emission time.
+
+    Data events run through the chain before landing in the real outbox;
+    control items (watermarks) pass straight through.  This is what lets
+    the planner collapse ``source -> fused-chain`` into ONE vertex: the
+    whole queue hop between them disappears.
+    """
+
+    __slots__ = ("_target", "_chain", "_chain1")
+
+    def __init__(self, target, chain, chain1=None):
+        self._target = target
+        self._chain = chain
+        #: scalar in-place variant (Event -> Event | None); preferred when
+        #: the chain has no flat_map — no per-event tuple/Event churn
+        self._chain1 = chain1
+
+    def offer(self, item) -> bool:
+        t = self._target
+        if item.__class__ is Event or isinstance(item, Event):
+            chain1 = self._chain1
+            if chain1 is not None:
+                ev = chain1(item)
+                return True if ev is None else t.offer(ev)
+            outs = self._chain(item)
+            if not outs:
+                return True         # filtered out: item is consumed
+            if t.space() <= 0:
+                return False
+            t.extend(outs)          # may overshoot by the chain fan-out - 1
+            return True
+        return t.offer(item)
+
+    def space(self) -> int:
+        return self._target.space()
+
+    def extend(self, items) -> None:
+        chain1 = self._chain1
+        out: List[Any] = []
+        append = out.append
+        if chain1 is not None:
+            for item in items:
+                if item.__class__ is Event or isinstance(item, Event):
+                    ev = chain1(item)
+                    if ev is not None:
+                        append(ev)
+                else:
+                    append(item)
+        else:
+            chain = self._chain
+            extend = out.extend
+            for item in items:
+                if item.__class__ is Event or isinstance(item, Event):
+                    extend(chain(item))
+                else:
+                    append(item)
+        self._target.extend(out)
+
+    def offer_to_snapshot(self, key, value) -> bool:
+        return self._target.offer_to_snapshot(key, value)
+
+    @property
+    def snapshot_queue(self):
+        return self._target.snapshot_queue
+
+    def drain(self):
+        return self._target.drain()
+
+    def __len__(self):
+        return len(self._target)
+
+
+class ChainedSourceProcessor(Processor):
+    """Wraps a source processor so a fused stateless chain runs at its
+    outbox (operator fusion extended through the source boundary, §3.1)."""
+
+    def __init__(self, inner: Processor, chain, chain1=None):
+        self.inner = inner
+        self._chain = chain
+        self._chain1 = chain1
+        self.is_cooperative = inner.is_cooperative
+        # optional hooks the engine discovers via getattr
+        if hasattr(inner, "snapshot_partition"):
+            self.snapshot_partition = inner.snapshot_partition
+        if hasattr(inner, "on_snapshot_committed"):
+            self.on_snapshot_committed = inner.on_snapshot_committed
+
+    def init(self, outbox, ctx) -> None:
+        super().init(outbox, ctx)
+        self.inner.init(_ChainOutbox(outbox, self._chain, self._chain1), ctx)
+
+    def process(self, ordinal: int, inbox: Inbox) -> None:
+        self.inner.process(ordinal, inbox)
+
+    def try_process_watermark(self, wm) -> bool:
+        return self.inner.try_process_watermark(wm)
+
+    def complete_edge(self, ordinal: int) -> bool:
+        return self.inner.complete_edge(ordinal)
+
+    def complete(self) -> bool:
+        return self.inner.complete()
+
+    def save_to_snapshot(self) -> bool:
+        return self.inner.save_to_snapshot()
+
+    def restore_from_snapshot(self, items) -> None:
+        self.inner.restore_from_snapshot(items)
+
+    def finish_snapshot_restore(self) -> None:
+        self.inner.finish_snapshot_restore()
+
+    def close(self) -> None:
+        self.inner.close()
+
+
+# ---------------------------------------------------------------------------
 # Join / batch-aggregate processors used by the planner
 # ---------------------------------------------------------------------------
 
@@ -254,6 +376,44 @@ class GroupAggregateProcessor(Processor):
 # ---------------------------------------------------------------------------
 
 
+#: scalar-op dispatch codes shared by both chain compilers
+_MAP, _FILTER, _REKEY = 0, 1, 2
+_SCALAR_KINDS = {"map": _MAP, "filter": _FILTER, "rekey": _REKEY}
+
+
+def _scalar_steps(ops: List[Tuple[str, Callable]]):
+    """(kind, fn) steps for an all-scalar chain (every stage yields 0 or 1
+    events), or None if any stage can fan out (flat_map)."""
+    if not all(op in _SCALAR_KINDS for op, _ in ops):
+        return None
+    return tuple((_SCALAR_KINDS[op], fn) for op, fn in ops)
+
+
+def _compile_chain_inplace(ops: List[Tuple[str, Callable]]):
+    """Scalar-chain variant that mutates the event in place.
+
+    Only safe where the caller OWNS the event — i.e. source fusion, where
+    the event was just created by the source and has not entered any queue
+    yet.  Returns None for non-scalar chains (flat_map)."""
+    scalar = _scalar_steps(ops)
+    if scalar is None:
+        return None
+
+    def chain_inplace(ev, _steps=scalar):
+        """Event -> Event | None (no per-event tuple)."""
+        for kind, f in _steps:
+            if kind == 1:
+                if not f(ev.value):
+                    return None
+            elif kind == 0:
+                ev.value = f(ev.value)
+            else:
+                ev.key = f(ev.value)
+        return ev
+
+    return chain_inplace
+
+
 def _compile_chain(ops: List[Tuple[str, Callable]]):
     """Compose a fused op chain into one Event -> tuple(Event) closure."""
     steps = []
@@ -271,6 +431,26 @@ def _compile_chain(ops: List[Tuple[str, Callable]]):
             raise ValueError(op)
     if len(steps) == 1:
         return steps[0]
+
+    scalar = _scalar_steps(ops)
+    if scalar is not None:
+        # scalar chain: every stage yields 0 or 1 events, so the whole
+        # chain runs as a straight-line loop over the event — no per-stage
+        # tuple/list churn (this is the shape the fusion planner produces
+        # for nearly every stateless pipeline segment)
+
+        def chain_scalar(ev, _steps=scalar):
+            for kind, f in _steps:
+                if kind == 1:
+                    if not f(ev.value):
+                        return ()
+                elif kind == 0:
+                    ev = ev.with_value(f(ev.value))
+                else:
+                    ev = ev.with_key(f(ev.value))
+            return (ev,)
+
+        return chain_scalar
 
     def chain(ev, _steps=tuple(steps)):
         evs = (ev,)
@@ -305,16 +485,42 @@ class _Planner:
                 self.vertex_of[st] = st.name
             elif st.kind == "compute":
                 chain, last = self._collect_chain(st, consumed)
-                name = last.name
                 fused = _compile_chain([(s.params["op"], s.params["fn"])
                                         for s in chain])
+                up = chain[0].upstreams[0]
+                if up.kind == "source" and up.downstream_count == 1:
+                    # source fusion: the chain runs inside the source
+                    # vertex itself — no intermediate vertex, no queue hop.
+                    # The source owns each event until it enters a queue,
+                    # so a scalar chain may rewrite it in place.
+                    inplace = _compile_chain_inplace(
+                        [(s.params["op"], s.params["fn"]) for s in chain])
+                    src_name = self.vertex_of[up]
+                    vertex = self.dag.vertices[src_name]
+                    supplier = vertex.supplier
+                    vertex.supplier = (
+                        lambda s=supplier, c=fused, c1=inplace:
+                        ChainedSourceProcessor(s(), c, c1))
+                    # rename so telemetry (straggler reports) attributes
+                    # the chain's cost to it; no edges reference the
+                    # source yet, so only the vertex table changes
+                    new_name = f"{src_name}+{last.name}"
+                    vertex.name = new_name
+                    self.dag.vertices = {
+                        (new_name if k == src_name else k): v
+                        for k, v in self.dag.vertices.items()}
+                    self.vertex_of[up] = new_name
+                    for s in chain:
+                        self.vertex_of[s] = new_name
+                    continue
+                name = last.name
                 self.dag.vertex(
                     name, (lambda c=fused: FusedFunctionProcessor(c)))
                 self.vertex_of[last] = name
                 for s in chain:
                     self.vertex_of[s] = name
-                self._connect(chain[0].upstreams[0], name,
-                              Edge(self._vname(chain[0].upstreams[0]), name,
+                self._connect(up, name,
+                              Edge(self._vname(up), name,
                                    routing=Routing.ISOLATED))
             elif st.kind in ("window_agg", "window_agg2"):
                 self._plan_window_agg(st)

@@ -30,6 +30,10 @@ class Inbox:
     def add(self, item):
         self._items.append(item)
 
+    def extend(self, items):
+        """Bulk-append a drained slice (the tasklet's batched refill)."""
+        self._items.extend(items)
+
     def peek(self):
         return self._items[0] if self._items else None
 
@@ -71,10 +75,20 @@ class Outbox:
         self.snapshot_queue: List[Tuple[Any, Any]] = []
 
     def offer(self, item) -> bool:
-        if len(self._items) >= self._limit:
+        items = self._items
+        if len(items) >= self._limit:
             return False
-        self._items.append(item)
+        items.append(item)
         return True
+
+    def space(self) -> int:
+        """Slots left before the batch limit (bulk-emitting producers size
+        their run to this instead of probing ``offer`` per item)."""
+        return self._limit - len(self._items)
+
+    def extend(self, items) -> None:
+        """Bulk-append a pre-sized run (caller respects :meth:`space`)."""
+        self._items.extend(items)
 
     def offer_to_snapshot(self, key, value) -> bool:
         self.snapshot_queue.append((key, value))
@@ -181,30 +195,25 @@ class FusedFunctionProcessor(Processor):
     def __init__(self, chain: Callable[[Event], Iterable[Event]]):
         # chain: Event -> iterable of Events (possibly empty)
         self._chain = chain
-        self._pending: deque = deque()
 
     def process(self, ordinal: int, inbox: Inbox) -> None:
         chain = self._chain
-        offer = self.outbox.offer
-        pending = self._pending
-        while pending:
-            if not offer(pending[0]):
+        ob = self.outbox
+        out_items = ob._items
+        limit = ob._limit
+        # the tasklet segregates control items at the queue boundary, so the
+        # inbox holds only data events: iterate the backing deque directly
+        # and extend the outbox list in place (same emitted sequence as the
+        # per-item offer loop; a flat_map may overshoot the batch limit by
+        # its fan-out, which only shifts a batch boundary)
+        items = inbox._items
+        popleft = items.popleft
+        extend = out_items.extend
+        while items:
+            if len(out_items) >= limit:
                 return
-            pending.popleft()
-        while True:
-            item = inbox.peek()
-            if item is None:
-                return
-            if isinstance(item, Event):
-                for out in chain(item):
-                    if not offer(out):
-                        pending.append(out)
-                inbox.remove()
-                if pending:
-                    return
-            else:
-                # control items are handled by the tasklet, never seen here
-                return
+            extend(chain(items[0]))
+            popleft()
 
 
 class MapProcessor(FusedFunctionProcessor):
@@ -235,8 +244,7 @@ class SinkProcessor(Processor):
 
     def process(self, ordinal: int, inbox: Inbox) -> None:
         consumer = self._consumer
-        while True:
-            item = inbox.poll()
-            if item is None:
-                return
-            consumer(item)
+        items = inbox._items
+        popleft = items.popleft
+        while items:
+            consumer(popleft())

@@ -82,20 +82,53 @@ class PacedGeneratorSource(Processor):
         rate = self.rate
         clock, start = self.ctx.clock, self._start
         gen = self.gen_fn
-        while True:
-            if self.max_events is not None and self._seq >= self.max_events:
-                return True
-            due = start + self._seq / rate
-            if clock.now() < due:
-                return False
-            ts, key, value = gen(self._seq)
-            if not self.outbox.offer(Event(ts, key, value)):
-                return False
-            self._seq += step
-            wm = self.policy.observe(ts)
-            if wm is not None and (self._seq // step) % self.wm_stride == 0:
-                if not self.outbox.offer(Watermark(wm)):
+        outbox = self.outbox
+        observe = self.policy.observe
+        max_events, wm_stride = self.max_events, self.wm_stride
+        seq = self._seq
+        try:
+            while True:
+                if max_events is not None and seq >= max_events:
+                    return True
+                # emit every event already due at this instant in one run —
+                # one clock read and one outbox extend per burst instead of
+                # one offer per event
+                overdue = (clock.now() - start) * rate - seq
+                if overdue < 0:
                     return False
+                budget = int(overdue) // step + 1
+                room = outbox.space()
+                if room <= 0:
+                    return False
+                if budget > room:
+                    budget = room
+                if max_events is not None:
+                    left = (max_events - seq + step - 1) // step
+                    if budget > left:
+                        budget = left
+                buf = []
+                append = buf.append
+                unthrottled = wm_stride == 1
+                last_ts = None
+                while budget > 0 and len(buf) < room:
+                    budget -= 1
+                    ts, key, value = gen(seq)
+                    append(Event(ts, key, value))
+                    seq += step
+                    if ts != last_ts:
+                        # observe() only reacts to a changed timestamp, so
+                        # runs of equal-ts events skip the call entirely
+                        last_ts = ts
+                        wm = observe(ts)
+                        if wm is not None and (
+                                unthrottled
+                                or (seq // step) % wm_stride == 0):
+                            append(Watermark(wm))
+                outbox.extend(buf)
+                if max_events is not None and seq >= max_events:
+                    return True
+        finally:
+            self._seq = seq
 
     # replay support: offsets ride on the owned state partitions (like
     # JournalSource) so any post-restart topology finds them.  The restart
@@ -259,9 +292,9 @@ class CollectorSink(Processor):
 
     def process(self, ordinal: int, inbox: Inbox) -> None:
         out, with_time = self.out, self.with_time
-        clock = self.ctx.clock
-        while True:
-            item = inbox.poll()
-            if item is None:
-                return
-            out.append((clock.now(), item) if with_time else item)
+        if with_time:
+            now = self.ctx.clock.now
+            out.extend((now(), item) for item in inbox)
+        else:
+            out.extend(inbox)
+        inbox.clear()

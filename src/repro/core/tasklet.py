@@ -20,13 +20,19 @@ engine-level, not processor-level:
 
 from __future__ import annotations
 
-from collections import deque
+import time as _time
 from typing import Any, Callable, List, Optional, Sequence
 
 from .dag import PARTITION_COUNT, Routing
 from .events import DONE, Barrier, DoneItem, Event, Watermark, MIN_TIME
 from .processor import Inbox, Outbox, Processor
 from .watermark import WatermarkCoalescer
+
+#: max data items moved from one input queue per drain slice (the paper's
+#: batch-at-a-time tasklet granularity; also bounds slice latency)
+DRAIN_BATCH = 256
+#: routing cache bound for partitioned collectors (key -> queue index)
+ROUTE_CACHE_MAX = 8192
 
 # tasklet lifecycle states
 RUNNING = "running"
@@ -46,12 +52,15 @@ class InQueue:
     plus its stream-protocol state."""
 
     __slots__ = ("q", "ordinal", "done", "parked_barrier", "seen_barrier",
-                 "priority")
+                 "priority", "index")
 
     def __init__(self, q, ordinal: int, priority: int = 0):
         self.q = q
         self.ordinal = ordinal
         self.done = False
+        #: position within the owning tasklet's ``in_queues`` (set by the
+        #: tasklet; lets watermark/done handling skip an O(n) list.index)
+        self.index = 0
         #: barrier id this queue is parked on (exactly-once alignment)
         self.parked_barrier: Optional[int] = None
         #: last barrier id delivered (at-least-once: no parking, but the
@@ -73,7 +82,7 @@ class EdgeCollector:
     """
 
     __slots__ = ("queues", "routing", "key_fn", "partition_to_queue",
-                 "_rr_cursor", "_bc_item", "_bc_remaining")
+                 "_rr_cursor", "_bc_item", "_bc_remaining", "_route_cache")
 
     def __init__(self, queues: Sequence, routing: str,
                  key_fn: Optional[Callable],
@@ -85,14 +94,27 @@ class EdgeCollector:
         self._rr_cursor = 0
         self._bc_item = None
         self._bc_remaining: List[int] = []
+        #: key -> queue index memo (partitioned routing); bounded so a
+        #: high-cardinality key space cannot grow it without limit
+        self._route_cache: dict = {}
 
     # -- data items ---------------------------------------------------------
+    def _queue_index_for(self, item) -> int:
+        # canonical routing decision; offer_many's inner loop inlines this
+        # body for speed — keep the two in sync
+        key = self.key_fn(item) if self.key_fn else item.key
+        cache = self._route_cache
+        qi = cache.get(key)
+        if qi is None:
+            qi = self.partition_to_queue[hash(key) % PARTITION_COUNT]
+            if len(cache) < ROUTE_CACHE_MAX:
+                cache[key] = qi
+        return qi
+
     def offer(self, item: Event) -> bool:
         r = self.routing
         if r == Routing.PARTITIONED:
-            key = self.key_fn(item) if self.key_fn else item.key
-            pid = hash(key) % PARTITION_COUNT
-            return self.queues[self.partition_to_queue[pid]].offer(item)
+            return self.queues[self._queue_index_for(item)].offer(item)
         if r == Routing.ROUND_ROBIN:
             n = len(self.queues)
             for i in range(n):
@@ -105,6 +127,78 @@ class EdgeCollector:
             return self.queues[0].offer(item)
         # BROADCAST of data items uses the same resumable path as control
         return self.broadcast(item)
+
+    def offer_control(self, item) -> bool:
+        """Forward a control item emitted by a *source* outbox (watermark).
+
+        On a keyed edge the item applies to every partition, so it is
+        broadcast; otherwise it follows the same routing a data item would
+        (the seed behaviour)."""
+        if self.routing == Routing.PARTITIONED:
+            return self.broadcast(item)
+        return self.offer(item)
+
+    def offer_many(self, items: List[Any], start: int = 0,
+                   end: Optional[int] = None) -> int:
+        """Route ``items[start:end]`` in order; returns the count accepted.
+
+        Items are moved as runs: a contiguous stretch headed for the same
+        destination queue is handed over in one bulk ``offer_many`` instead
+        of one call per item.  Routing decisions are identical to
+        :meth:`offer`, so a prefix accepted here equals the same prefix
+        offered item-at-a-time.
+        """
+        r = self.routing
+        qs = self.queues
+        n = len(items) if end is None else end
+        if start >= n:
+            return 0
+        if r == Routing.ISOLATED or len(qs) == 1 and r != Routing.BROADCAST:
+            # single destination: routing cannot differ per item
+            return qs[0].offer_many(items, start, n)
+        if r == Routing.PARTITIONED:
+            key_fn = self.key_fn
+            p2q = self.partition_to_queue
+            cache = self._route_cache
+            cache_get = cache.get
+            dest_of = self._queue_index_for
+            i = start
+            while i < n:
+                item = items[i]
+                qi = dest_of(item)
+                j = i + 1
+                while j < n:
+                    nxt = items[j]
+                    key = key_fn(nxt) if key_fn is not None else nxt.key
+                    q2 = cache_get(key)
+                    if q2 is None:
+                        q2 = p2q[hash(key) % PARTITION_COUNT]
+                        if len(cache) < ROUTE_CACHE_MAX:
+                            cache[key] = q2
+                    if q2 != qi:
+                        break
+                    j += 1
+                if j == i + 1:      # runs of one: plain offer is cheaper
+                    if not qs[qi].offer(item):
+                        break
+                    i = j
+                else:
+                    run = j - i
+                    accepted = qs[qi].offer_many(items, i, j)
+                    i += accepted
+                    if accepted < run:
+                        break       # destination full: stop at this item
+            return i - start
+        # ROUND_ROBIN spreads per item and BROADCAST needs the resumable
+        # per-item protocol: fall back to the exact item-at-a-time logic
+        i = start
+        if r == Routing.ROUND_ROBIN:
+            while i < n and self.offer(items[i]):
+                i += 1
+        else:
+            while i < n and self.broadcast(items[i]):
+                i += 1
+        return i - start
 
     # -- control items --------------------------------------------------------
     def broadcast(self, item) -> bool:
@@ -188,11 +282,21 @@ class ProcessorTasklet:
         self.vertex_name = vertex_name
         self.global_index = global_index
         self.is_source = is_source or not in_queues
+        for i, iq in enumerate(in_queues):
+            iq.index = i
         # per-ordinal inboxes
         max_ord = max((iq.ordinal for iq in in_queues), default=-1)
         self.inboxes = [Inbox() for _ in range(max_ord + 1)]
+        #: running count of non-empty inboxes — kept in sync at the two
+        #: places inboxes mutate (drain refills them, ``process`` consumes
+        #: them) so the per-call "all inboxes empty?" checks are O(1)
+        self._nonempty_inboxes = 0
         self.outbox = Outbox()
-        self._pending_out: deque = deque()
+        #: flushed-but-not-yet-forwarded items (list + cursor: the batched
+        #: flush consumes a prefix without per-item deque churn)
+        self._pend_items: List[Any] = []
+        self._pend_pos = 0
+        self._pend_col = 0
         self._pending_wm: Optional[Watermark] = None
         self._wm_processed = False
         self.coalescer = WatermarkCoalescer(len(in_queues)) if in_queues else None
@@ -217,9 +321,9 @@ class ProcessorTasklet:
         progress = False
 
         # 1. flush anything already produced
-        if self._pending_out or len(self.outbox):
+        if self._pend_pos < len(self._pend_items) or len(self.outbox):
             progress |= self._flush_outbox()
-            if self._pending_out:
+            if self._pend_pos < len(self._pend_items):
                 self.idle_calls += not progress
                 return progress
 
@@ -227,8 +331,7 @@ class ProcessorTasklet:
         #    processed (all data <= a coalesced watermark is in the inboxes
         #    by the time it advances, so this ordering is what makes window
         #    emission see complete frames)
-        if (self._pending_wm is not None
-                and not any(len(ib) for ib in self.inboxes)):
+        if self._pending_wm is not None and not self._nonempty_inboxes:
             if not self._forward_watermark():
                 self.idle_calls += not progress
                 return progress
@@ -270,79 +373,89 @@ class ProcessorTasklet:
 
         progress |= self._drain_inputs()
         # run the processor over non-empty inboxes
-        for ordinal, inbox in enumerate(self.inboxes):
-            if len(inbox):
+        if self._nonempty_inboxes:
+            for ordinal, inbox in enumerate(self.inboxes):
                 before = len(inbox)
-                self.processor.process(ordinal, inbox)
-                progress |= len(inbox) != before or len(self.outbox) > 0
-                if len(self.outbox):
-                    self._flush_outbox()
+                if before:
+                    self.processor.process(ordinal, inbox)
+                    after = len(inbox)
+                    if not after:
+                        self._nonempty_inboxes -= 1
+                    progress |= after != before or len(self.outbox) > 0
+                    if len(self.outbox):
+                        self._flush_outbox()
         # watermark became due after this slice's inbox processing
-        if (self._pending_wm is not None
-                and not any(len(ib) for ib in self.inboxes)):
+        if self._pending_wm is not None and not self._nonempty_inboxes:
             progress |= self._forward_watermark()
         # a snapshot armed by a barrier starts only once every pre-barrier
         # item has been fully processed and emitted (consistency of the cut)
         if (self._armed_snapshot is not None
-                and not any(len(ib) for ib in self.inboxes)
-                and not self._pending_out and not len(self.outbox)):
+                and not self._nonempty_inboxes
+                and self._pend_pos >= len(self._pend_items)
+                and not len(self.outbox)):
             sid = self._armed_snapshot
             self._armed_snapshot = None
             self._begin_snapshot(sid)
             return True
         # all inputs done?
         if (self.state == RUNNING and self.in_queues
-                and all(iq.done for iq in self.in_queues)
-                and not any(len(ib) for ib in self.inboxes)):
+                and not self._nonempty_inboxes
+                and all(iq.done for iq in self.in_queues)):
             self.state = COMPLETING
             self.ssctx.notify_exempt(self)
             progress = True
         return progress
 
     def _drain_inputs(self) -> bool:
-        """Poll input queues round-robin, handling control items."""
+        """Drain input queues round-robin in batched slices.
+
+        Data events move as one bulk ``poll_prefix`` per queue (the queue
+        segregates the leading run of events from the first control item),
+        so the per-item cost is one type check inside the queue instead of
+        a poll/isinstance/add round-trip per item.  Control items are still
+        handled one at a time, in arrival order, exactly as the seed
+        item-at-a-time loop did.
+        """
         progress = False
-        n = len(self.in_queues)
+        in_queues = self.in_queues
+        n = len(in_queues)
         exactly_once = self.ssctx.guarantee == GUARANTEE_EXACTLY_ONCE
         # priority edges: only drain the lowest not-yet-done priority class
-        cur_priority = min((iq.priority for iq in self.in_queues
+        cur_priority = min((iq.priority for iq in in_queues
                             if not iq.done), default=0)
+        cursor = self._queue_cursor
+        inboxes = self.inboxes
         for i in range(n):
-            iq = self.in_queues[(self._queue_cursor + i) % n]
+            iq = in_queues[(cursor + i) % n]
             if iq.done or iq.parked_barrier is not None:
                 continue
             if iq.priority > cur_priority:
                 continue
-            inbox = self.inboxes[iq.ordinal]
-            # drain a bounded batch from this queue
-            for _ in range(256):
-                item = iq.q.poll()
-                if item is None:
-                    break
+            events, ctrl = iq.q.poll_prefix(DRAIN_BATCH)
+            if events:
                 progress = True
-                if isinstance(item, Event):
-                    self.items_in += 1
-                    inbox.add(item)
-                    continue
-                if isinstance(item, Watermark):
-                    self._on_watermark(iq, item)
-                    break  # process data before more control items
-                if isinstance(item, Barrier):
-                    iq.seen_barrier = item.snapshot_id
+                self.items_in += len(events)
+                inbox = inboxes[iq.ordinal]
+                if not len(inbox):
+                    self._nonempty_inboxes += 1
+                inbox.extend(events)
+            if ctrl is not None:
+                progress = True
+                if isinstance(ctrl, Watermark):
+                    self._on_watermark(iq, ctrl)
+                elif isinstance(ctrl, Barrier):
+                    iq.seen_barrier = ctrl.snapshot_id
                     if exactly_once:
-                        iq.parked_barrier = item.snapshot_id
-                    self._recheck_alignment(item.snapshot_id)
-                    break
-                if isinstance(item, DoneItem):
+                        iq.parked_barrier = ctrl.snapshot_id
+                    self._recheck_alignment(ctrl.snapshot_id)
+                elif isinstance(ctrl, DoneItem):
                     self._on_queue_done(iq)
-                    break
-        self._queue_cursor = (self._queue_cursor + 1) % max(n, 1)
+        self._queue_cursor = (cursor + 1) % max(n, 1)
         return progress
 
     # ------------------------------------------------------------ watermarks --
     def _on_watermark(self, iq: InQueue, wm: Watermark) -> None:
-        qi = self.in_queues.index(iq)
-        new_ts = self.coalescer.observe(qi, wm.ts)
+        new_ts = self.coalescer.observe(iq.index, wm.ts)
         if new_ts is not None:
             self._pending_wm = Watermark(new_ts)
             self._wm_processed = False
@@ -423,8 +536,7 @@ class ProcessorTasklet:
     # ------------------------------------------------------------- done/batch --
     def _on_queue_done(self, iq: InQueue) -> None:
         iq.done = True
-        qi = self.in_queues.index(iq)
-        new_ts = self.coalescer.queue_done(qi)
+        new_ts = self.coalescer.queue_done(iq.index)
         if new_ts is not None:
             self._pending_wm = Watermark(new_ts)
             self._wm_processed = False
@@ -454,20 +566,89 @@ class ProcessorTasklet:
     # --------------------------------------------------------------- outbox --
     def _flush_outbox(self) -> bool:
         """Move outbox items to the edge collectors. Items go to every
-        collector (one per out-edge); resumable under backpressure."""
+        collector (one per out-edge); resumable under backpressure.
+
+        Single out-edge (the overwhelmingly common shape) forwards the
+        whole pending slice with one bulk ``offer_many``; fan-out keeps
+        the per-item resumable protocol."""
+        items, pos = self._pend_items, self._pend_pos
         if len(self.outbox):
-            self._pending_out.extend(
-                (item, 0) for item in self.outbox.drain())
+            drained = self.outbox.drain()
+            if pos >= len(items):
+                items = self._pend_items = drained
+                pos = self._pend_pos = 0
+                self._pend_col = 0
+            else:
+                items.extend(drained)
+        n = len(items)
+        if pos >= n:
+            return False
+        collectors = self.collectors
         progress = False
-        while self._pending_out:
-            item, start_c = self._pending_out[0]
-            for ci in range(start_c, len(self.collectors)):
-                if not self.collectors[ci].offer(item):
-                    self._pending_out[0] = (item, ci)
-                    return progress
-            self._pending_out.popleft()
-            self.items_out += 1
-            progress = True
+        if len(collectors) == 1:
+            c = collectors[0]
+            if not self.is_source:
+                # non-source outboxes hold only data events: pure bulk path
+                accepted = c.offer_many(items, pos)
+                if accepted:
+                    progress = True
+                    pos += accepted
+                    self.items_out += accepted
+            else:
+                # a source outbox interleaves watermarks with events:
+                # forward runs of events in bulk, control items one by one
+                while pos < n:
+                    item = items[pos]
+                    if item.__class__ is Event or isinstance(item, Event):
+                        j = pos + 1
+                        while j < n:
+                            nxt = items[j]
+                            if not (nxt.__class__ is Event
+                                    or isinstance(nxt, Event)):
+                                break
+                            j += 1
+                        accepted = c.offer_many(items, pos, j)
+                        if accepted:
+                            progress = True
+                            pos += accepted
+                            self.items_out += accepted
+                        if pos < j:
+                            break
+                    else:
+                        if not c.offer_control(item):
+                            break
+                        progress = True
+                        pos += 1
+                        self.items_out += 1
+        else:
+            col = self._pend_col
+            is_source = self.is_source
+            while pos < n:
+                item = items[pos]
+                # a fused source with fan-out can interleave watermarks
+                # here too: they must take the control route on keyed edges
+                is_ctrl = is_source and not (item.__class__ is Event
+                                             or isinstance(item, Event))
+                blocked = False
+                while col < len(collectors):
+                    c = collectors[col]
+                    if not (c.offer_control(item) if is_ctrl
+                            else c.offer(item)):
+                        blocked = True
+                        break
+                    col += 1
+                if blocked:
+                    break
+                col = 0
+                pos += 1
+                self.items_out += 1
+                progress = True
+            self._pend_col = col
+        if pos >= n:
+            self._pend_items = []
+            self._pend_pos = 0
+        else:
+            self._pend_pos = pos
         return progress
 
     @property
@@ -493,7 +674,14 @@ class CooperativeWorker:
     in the active-active deployment simply prefer the healthy replica)."""
 
     __slots__ = ("tasklets", "name", "_time_in", "slice_budget_s",
-                 "budget_violations")
+                 "budget_violations", "_iterations")
+
+    #: every iteration in this initial window is fully timed (catches
+    #: stragglers in short-lived jobs before sampling kicks in)
+    TIMING_WARMUP_ITERS = 512
+    #: after warmup, one iteration in this many is timed; recorded time is
+    #: scaled by the period so cumulative numbers stay comparable
+    TIMING_SAMPLE_PERIOD = 32
 
     def __init__(self, name: str, slice_budget_s: float = 0.001):
         self.name = name
@@ -501,26 +689,49 @@ class CooperativeWorker:
         self._time_in: dict = {}
         self.slice_budget_s = slice_budget_s
         self.budget_violations: dict = {}
+        self._iterations = 0
 
     def add(self, tasklet: ProcessorTasklet) -> None:
         self.tasklets.append(tasklet)
 
     def run_iteration(self) -> bool:
-        import time as _time
+        """Step every live tasklet once.
+
+        ``perf_counter`` pairs around every tasklet call used to be the
+        scheduler's single biggest fixed cost; timing is now *sampled* —
+        full coverage during a warmup window, then 1-in-N iterations —
+        which keeps straggler detection while taking the clock calls off
+        the steady-state hot path."""
+        self._iterations = it = self._iterations + 1
+        if it <= self.TIMING_WARMUP_ITERS:
+            return self._run_iteration_timed(1)
+        if not it % self.TIMING_SAMPLE_PERIOD:
+            return self._run_iteration_timed(self.TIMING_SAMPLE_PERIOD)
         progress = False
         for t in self.tasklets:
             if not t.is_done:
-                t0 = _time.perf_counter()
                 progress |= t.call()
-                dt = _time.perf_counter() - t0
-                self._time_in[t.name] = self._time_in.get(t.name, 0.0) + dt
-                if dt > self.slice_budget_s:
+        return progress
+
+    def _run_iteration_timed(self, weight: int) -> bool:
+        perf = _time.perf_counter
+        time_in = self._time_in
+        budget = self.slice_budget_s
+        progress = False
+        for t in self.tasklets:
+            if not t.is_done:
+                t0 = perf()
+                progress |= t.call()
+                dt = perf() - t0
+                time_in[t.name] = time_in.get(t.name, 0.0) + dt * weight
+                if dt > budget:
                     self.budget_violations[t.name] = \
                         self.budget_violations.get(t.name, 0) + 1
         return progress
 
     def hot_tasklets(self, top: int = 5):
-        """(name, cumulative_s, budget_violations) sorted by time."""
+        """(name, cumulative_s_estimate, budget_violations) sorted by time.
+        Times are sampled estimates once the warmup window has passed."""
         return sorted(((n, s, self.budget_violations.get(n, 0))
                        for n, s in self._time_in.items()),
                       key=lambda x: -x[1])[:top]

@@ -198,17 +198,17 @@ class AccumulateByFrameProcessor(Processor):
 
     def process(self, ordinal: int, inbox: Inbox) -> None:
         acc_fn = self.op.accumulate_fns[self.ordinal_map.get(ordinal, 0)]
-        frames, higher = self.frames, self.wdef.higher_frame_ts
+        frames, slide = self.frames, self.wdef.slide
         create = self.op.create
-        while True:
-            ev = inbox.poll()
-            if ev is None:
-                return
-            fkey = (ev.key, higher(ev.ts))
-            acc = frames.get(fkey)
-            if acc is None:
-                acc = create()
-            frames[fkey] = acc_fn(acc, ev)
+        get = frames.get
+        # accumulation never backpressures: consume the whole batch in one
+        # pass over the inbox (only data events reach a processor's inbox);
+        # higher_frame_ts is inlined — it runs once per event
+        for ev in inbox:
+            fkey = (ev.key, (ev.ts // slide + 1) * slide)
+            acc = get(fkey)
+            frames[fkey] = acc_fn(create() if acc is None else acc, ev)
+        inbox.clear()
 
     def try_process_watermark(self, wm: Watermark) -> bool:
         buf = self._emit_buf
@@ -303,14 +303,12 @@ class CombineFramesProcessor(Processor):
     # -- ingest ----------------------------------------------------------------
     def process(self, ordinal: int, inbox: Inbox) -> None:
         frames, combine = self.frames, self.op.combine
-        while True:
-            ev = inbox.poll()
-            if ev is None:
-                return
+        key_state = self.key_state
+        for ev in inbox:
             fts, acc = ev.value
-            ks = self.key_state.get(ev.key)
+            ks = key_state.get(ev.key)
             if ks is None:
-                ks = self.key_state[ev.key] = _KeyState()
+                ks = key_state[ev.key] = _KeyState()
             fkey = (ev.key, fts)
             cur = frames.get(fkey)
             frames[fkey] = acc if cur is None else combine(cur, acc)
@@ -319,6 +317,7 @@ class CombineFramesProcessor(Processor):
             if self.next_win_end is None or fts < self.next_win_end:
                 # earliest window this frame participates in
                 self.next_win_end = fts
+        inbox.clear()
 
     # -- window emission --------------------------------------------------------
     def _window_value(self, key, ks: _KeyState, w_end: int):

@@ -17,6 +17,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from ..compat import cost_analysis_dict
 from ..streaming import StreamExecutor, StreamJobConfig, VectorWindowSpec
 from .dryrun import OUT_DIR, collective_bytes
 from .mesh import make_production_mesh
@@ -57,7 +58,7 @@ def main():
         snap_lowered = jax.jit(ex._build_snapshot()).lower(state_s)
         snap_compiled = snap_lowered.compile()
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     coll = collective_bytes(compiled.as_text())
     snap_coll = collective_bytes(snap_compiled.as_text())
     result = {

@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
+
 from ..sharding import constraints
 from .layers import normal_init
 
@@ -170,11 +172,9 @@ def _moe_sharded(params, x, cfg, compute_dtype, mesh):
             aux = jax.lax.pmean(aux, batch)
         return y.reshape(Bl, Sl, D), aux
 
-    f = jax.shard_map(local, mesh=mesh,
-                      in_specs=(P(None, None), w1_spec, w3_spec, w2_spec,
-                                x_spec),
-                      out_specs=(x_spec, P()),
-                      check_vma=False)
+    f = shard_map(local, mesh,
+                  (P(None, None), w1_spec, w3_spec, w2_spec, x_spec),
+                  (x_spec, P()))
     return f(params["router"], params["w_gate"], params["w_up"],
              params["w_down"], x)
 

@@ -40,25 +40,30 @@ class NexmarkGenerator:
         return int(seq * 1000 / self.rate)
 
     def __call__(self, seq: int) -> Tuple[int, Any, Any]:
-        ts = self.timestamp_ms(seq)
-        r = _mix64(seq)
+        ts = int(seq * 1000 / self.rate)
+        # splitmix64 inlined: this is called once per generated event
+        x = (seq + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+        x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+        x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+        r = x ^ (x >> 31)
         slot = seq % TOTAL_PROPORTION
+        if slot >= PERSON_PROPORTION + AUCTION_PROPORTION:
+            # bids are 46/50 of the stream: branch for them first
+            n = self.n_keys
+            aid = r % n
+            return ts, aid, Bid(aid, (r >> 16) % n,
+                                100 + ((r >> 32) % 9900), ts)
         if slot < PERSON_PROPORTION:
             pid = r % self.n_keys
             v = Person(pid, f"person-{pid}", f"p{pid}@example.com",
                        CITIES[r % len(CITIES)],
                        US_STATES[(r >> 8) % len(US_STATES)], ts)
             return ts, pid, v
-        if slot < PERSON_PROPORTION + AUCTION_PROPORTION:
-            aid = r % self.n_keys
-            seller = (r >> 16) % self.n_keys
-            v = Auction(aid, seller, (r >> 24) % 10, 100 + r % 900,
-                        ts + 60_000, ts)
-            return ts, aid, v
         aid = r % self.n_keys
-        bidder = (r >> 16) % self.n_keys
-        price = 100 + ((r >> 32) % 9900)
-        return ts, aid, Bid(aid, bidder, price, ts)
+        seller = (r >> 16) % self.n_keys
+        v = Auction(aid, seller, (r >> 24) % 10, 100 + r % 900,
+                    ts + 60_000, ts)
+        return ts, aid, v
 
 
 def fill_journal(journal, generator: NexmarkGenerator, n_events: int) -> None:

@@ -118,14 +118,13 @@ class MaxPerWindowProcessor(Processor):
 
     def process(self, ordinal: int, inbox: Inbox) -> None:
         best = self.best
-        while True:
-            ev = inbox.poll()
-            if ev is None:
-                return
+        get = best.get
+        for ev in inbox:
             wr = ev.value
-            cur = best.get(wr.window_end)
+            cur = get(wr.window_end)
             if cur is None or wr.value > cur[1]:
                 best[wr.window_end] = (wr.key, wr.value)
+        inbox.clear()
 
     def try_process_watermark(self, wm: Watermark) -> bool:
         # strict: a result carries ts == w - 1 and items with ts == wm may

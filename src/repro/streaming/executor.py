@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
 from .window import VectorWindowSpec, accumulate, emit, window_state_init
 
 ACK_INTERVAL_S = 0.1
@@ -73,6 +74,17 @@ class StreamExecutor:
         self._processed_since_ack = 0
         self._last_ack = time.monotonic()
         self._receive_window = cfg.batch_size * WINDOW_FILL_FACTOR
+        # per-field shardings for async host->device staging
+        if mesh is None:
+            self._batch_shardings = None
+        else:
+            self._batch_shardings = {
+                "ts": NamedSharding(mesh, P("data")),
+                "key": NamedSharding(mesh, P("data")),
+                "value": NamedSharding(mesh, P("data")),
+                "valid": NamedSharding(mesh, P("data")),
+                "wm": NamedSharding(mesh, P()),
+            }
 
     # ------------------------------------------------------------- build --
     def _shard_state(self, state):
@@ -156,9 +168,8 @@ class StreamExecutor:
                       "valid": P()})
 
         def step_spmd(state, batch):
-            return jax.shard_map(local_step, mesh=mesh, in_specs=in_specs,
-                                 out_specs=out_specs,
-                                 check_vma=False)(state, batch)
+            return shard_map(local_step, mesh, in_specs,
+                             out_specs)(state, batch)
         return step_spmd
 
     def _build_step_route(self, mesh, K_loc: int):
@@ -231,9 +242,8 @@ class StreamExecutor:
                       "valid": P()})
 
         def step_spmd(state, batch):
-            return jax.shard_map(local_step, mesh=mesh, in_specs=in_specs,
-                                 out_specs=out_specs,
-                                 check_vma=False)(state, batch)
+            return shard_map(local_step, mesh, in_specs,
+                             out_specs)(state, batch)
         return step_spmd
 
     # ------------------------------------------------------- snapshots --
@@ -249,10 +259,8 @@ class StreamExecutor:
         def snap(state):
             def local(panes):
                 return jax.lax.ppermute(panes, "data", perm)
-            backup = jax.shard_map(local, mesh=mesh,
-                                   in_specs=P(None, "data"),
-                                   out_specs=P(None, "data"),
-                                   check_vma=False)(state["panes"])
+            backup = shard_map(local, mesh, P(None, "data"),
+                               P(None, "data"))(state["panes"])
             return dict(state, panes=backup)
         return snap
 
@@ -267,10 +275,8 @@ class StreamExecutor:
         def restore(backup_state):
             def local(panes):
                 return jax.lax.ppermute(panes, "data", perm)
-            panes = jax.shard_map(local, mesh=mesh,
-                                  in_specs=P(None, "data"),
-                                  out_specs=P(None, "data"),
-                                  check_vma=False)(backup_state["panes"])
+            panes = shard_map(local, mesh, P(None, "data"),
+                              P(None, "data"))(backup_state["panes"])
             return dict(backup_state, panes=panes)
         return restore
 
@@ -283,10 +289,37 @@ class StreamExecutor:
         return target._shard_state(host)
 
     # ------------------------------------------------------------- run --
-    def step(self, state, batch):
+    def step(self, state, batch, valid_count: Optional[int] = None):
+        """One compiled step.  Pass ``valid_count`` (host-side event count,
+        known at staging time) to keep the call fully asynchronous — without
+        it the admission telemetry forces a device sync per step."""
         out = self._step(state, batch)
-        self._processed_since_ack += int(batch["valid"].sum())
+        if valid_count is None:
+            valid = batch["valid"]
+            valid_count = int(valid.sum() if isinstance(valid, np.ndarray)
+                              else jnp.sum(valid))
+        self._processed_since_ack += valid_count
         return out
+
+    def stage_batch(self, batch: Dict) -> Tuple[Dict, int]:
+        """Begin the host->device transfer of ``batch`` without blocking.
+
+        The copy overlaps whatever step is currently executing (async
+        dispatch), which is what pipelines ingestion against compute.
+        Returns ``(device_batch, valid_count)`` — the count is taken on the
+        host *before* the transfer so the hot loop never syncs.
+        """
+        count = int(np.asarray(batch["valid"]).sum())
+        shardings = self._batch_shardings
+        staged = {}
+        for k, v in batch.items():
+            if v is None:
+                staged[k] = v
+            elif shardings is not None and k in shardings:
+                staged[k] = jax.device_put(np.asarray(v), shardings[k])
+            else:
+                staged[k] = jax.device_put(np.asarray(v))
+        return staged, count
 
     def snapshot(self, state):
         return self._snapshot(state)
@@ -310,21 +343,45 @@ class StreamExecutor:
         return self._receive_window
 
     # ------------------------------------------------------------ bench --
+    #: device-held step outputs are converted to host arrays in chunks of
+    #: this many steps, bounding live buffers without a per-step sync
+    COLLECT_CHUNK = 64
+
     def run_stream(self, event_gen: Callable[[int, int], Dict],
                    n_steps: int, collect: bool = True):
-        """Drive ``n_steps`` steps; returns (state, results list)."""
+        """Drive ``n_steps`` steps; returns (state, results list).
+
+        The loop is pipelined: batch ``i+1`` is staged host->device while
+        step ``i`` executes, and step outputs stay on device (futures)
+        until a chunk boundary — no per-step host synchronization.
+        """
         state = self.init_state()
         results = []
-        B = self.cfg.batch_size
-        for i in range(n_steps):
-            batch = event_gen(i * B, B)
-            state, out = self.step(state, batch)
-            if self.cfg.snapshot_every and (i + 1) % self.cfg.snapshot_every == 0:
-                self._last_backup = self.snapshot(state)
-            if collect:
+        pending_outs = []
+
+        def _harvest():
+            for out in pending_outs:
                 valid = np.asarray(out["valid"])
                 if valid.any():
                     results.append(
                         (np.asarray(out["window_ends"])[valid],
                          np.asarray(out["results"])[valid.nonzero()[0]]))
+            pending_outs.clear()
+
+        B = self.cfg.batch_size
+        snap_every = self.cfg.snapshot_every
+        nxt, nxt_count = self.stage_batch(event_gen(0, B))
+        for i in range(n_steps):
+            batch, count = nxt, nxt_count
+            if i + 1 < n_steps:
+                # pipelining: next batch's transfer overlaps this step
+                nxt, nxt_count = self.stage_batch(event_gen((i + 1) * B, B))
+            state, out = self.step(state, batch, valid_count=count)
+            if snap_every and (i + 1) % snap_every == 0:
+                self._last_backup = self.snapshot(state)
+            if collect:
+                pending_outs.append(out)
+                if len(pending_outs) >= self.COLLECT_CHUNK:
+                    _harvest()
+        _harvest()
         return state, results

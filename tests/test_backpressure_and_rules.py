@@ -80,10 +80,9 @@ def test_coalescer_min_rule_and_done_exclusion():
 
 @pytest.fixture(scope="module")
 def mesh():
-    import numpy as np
-    devs = np.asarray(jax.devices()[:1] * 1)
     # rule logic only reads mesh.shape / axis_names; build an abstract mesh
-    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    from repro.compat import abstract_mesh
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 def test_param_rules_train_vs_serve(mesh):

@@ -14,6 +14,7 @@ SCRIPT = textwrap.dedent("""
     import numpy as np
     import jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
     from repro.launch.mesh import make_smoke_mesh
     from repro.runtime.compression import compressed_psum
 
@@ -27,10 +28,8 @@ SCRIPT = textwrap.dedent("""
     def comp(g):
         return compressed_psum(g, "data")
 
-    ex = jax.jit(jax.shard_map(exact, mesh=mesh, in_specs=P("data"),
-                               out_specs=P("data"), check_vma=False))(g_local)
-    cp = jax.jit(jax.shard_map(comp, mesh=mesh, in_specs=P("data"),
-                               out_specs=P("data"), check_vma=False))(g_local)
+    ex = jax.jit(shard_map(exact, mesh, P("data"), P("data")))(g_local)
+    cp = jax.jit(shard_map(comp, mesh, P("data"), P("data")))(g_local)
     err = float(jnp.max(jnp.abs(ex - cp)))
     scale = float(jnp.max(jnp.abs(g_local))) / 127.0
     assert err <= scale + 1e-6, (err, scale)
@@ -54,9 +53,8 @@ SCRIPT = textwrap.dedent("""
                 g = compressed_psum(g, "data") if compressed \\
                     else jax.lax.pmean(g, "data")
                 return g
-            g = jax.shard_map(inner, mesh=mesh,
-                              in_specs=(P(), P("data"), P("data")),
-                              out_specs=P(), check_vma=False)(w, Xs, ys)
+            g = shard_map(inner, mesh,
+                          (P(), P("data"), P("data")), P())(w, Xs, ys)
             return w - 0.05 * g
         step = jax.jit(step_fn)
         for _ in range(60):

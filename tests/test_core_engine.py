@@ -33,8 +33,9 @@ def test_map_filter_fusion_single_node():
        .map(lambda x: x + 1)
        .write_to(lambda: CollectorSink(out)))
     dag = p.to_dag()
-    # fusion: source, ONE fused compute vertex, sink
-    assert len(dag.vertices) == 3
+    # source fusion: the whole stateless chain runs inside the source
+    # vertex, leaving just source + sink
+    assert len(dag.vertices) == 2
     run_batch(cluster, p)
     values = sorted(ev.value for ev in out)
     assert values == sorted(x * 2 + 1 for x in range(100) if (x * 2) % 4 == 0)
