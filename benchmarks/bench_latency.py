@@ -24,6 +24,9 @@ from typing import Dict, List, Optional
 import numpy as np
 
 REPORT_PCTS = (50.0, 90.0, 99.0, 99.9, 99.99)
+#: a p99.99 needs at least this many samples before the quantile is a
+#: measurement rather than "roughly the max of a small run"
+P9999_MIN_SAMPLES = 10_000
 
 
 class LatencyHistogram:
@@ -104,6 +107,12 @@ class LatencyHistogram:
         out["min"] = round(0.0 if self.total == 0 else self.min_us / 1000.0, 3)
         out["max"] = round(self.max_us / 1000.0, 3)
         out["samples"] = self.total
+        if self.total < P9999_MIN_SAMPLES:
+            # 1 in 10k: with fewer samples the quantile is just the max of
+            # a small run — report it as unreliable instead of meaningless
+            out["p99.99"] = None
+            out["warning"] = (f"p99.99 unreliable: {self.total} samples "
+                              f"< {P9999_MIN_SAMPLES}")
         return out
 
 
@@ -115,20 +124,30 @@ class LatencyHistogram:
 def host_q5_latency(rate: float = 20_000, duration_s: float = 4.0,
                     window_ms: int = 1000, slide_ms: int = 20,
                     n_keys: int = 100, threads: int = 2,
-                    warmup_s: float = 1.0) -> Dict:
+                    warmup_s: float = 1.0, disorder_ms: int = 0,
+                    disorder_seed: int = 7) -> Dict:
     """Paced Q5 on the host tier; returns percentiles + events/s/core.
+
+    ``disorder_ms`` > 0 runs the generator through a seeded bounded shuffle
+    (events arrive up to that much event time out of order) with a matching
+    watermark lag — the p99.99 then includes the completeness wait the lag
+    imposes, which is the honest cost of disorder tolerance.
 
     The whole cluster simulation runs on one OS thread, so aggregate
     events/s == events/s/core."""
     from repro.core import (JetCluster, JobConfig, PacedGeneratorSource,
                             WallClock)
     from repro.core.engine import JOB_COMPLETED
-    from repro.nexmark import NexmarkGenerator, queries
+    from repro.nexmark import (DisorderedNexmarkGenerator, NexmarkGenerator,
+                               queries)
     from .common import _SinkAdapter
 
     clock = WallClock()
     cluster = JetCluster(n_nodes=1, cooperative_threads=threads, clock=clock)
     gen = NexmarkGenerator(rate=rate, n_keys=n_keys)
+    if disorder_ms > 0:
+        gen = DisorderedNexmarkGenerator(gen, max_skew_ms=disorder_ms,
+                                         seed=disorder_seed)
     hist = LatencyHistogram()
     total = int(rate * duration_s)
     t0_holder = [None]
@@ -145,7 +164,8 @@ def host_q5_latency(rate: float = 20_000, duration_s: float = 4.0,
             hist.record((now - ideal) * 1e6)
 
     p = queries.q5(
-        lambda: PacedGeneratorSource(gen, rate=rate, max_events=total),
+        lambda: PacedGeneratorSource(gen, rate=rate, max_events=total,
+                                     wm_lag=disorder_ms),
         lambda: _SinkAdapter(sink), window_ms=window_ms, slide_ms=slide_ms)
     t0_holder[0] = clock.now()
     cut_holder[0] = t0_holder[0] + warmup_s
@@ -160,6 +180,7 @@ def host_q5_latency(rate: float = 20_000, duration_s: float = 4.0,
     return {
         "tier": "host", "query": "q5", "rate": rate,
         "window_ms": window_ms, "slide_ms": slide_ms,
+        "disorder_ms": disorder_ms,
         "events_per_sec_per_core": round(total / wall, 0),
         "latency_ms": hist.summary_ms(),
         "engine": {k: stats[k] for k in ("items_in", "items_out", "calls",
@@ -270,14 +291,13 @@ def device_q5_latency(steps: int = 2000, batch: int = 4096,
 # ---------------------------------------------------------------------------
 
 
-def run(quick: bool = True) -> Dict:
+def run(quick: bool = True, disorder_ms: int = 100) -> Dict:
     host_rate = 20_000
     host = host_q5_latency(rate=host_rate,
                            duration_s=4.0 if quick else 10.0)
     host["saturation_events_per_sec_per_core"] = round(
         host_q5_saturation(n_events=600_000 if quick else 2_000_000), 0)
-    device = device_q5_latency(steps=1000 if quick else 10_000)
-    return {
+    result = {
         "meta": {
             "metric": "event-time -> emission latency (ms), "
                       "HdrHistogram-style recording",
@@ -287,8 +307,15 @@ def run(quick: bool = True) -> Dict:
             "quick": quick,
         },
         "host": host,
-        "device": device,
     }
+    if disorder_ms > 0:
+        # the paper's "handles out-of-order streams" claim, measured: same
+        # query under bounded skew with a matching watermark lag
+        result["host_disordered"] = host_q5_latency(
+            rate=host_rate, duration_s=4.0 if quick else 10.0,
+            disorder_ms=disorder_ms)
+    result["device"] = device_q5_latency(steps=1000 if quick else 10_000)
+    return result
 
 
 def write_report(result: Dict,
@@ -300,18 +327,24 @@ def write_report(result: Dict,
     return path
 
 
-def rows(quick: bool = True) -> List[Dict]:
+def rows(quick: bool = True, disorder_ms: int = 100) -> List[Dict]:
     """CSV-row shaped output for benchmarks.run."""
-    result = run(quick)
+    result = run(quick, disorder_ms=disorder_ms)
     write_report(result)
     out = []
-    for tier in ("host", "device"):
-        r = result[tier]
+    for tier in ("host", "host_disordered", "device"):
+        r = result.get(tier)
+        if r is None:
+            continue
         lat = r["latency_ms"]
         row = {"figure": f"latency_{tier}",
                "events_per_sec_per_core": r["events_per_sec_per_core"],
                **{k: lat[k] for k in ("p50", "p99", "p99.9", "p99.99")},
                "samples": lat["samples"]}
+        if lat.get("warning"):
+            row["warning"] = lat["warning"]
+        if r.get("disorder_ms"):
+            row["disorder_ms"] = r["disorder_ms"]
         if "saturation_events_per_sec_per_core" in r:
             row["saturation_events_per_sec_per_core"] = \
                 r["saturation_events_per_sec_per_core"]
@@ -323,8 +356,11 @@ if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--disorder", type=int, default=100, metavar="SKEW_MS",
+                    help="bounded-shuffle skew for the disordered host run "
+                         "(0 disables it)")
     args = ap.parse_args()
-    result = run(quick=not args.full)
+    result = run(quick=not args.full, disorder_ms=args.disorder)
     p = write_report(result)
     print(json.dumps(result, indent=1, default=float))
     print(f"# wrote {p}")

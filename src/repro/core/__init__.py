@@ -4,7 +4,7 @@ watermarks, windows, Chandy-Lamport snapshots and backpressure."""
 from .clock import Clock, VirtualClock, WallClock
 from .dag import DAG, Edge, PARTITION_COUNT, Routing, Vertex
 from .engine import (JetCluster, Job, JobConfig, JOB_COMPLETED, JOB_RUNNING)
-from .events import Barrier, DONE, Event, Watermark
+from .events import Barrier, DONE, Event, LateEvent, Watermark
 from .pipeline import Pipeline, group_aggregate
 from .processor import (FilterProcessor, FlatMapProcessor,
                         FusedFunctionProcessor, Inbox, MapProcessor, Outbox,
@@ -14,14 +14,16 @@ from .sources import (CollectorSink, Journal, JournalSource, ListSource,
 from .tasklet import (GUARANTEE_AT_LEAST_ONCE, GUARANTEE_EXACTLY_ONCE,
                       GUARANTEE_NONE)
 from .watermark import EventTimePolicy, WatermarkCoalescer
-from .window import (AggregateOperation, averaging, co_aggregate, counting,
-                     max_by, sliding, summing, to_list, tumbling)
+from .window import (AggregateOperation, SessionResult, SessionWindowDef,
+                     SessionWindowProcessor, WindowResult, averaging,
+                     co_aggregate, counting, max_by, session, sliding,
+                     summing, to_list, tumbling)
 
 __all__ = [
     "Clock", "VirtualClock", "WallClock",
     "DAG", "Edge", "PARTITION_COUNT", "Routing", "Vertex",
     "JetCluster", "Job", "JobConfig", "JOB_COMPLETED", "JOB_RUNNING",
-    "Barrier", "DONE", "Event", "Watermark",
+    "Barrier", "DONE", "Event", "LateEvent", "Watermark",
     "Pipeline", "group_aggregate",
     "FilterProcessor", "FlatMapProcessor", "FusedFunctionProcessor",
     "Inbox", "MapProcessor", "Outbox", "Processor", "SinkProcessor",
@@ -29,6 +31,8 @@ __all__ = [
     "PacedGeneratorSource",
     "GUARANTEE_AT_LEAST_ONCE", "GUARANTEE_EXACTLY_ONCE", "GUARANTEE_NONE",
     "EventTimePolicy", "WatermarkCoalescer",
-    "AggregateOperation", "averaging", "co_aggregate", "counting", "max_by",
-    "sliding", "summing", "to_list", "tumbling",
+    "AggregateOperation", "SessionResult", "SessionWindowDef",
+    "SessionWindowProcessor", "WindowResult", "averaging", "co_aggregate",
+    "counting", "max_by", "session", "sliding", "summing", "to_list",
+    "tumbling",
 ]

@@ -39,6 +39,23 @@ class Event:
         return f"Event(ts={self.ts}, key={self.key!r}, value={self.value!r})"
 
 
+class LateEvent(Event):
+    """A data event that arrived behind the watermark by more than the
+    window's allowed lateness.
+
+    Window processors emit the original (ts, key, value) wrapped in this
+    type onto their out-edges; a ``late_sink`` attached via the Pipeline
+    API receives exactly these, while the regular downstream ignores them.
+    Being an :class:`Event` subclass it routes like any data item
+    (partitioned edges read ``.key``)."""
+
+    __slots__ = ()
+
+    def __repr__(self):  # pragma: no cover
+        return (f"LateEvent(ts={self.ts}, key={self.key!r}, "
+                f"value={self.value!r})")
+
+
 class Watermark:
     """Asserts that no event with ``ts < self.ts`` will arrive on this edge."""
 

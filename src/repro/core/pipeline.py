@@ -18,11 +18,12 @@ import itertools
 from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 from .dag import DAG, Edge, Routing
-from .events import Event
+from .events import Event, LateEvent
 from .processor import (FusedFunctionProcessor, Inbox, Processor,
                         SinkProcessor)
 from .window import (AccumulateByFrameProcessor, AggregateOperation,
-                     CombineFramesProcessor, SlidingWindowDef)
+                     CombineFramesProcessor, SessionWindowDef,
+                     SessionWindowProcessor, SlidingWindowDef)
 
 
 # ---------------------------------------------------------------------------
@@ -110,28 +111,53 @@ class KeyedStage(GeneralStage):
     """A stage with a grouping key assigned; adds windowing on top of the
     general transforms (a keyed custom_transform routes by the key)."""
 
-    def window(self, wdef: SlidingWindowDef) -> "WindowedStage":
+    def window(self, wdef) -> "WindowedStage":
+        """``wdef``: a :class:`SlidingWindowDef` or :class:`SessionWindowDef`."""
         return WindowedStage(self.pipeline, self.stage, wdef)
 
 
 class WindowedStage:
-    def __init__(self, pipeline: "Pipeline", stage: _Stage,
-                 wdef: SlidingWindowDef):
+    def __init__(self, pipeline: "Pipeline", stage: _Stage, wdef):
         self.pipeline = pipeline
         self.stage = stage
         self.wdef = wdef
+        self._lateness = 0
+        self._late_sink: Optional[Callable[[], Processor]] = None
+
+    def allowed_lateness(self, lateness: int) -> "WindowedStage":
+        """Keep windows re-firable for ``lateness`` event-time past the
+        watermark: admissible late events update already-emitted results;
+        anything later is dropped (and counted / side-routed)."""
+        if lateness < 0:
+            raise ValueError("allowed_lateness must be >= 0")
+        self._lateness = lateness
+        return self
+
+    def late_sink(self, sink_supplier: Callable[[], Processor]
+                  ) -> "WindowedStage":
+        """Route events later than the allowed lateness to this sink (as
+        :class:`~repro.core.events.LateEvent`) instead of dropping them."""
+        self._late_sink = sink_supplier
+        return self
 
     def aggregate(self, op: AggregateOperation) -> GeneralStage:
         st = _Stage(self.pipeline, "window_agg", "win_agg", [self.stage],
-                    {"wdef": self.wdef, "op": op})
+                    {"wdef": self.wdef, "op": op,
+                     "lateness": self._lateness,
+                     "late_sink": self._late_sink})
         return GeneralStage(self.pipeline, st)
 
     def aggregate2(self, other: KeyedStage,
                    op: AggregateOperation) -> GeneralStage:
         """Two-input windowed co-aggregation (windowed join substrate,
         NEXMark Q8)."""
+        if isinstance(self.wdef, SessionWindowDef):
+            raise ValueError("session windows are single-input")
         st = _Stage(self.pipeline, "window_agg2", "win_agg2",
-                    [self.stage, other.stage], {"wdef": self.wdef, "op": op})
+                    [self.stage, other.stage],
+                    {"wdef": self.wdef, "op": op,
+                     "lateness": self._lateness,
+                     "late_sink": self._late_sink})
         return GeneralStage(self.pipeline, st)
 
 
@@ -275,6 +301,79 @@ class ChainedSourceProcessor(Processor):
 
     def close(self) -> None:
         self.inner.close()
+
+
+# ---------------------------------------------------------------------------
+# Late-event side output
+# ---------------------------------------------------------------------------
+
+
+class LateSplitProcessor(Processor):
+    """Feeds only :class:`LateEvent` items to the wrapped sink processor.
+
+    A window vertex with a late side output emits LateEvents interleaved
+    with its regular output; the tasklet fan-out broadcasts every item to
+    every out-edge, so each endpoint filters for its half: this wrapper on
+    the late edge, the combiner / a drop-filter on the main edge.
+    """
+
+    def __init__(self, inner: Processor):
+        self.inner = inner
+        self.is_cooperative = inner.is_cooperative
+        #: LateEvents the wrapped sink deferred under backpressure — kept
+        #: (not dropped) per the processor contract and re-offered later
+        self._pending = Inbox()
+        # expose the inner sink's snapshot hooks (transactional/idempotent
+        # late sinks), mirroring ChainedSourceProcessor
+        if hasattr(inner, "snapshot_partition"):
+            self.snapshot_partition = inner.snapshot_partition
+        if hasattr(inner, "on_snapshot_committed"):
+            self.on_snapshot_committed = inner.on_snapshot_committed
+
+    def init(self, outbox, ctx) -> None:
+        super().init(outbox, ctx)
+        self.inner.init(outbox, ctx)
+
+    def process(self, ordinal: int, inbox: Inbox) -> None:
+        pend = self._pending
+        for ev in inbox:
+            if isinstance(ev, LateEvent):
+                pend.add(ev)
+        inbox.clear()
+        if len(pend):
+            self.inner.process(ordinal, pend)
+
+    def complete(self) -> bool:
+        if not self._drain_pending():
+            return False
+        return self.inner.complete()
+
+    def _drain_pending(self) -> bool:
+        if len(self._pending):
+            self.inner.process(0, self._pending)
+        return not len(self._pending)
+
+    # -- snapshots: deferred LateEvents are pre-barrier input and must be
+    # consumed (or the save retried) before the barrier, else a restore
+    # loses them — replay resumes after the barrier and never re-delivers
+    def save_to_snapshot(self) -> bool:
+        if not self._drain_pending():
+            return False
+        return self.inner.save_to_snapshot()
+
+    def restore_from_snapshot(self, items) -> None:
+        self.inner.restore_from_snapshot(items)
+
+    def finish_snapshot_restore(self) -> None:
+        self.inner.finish_snapshot_restore()
+
+    def close(self) -> None:
+        self.inner.close()
+
+
+def _drop_late_chain(ev):
+    """Fused-chain step: drop LateEvents on the main output path."""
+    return () if isinstance(ev, LateEvent) else (ev,)
 
 
 # ---------------------------------------------------------------------------
@@ -588,17 +687,27 @@ class _Planner:
         self.dag.edge(edge)
 
     def _plan_window_agg(self, st: _Stage) -> None:
-        wdef: SlidingWindowDef = st.params["wdef"]
+        wdef = st.params["wdef"]
         op: AggregateOperation = st.params["op"]
+        lateness: int = st.params.get("lateness", 0)
+        late_sink = st.params.get("late_sink")
+        if isinstance(wdef, SessionWindowDef):
+            self._plan_session_agg(st, wdef, op, lateness, late_sink)
+            return
         two_input = st.kind == "window_agg2"
         acc_name = st.name + ".accumulate"
         cmb_name = st.name + ".combine"
         ordinal_map = {0: 0, 1: 1} if two_input else None
+        has_late = late_sink is not None
         self.dag.vertex(acc_name,
                         lambda w=wdef, o=op, m=ordinal_map:
-                        AccumulateByFrameProcessor(w, o, m))
+                        AccumulateByFrameProcessor(
+                            w, o, m, allowed_lateness=lateness,
+                            late_output=has_late))
         self.dag.vertex(cmb_name,
-                        lambda w=wdef, o=op: CombineFramesProcessor(w, o))
+                        lambda w=wdef, o=op: CombineFramesProcessor(
+                            w, o, allowed_lateness=lateness,
+                            skip_late=has_late))
         # local partitioned edge(s) into the accumulator
         for i, up in enumerate(st.upstreams):
             e = Edge(self._vname(up), acc_name, dst_ordinal=i,
@@ -609,7 +718,46 @@ class _Planner:
                   distributed=True)
         e2.src_ordinal = self._next_ordinal(acc_name, "out")
         self.dag.edge(e2)
+        if has_late:
+            self._wire_late_sink(st.name, acc_name, late_sink)
         self.vertex_of[st] = cmb_name
+
+    def _plan_session_agg(self, st: _Stage, wdef: SessionWindowDef,
+                          op: AggregateOperation, lateness: int,
+                          late_sink) -> None:
+        """Sessions run as ONE keyed vertex on a distributed partitioned
+        edge — merging is key-local and the frame grid is data-dependent,
+        so there is no two-stage split."""
+        name = st.name + ".session"
+        has_late = late_sink is not None
+        self.dag.vertex(name,
+                        lambda w=wdef, o=op: SessionWindowProcessor(
+                            w, o, allowed_lateness=lateness,
+                            late_output=has_late))
+        e = Edge(self._vname(st.upstreams[0]), name,
+                 routing=Routing.PARTITIONED, distributed=True)
+        self._connect_up(st.upstreams[0], e)
+        if has_late:
+            self._wire_late_sink(st.name, name, late_sink)
+            # the session vertex now interleaves LateEvents with results on
+            # every out-edge: shield the main path with a drop filter
+            flt_name = st.name + ".drop-late"
+            self.dag.vertex(flt_name,
+                            lambda: FusedFunctionProcessor(_drop_late_chain))
+            ef = Edge(name, flt_name, routing=Routing.ISOLATED)
+            ef.src_ordinal = self._next_ordinal(name, "out")
+            self.dag.edge(ef)
+            name = flt_name
+        self.vertex_of[st] = name
+
+    def _wire_late_sink(self, stage_name: str, src_vertex: str,
+                        late_sink) -> None:
+        late_name = stage_name + ".late"
+        self.dag.vertex(late_name,
+                        lambda s=late_sink: LateSplitProcessor(s()))
+        e = Edge(src_vertex, late_name, routing=Routing.ISOLATED)
+        e.src_ordinal = self._next_ordinal(src_vertex, "out")
+        self.dag.edge(e)
 
     def _connect_up(self, up: _Stage, edge: Edge) -> None:
         src = self._vname(up)

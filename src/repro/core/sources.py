@@ -58,11 +58,15 @@ class PacedGeneratorSource(Processor):
     def __init__(self, gen_fn: Callable[[int], Tuple[int, Any, Any]],
                  rate: float, max_events: Optional[int] = None,
                  wm_policy: Optional[Callable[[], EventTimePolicy]] = None,
-                 wm_stride: int = 1):
+                 wm_stride: int = 1, wm_lag: int = 0):
         self.gen_fn = gen_fn
         self.rate = rate
         self.max_events = max_events
-        self.policy_factory = wm_policy or (lambda: EventTimePolicy(lag=0))
+        #: ``wm_lag``: shorthand for a bounded-out-of-orderness policy —
+        #: REQUIRED ( >= max skew) when gen_fn emits disordered timestamps,
+        #: or events behind the watermark get dropped as late downstream
+        self.policy_factory = wm_policy or (
+            lambda lag=wm_lag: EventTimePolicy(lag=lag))
         self.wm_stride = wm_stride
         self._seq = None           # next seq for THIS instance
         self._start = None         # absolute schedule anchor (cluster clock)
@@ -197,10 +201,13 @@ class JournalSource(Processor):
 
     def __init__(self, journal: Journal, finite: bool = True,
                  wm_policy: Optional[Callable[[], EventTimePolicy]] = None,
-                 rate: Optional[float] = None):
+                 rate: Optional[float] = None, wm_lag: int = 0):
         self.journal = journal
         self.finite = finite
-        self.policy_factory = wm_policy or (lambda: EventTimePolicy(lag=0))
+        #: ``wm_lag``: bounded out-of-orderness allowance for disordered
+        #: journals (see PacedGeneratorSource)
+        self.policy_factory = wm_policy or (
+            lambda lag=wm_lag: EventTimePolicy(lag=lag))
         #: events/second per instance, paced against the cluster clock
         #: (None = drain as fast as possible)
         self.rate = rate

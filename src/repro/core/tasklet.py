@@ -297,6 +297,10 @@ class ProcessorTasklet:
         self._pend_items: List[Any] = []
         self._pend_pos = 0
         self._pend_col = 0
+        #: fan-out flush: per-collector count of items accepted beyond
+        #: ``_pend_pos`` within the current data run (the shared cursor
+        #: advances by the minimum)
+        self._pend_col_offs: List[int] = [0] * len(collectors)
         self._pending_wm: Optional[Watermark] = None
         self._wm_processed = False
         self.coalescer = WatermarkCoalescer(len(in_queues)) if in_queues else None
@@ -621,29 +625,67 @@ class ProcessorTasklet:
                         pos += 1
                         self.items_out += 1
         else:
-            col = self._pend_col
+            # fan-out: every item goes to every collector before the shared
+            # cursor advances.  Runs of data events move in bulk per
+            # collector with independent progress (``_pend_col_offs``); the
+            # cursor advances by the minimum across collectors, so each
+            # queue still sees the exact per-item sequence it would have
+            # seen under the per-item protocol.
+            offs = self._pend_col_offs
+            n_cols = len(collectors)
             is_source = self.is_source
+            if not n_cols:
+                # terminal vertex with no out-edges: consume silently, the
+                # behaviour of the per-item loop this path replaced
+                self.items_out += n - pos
+                pos = n
+                progress = True
             while pos < n:
                 item = items[pos]
                 # a fused source with fan-out can interleave watermarks
                 # here too: they must take the control route on keyed edges
-                is_ctrl = is_source and not (item.__class__ is Event
-                                             or isinstance(item, Event))
-                blocked = False
-                while col < len(collectors):
-                    c = collectors[col]
-                    if not (c.offer_control(item) if is_ctrl
-                            else c.offer(item)):
-                        blocked = True
+                if is_source and not (item.__class__ is Event
+                                      or isinstance(item, Event)):
+                    col = self._pend_col
+                    blocked = False
+                    while col < n_cols:
+                        if not collectors[col].offer_control(item):
+                            blocked = True
+                            break
+                        col += 1
+                    self._pend_col = col
+                    if blocked:
                         break
-                    col += 1
+                    self._pend_col = 0
+                    pos += 1
+                    self.items_out += 1
+                    progress = True
+                    continue
+                # maximal run of data events starting at pos
+                if is_source:
+                    j = pos + 1
+                    while j < n and (items[j].__class__ is Event
+                                     or isinstance(items[j], Event)):
+                        j += 1
+                else:
+                    j = n
+                run = j - pos
+                blocked = False
+                for ci in range(n_cols):
+                    if offs[ci] < run:
+                        offs[ci] += collectors[ci].offer_many(
+                            items, pos + offs[ci], j)
+                        if offs[ci] < run:
+                            blocked = True
+                adv = min(offs)
+                if adv:
+                    pos += adv
+                    for ci in range(n_cols):
+                        offs[ci] -= adv
+                    self.items_out += adv
+                    progress = True
                 if blocked:
                     break
-                col = 0
-                pos += 1
-                self.items_out += 1
-                progress = True
-            self._pend_col = col
         if pos >= n:
             self._pend_items = []
             self._pend_pos = 0

@@ -23,7 +23,7 @@ from __future__ import annotations
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
-from .events import MIN_TIME, Event, Watermark
+from .events import MAX_TIME, MIN_TIME, Event, LateEvent, Watermark
 from .processor import Inbox, Processor
 
 
@@ -173,6 +173,23 @@ def sliding(size: int, slide: int) -> SlidingWindowDef:
     return SlidingWindowDef(size, slide)
 
 
+class SessionWindowDef:
+    """Gap-based session windows: events of one key closer than ``gap``
+    belong to the same session; a session closes when the watermark passes
+    its end (last event time + gap)."""
+
+    __slots__ = ("gap",)
+
+    def __init__(self, gap: int):
+        if gap <= 0:
+            raise ValueError("need gap > 0")
+        self.gap = gap
+
+
+def session(gap: int) -> SessionWindowDef:
+    return SessionWindowDef(gap)
+
+
 # ---------------------------------------------------------------------------
 # Stage 1: accumulate events into per-(key, frame) partial accumulators
 # ---------------------------------------------------------------------------
@@ -184,10 +201,19 @@ class AccumulateByFrameProcessor(Processor):
     Emits ``Event(ts=frame_end - 1, key, (frame_end, partial_acc))`` for
     every frame closed by a watermark; open frames are retained and
     snapshotted.
+
+    **Allowed lateness**: a frame stays admissible for ``allowed_lateness``
+    event-time past the watermark.  Events landing in an already-closed but
+    still-admissible frame accumulate into a fresh *delta* partial that is
+    emitted at the next watermark — the combiner re-fires the affected
+    windows with updated totals.  Events later than that are counted in
+    ``late_dropped`` and, with ``late_output``, wrapped in
+    :class:`~repro.core.events.LateEvent` for the late side output.
     """
 
     def __init__(self, wdef: SlidingWindowDef, op: AggregateOperation,
-                 ordinal_map: Optional[Dict[int, int]] = None):
+                 ordinal_map: Optional[Dict[int, int]] = None,
+                 allowed_lateness: int = 0, late_output: bool = False):
         self.wdef = wdef
         self.op = op
         # input edge ordinal -> accumulate_fn index (for co-aggregation)
@@ -195,35 +221,64 @@ class AccumulateByFrameProcessor(Processor):
         # (key, frame_ts) -> acc
         self.frames: Dict[Tuple[Any, int], Any] = {}
         self._emit_buf: deque = deque()
+        self.allowed_lateness = allowed_lateness
+        self.late_output = late_output
+        #: events that arrived too late to be admissible (deliberate drops)
+        self.late_dropped = 0
+        self._last_wm = MIN_TIME
 
     def process(self, ordinal: int, inbox: Inbox) -> None:
         acc_fn = self.op.accumulate_fns[self.ordinal_map.get(ordinal, 0)]
         frames, slide = self.frames, self.wdef.slide
         create = self.op.create
         get = frames.get
+        # frames at or below the horizon can no longer re-fire
+        horizon = self._last_wm - self.allowed_lateness
         # accumulation never backpressures: consume the whole batch in one
         # pass over the inbox (only data events reach a processor's inbox);
         # higher_frame_ts is inlined — it runs once per event
         for ev in inbox:
-            fkey = (ev.key, (ev.ts // slide + 1) * slide)
+            fts = (ev.ts // slide + 1) * slide
+            if fts <= horizon:
+                # frame's lateness horizon passed: deliberate drop, not the
+                # silent re-emission the pre-lateness code did
+                self.late_dropped += 1
+                if self.late_output:
+                    le = LateEvent(ev.ts, ev.key, ev.value)
+                    if not self.outbox.offer(le):
+                        self._emit_buf.append(le)
+                continue
+            fkey = (ev.key, fts)
             acc = get(fkey)
             frames[fkey] = acc_fn(create() if acc is None else acc, ev)
         inbox.clear()
 
-    def try_process_watermark(self, wm: Watermark) -> bool:
+    def _flush(self) -> bool:
         buf = self._emit_buf
-        if not buf:
-            closed = [(k, f) for (k, f) in self.frames if f <= wm.ts]
-            closed.sort(key=lambda kf: kf[1])
-            for key, fts in closed:
-                buf.append(Event(fts - 1, key, (fts, self.frames.pop((key, fts)))))
         while buf:
             if not self.outbox.offer(buf[0]):
                 return False
             buf.popleft()
         return True
 
+    def try_process_watermark(self, wm: Watermark) -> bool:
+        # leftovers (backpressured LateEvents) go out first: the close work
+        # below must still happen for THIS watermark afterwards, or the
+        # forwarded watermark would overtake its closed frames
+        if not self._flush():
+            return False
+        if wm.ts > self._last_wm:       # close exactly once per watermark
+            self._last_wm = wm.ts
+            buf = self._emit_buf
+            closed = [(k, f) for (k, f) in self.frames if f <= wm.ts]
+            closed.sort(key=lambda kf: kf[1])
+            for key, fts in closed:
+                buf.append(Event(fts - 1, key, (fts, self.frames.pop((key, fts)))))
+        return self._flush()
+
     def complete(self) -> bool:
+        if not self._flush():
+            return False
         # batch semantics: flush every open frame
         for (key, fts), acc in sorted(self.frames.items(),
                                       key=lambda kv: kv[0][1]):
@@ -234,8 +289,18 @@ class AccumulateByFrameProcessor(Processor):
 
     # -- snapshots ------------------------------------------------------------
     def save_to_snapshot(self) -> bool:
+        # pre-barrier outputs stuck in the emit buffer (backpressured
+        # LateEvents) must leave before the barrier, or a restore loses them
+        if not self._flush():
+            return False
         for (key, fts), acc in self.frames.items():
             self.outbox.offer_to_snapshot((key, fts), acc)
+        # _last_wm is deliberately NOT snapshotted: replay (at-least-once
+        # especially) re-delivers events from behind the snapshot watermark
+        # that must re-accumulate, so the lateness horizon rebuilds from
+        # the replayed stream's own watermarks.  Transiently admitting a
+        # borderline-late event only re-fires a window with a more complete
+        # value; a restored horizon would DROP replayed data.
         return True
 
     def restore_from_snapshot(self, items) -> None:
@@ -290,21 +355,39 @@ class CombineFramesProcessor(Processor):
     """
 
     def __init__(self, wdef: SlidingWindowDef, op: AggregateOperation,
-                 use_deduct: Optional[bool] = None):
+                 use_deduct: Optional[bool] = None,
+                 allowed_lateness: int = 0, skip_late: bool = False):
         self.wdef = wdef
         self.op = op
+        #: lateness disables the O(1) deduct path: re-firing a window needs
+        #: its full frame set recombined, so frames must be retained (not
+        #: folded into a running accumulator) until the lateness horizon
+        self.allowed_lateness = allowed_lateness
         self.use_deduct = (op.deduct is not None if use_deduct is None
                            else (use_deduct and op.deduct is not None))
+        if allowed_lateness > 0:
+            self.use_deduct = False
+        #: drop LateEvents travelling on the shared accumulate->combine
+        #: edge when a late side output is wired upstream
+        self.skip_late = skip_late
         self.frames: Dict[Tuple[Any, int], Any] = {}   # (key, frame) -> acc
         self.key_state: Dict[Any, _KeyState] = {}
         self.next_win_end: Optional[int] = None        # next W to consider
         self._emit_buf: deque = deque()
+        #: (key, window_end) pairs whose result must be re-emitted because a
+        #: late delta partial arrived after the window fired
+        self._refire: set = set()
 
     # -- ingest ----------------------------------------------------------------
     def process(self, ordinal: int, inbox: Inbox) -> None:
         frames, combine = self.frames, self.op.combine
         key_state = self.key_state
+        lateness = self.allowed_lateness
+        skip_late = self.skip_late
+        size, slide = self.wdef.size, self.wdef.slide
         for ev in inbox:
+            if skip_late and isinstance(ev, LateEvent):
+                continue
             fts, acc = ev.value
             ks = key_state.get(ev.key)
             if ks is None:
@@ -314,7 +397,20 @@ class CombineFramesProcessor(Processor):
             frames[fkey] = acc if cur is None else combine(cur, acc)
             if fts > ks.max_frame:
                 ks.max_frame = fts
-            if self.next_win_end is None or fts < self.next_win_end:
+            if lateness and fts <= ks.last_emitted:
+                # late delta: every window covering this frame whose
+                # emission point already passed re-fires with the updated
+                # total (including windows that fired empty — the emission
+                # loop's last_emitted guard would otherwise skip them).
+                # NOT rewinding next_win_end here: the refire set covers
+                # the emitted range, and a rewind would make the next
+                # emission pass re-walk every slide from here to the front
+                w = fts
+                last = min(ks.last_emitted, fts + size - slide)
+                while w <= last:
+                    self._refire.add((ev.key, w))
+                    w += slide
+            elif self.next_win_end is None or fts < self.next_win_end:
                 # earliest window this frame participates in
                 self.next_win_end = fts
         inbox.clear()
@@ -359,10 +455,27 @@ class CombineFramesProcessor(Processor):
             f += slide
         return acc
 
+    def _emit_refires(self) -> None:
+        """Re-emit updated results for windows hit by late delta frames."""
+        if not self._refire:
+            return
+        op = self.op
+        for key, w in sorted(self._refire, key=lambda kw: kw[1]):
+            ks = self.key_state.get(key)
+            if ks is None:
+                continue
+            acc = self._window_value(key, ks, w)
+            if acc is not None:
+                self._emit_buf.append(
+                    Event(w - 1, key, WindowResult(w, key, op.export(acc))))
+        self._refire.clear()
+
     def _emit_windows_up_to(self, up_to: int) -> None:
+        self._emit_refires()
         if self.next_win_end is None:
             return
         slide, size = self.wdef.slide, self.wdef.size
+        lateness = self.allowed_lateness
         op = self.op
         # align the first candidate window end to the slide grid
         w = -(-self.next_win_end // slide) * slide
@@ -385,27 +498,51 @@ class CombineFramesProcessor(Processor):
                     self._emit_buf.append(
                         Event(w - 1, key, WindowResult(w, key, op.export(acc))))
                 ks.last_emitted = w
-                if ks.max_frame <= w - size + slide and (ks.ring is None
-                                                         or not ks.ring):
+                if (not lateness and ks.max_frame <= w - size + slide
+                        and (ks.ring is None or not ks.ring)):
+                    # with lateness the key state must outlive the window:
+                    # ``last_emitted`` decides whether a late frame re-fires
+                    # or opens fresh windows (GC'd in the sweep below)
                     del self.key_state[key]
             if not self.use_deduct:
-                evict_to = w - size + slide
+                # frames feed re-fires until every window covering them is
+                # past the lateness horizon
+                evict_to = w - size + slide - lateness
                 for fkey in [fk for fk in self.frames if fk[1] <= evict_to]:
                     del self.frames[fkey]
             w += slide
             self.next_win_end = w
+        if lateness:
+            # GC keys whose frames are all evicted AND whose emission front
+            # is old enough that any still-admissible frame (fts > wm -
+            # lateness > last_emitted) would only open fresh windows
+            evict_to = last_w - size + slide - lateness
+            stale = [key for key, ks in self.key_state.items()
+                     if ks.max_frame <= evict_to
+                     and ks.last_emitted + lateness <= up_to]
+            for key in stale:
+                del self.key_state[key]
 
     def try_process_watermark(self, wm: Watermark) -> bool:
-        if not self._emit_buf:
-            self._emit_windows_up_to(wm.ts)
+        # flush leftovers first, then close for THIS watermark (idempotent:
+        # per-key last_emitted guards + next_win_end make a re-entry after
+        # partial flush a no-op) — returning True without the close would
+        # forward the watermark ahead of the windows it closes
+        if not self._flush():
+            return False
+        self._emit_windows_up_to(wm.ts)
         return self._flush()
 
     def complete(self) -> bool:
-        if not self._emit_buf:
-            top = max((ks.max_frame for ks in self.key_state.values()),
-                      default=None)
-            if top is not None:
-                self._emit_windows_up_to(top + self.wdef.size - self.wdef.slide)
+        # no emptiness guard: emission is idempotent (per-key last_emitted,
+        # refires clear as they queue), and gating it on a drained buffer
+        # would drop the final windows when LateEvents sit buffered at DONE
+        top = max((ks.max_frame for ks in self.key_state.values()),
+                  default=None)
+        if top is not None:
+            self._emit_windows_up_to(top + self.wdef.size - self.wdef.slide)
+        else:
+            self._emit_refires()
         return self._flush()
 
     def _flush(self) -> bool:
@@ -418,18 +555,27 @@ class CombineFramesProcessor(Processor):
 
     # -- snapshots ------------------------------------------------------------
     def save_to_snapshot(self) -> bool:
+        # backpressured window results must precede the barrier: the frames
+        # that produced them are already evicted, so a restore that loses
+        # the buffer can never regenerate them
+        if not self._flush():
+            return False
         for (key, fts), acc in self.frames.items():
             self.outbox.offer_to_snapshot(("f", key, fts), acc)
         for key, ks in self.key_state.items():
             self.outbox.offer_to_snapshot(
                 ("k", key), (ks.max_frame, ks.last_emitted, ks.ring))
+        for key, w in self._refire:
+            self.outbox.offer_to_snapshot(("r", key, w), True)
         return True
 
     def restore_from_snapshot(self, items) -> None:
         combine = self.op.combine
         for skey, val in items:
             tag = skey[0]
-            if tag == "f":
+            if tag == "r":
+                self._refire.add((skey[1], skey[2]))
+            elif tag == "f":
                 _, key, fts = skey
                 cur = self.frames.get((key, fts))
                 self.frames[(key, fts)] = (val if cur is None
@@ -464,6 +610,224 @@ class CombineFramesProcessor(Processor):
         pass
 
     def snapshot_partition(self, skey):
-        # ("f", key, fts) and ("k", key) both partition by the event key
+        # ("f", key, fts), ("k", key), ("r", key, w): partition by event key
+        from .dag import PARTITION_COUNT
+        return hash(skey[1]) % PARTITION_COUNT
+
+
+# ---------------------------------------------------------------------------
+# Session windows: gap-based, key-local merge, single stage
+# ---------------------------------------------------------------------------
+
+
+class SessionResult(WindowResult):
+    """Window result of a session: additionally carries the session start."""
+
+    __slots__ = ("window_start",)
+
+    def __init__(self, window_start: int, window_end: int, key, value):
+        super().__init__(window_end, key, value)
+        self.window_start = window_start
+
+    def __repr__(self):  # pragma: no cover
+        return (f"SessionResult([{self.window_start}, {self.window_end}), "
+                f"key={self.key!r}, value={self.value!r})")
+
+
+class _Session:
+    """One session interval [start, end) with its accumulator.
+
+    ``end`` is the session close time: last event ts + gap.  ``emitted``
+    marks a closed session whose result went out; a late admissible event
+    merging into it clears the flag so the updated result re-fires.
+    """
+
+    __slots__ = ("start", "end", "acc", "emitted")
+
+    def __init__(self, start: int, end: int, acc, emitted: bool = False):
+        self.start = start
+        self.end = end
+        self.acc = acc
+        self.emitted = emitted
+
+
+class SessionWindowProcessor(Processor):
+    """Gap-based session windows (NEXMark Q11's "bids per user session").
+
+    Unlike the two-stage sliding plan, sessions run as ONE keyed vertex on a
+    distributed partitioned edge: merging is key-local and a session's frame
+    boundaries are data-dependent, so there is no fixed frame grid to split
+    the aggregation over (Jet makes the same choice).
+
+    Semantics:
+
+    * an event opens the interval ``[ts, ts + gap)``; intervals of one key
+      that touch are merged (accumulators combined via ``op.combine``);
+    * a session closes when the watermark reaches its end, emitting
+      ``Event(end - 1, key, SessionResult(start, end, key, export(acc)))``;
+    * closed sessions are retained for ``allowed_lateness``: an admissible
+      late event (``ts >= wm - allowed_lateness``) merges in and re-fires
+      the updated result; anything later is counted in ``late_dropped`` and
+      optionally forwarded as a :class:`LateEvent` (late side output);
+    * state snapshots per key through the standard
+      ``save_to_snapshot``/``restore_from_snapshot`` protocol, so sessions
+      survive restarts and topology changes exactly-once.
+    """
+
+    def __init__(self, sdef: SessionWindowDef, op: AggregateOperation,
+                 allowed_lateness: int = 0, late_output: bool = False):
+        self.gap = sdef.gap
+        self.op = op
+        self.allowed_lateness = allowed_lateness
+        self.late_output = late_output
+        self.late_dropped = 0
+        # key -> list of _Session sorted by start
+        self.sessions: Dict[Any, List[_Session]] = {}
+        self._emit_buf: deque = deque()
+        self._last_wm = MIN_TIME
+
+    # -- ingest ----------------------------------------------------------------
+    def _merge_interval(self, sess: List[_Session], lo: int,
+                        hi: int) -> Optional[_Session]:
+        """Collapse every session strictly overlapping ``[lo, hi)`` into one
+        (extended to cover [lo, hi)) and return it; None if none overlap.
+        Strict overlap: events separated by exactly ``gap`` start a NEW
+        session.  Per-key session counts are small (gap >> intra-burst
+        spacing), a scan is fine.  The caller folds its own contribution
+        into ``.acc``/``.emitted``."""
+        touching = [s for s in sess if s.start < hi and lo < s.end]
+        if not touching:
+            return None
+        merged = touching[0]
+        for other in touching[1:]:
+            merged.end = max(merged.end, other.end)
+            merged.start = min(merged.start, other.start)
+            merged.acc = self.op.combine(merged.acc, other.acc)
+            merged.emitted = merged.emitted and other.emitted
+            sess.remove(other)
+        merged.start = min(merged.start, lo)
+        merged.end = max(merged.end, hi)
+        return merged
+
+    def _merge_event(self, key, ts: int, ev: Event, acc_fn) -> None:
+        lo, hi = ts, ts + self.gap
+        sess = self.sessions.get(key)
+        if sess is None:
+            sess = self.sessions[key] = []
+        merged = self._merge_interval(sess, lo, hi)
+        if merged is None:
+            sess.append(_Session(lo, hi, acc_fn(self.op.create(), ev)))
+            sess.sort(key=lambda x: x.start)
+            return
+        merged.acc = acc_fn(merged.acc, ev)
+        # any content change invalidates a previously emitted result
+        merged.emitted = False
+
+    def process(self, ordinal: int, inbox: Inbox) -> None:
+        op = self.op
+        acc_fn = op.accumulate_fns[min(ordinal, len(op.accumulate_fns) - 1)]
+        horizon = self._last_wm - self.allowed_lateness
+        for ev in inbox:
+            ts = ev.ts
+            if ts < horizon:
+                self.late_dropped += 1
+                if self.late_output:
+                    le = LateEvent(ts, ev.key, ev.value)
+                    if not self.outbox.offer(le):
+                        self._emit_buf.append(le)
+                continue
+            self._merge_event(ev.key, ts, ev, acc_fn)
+        inbox.clear()
+
+    # -- emission ---------------------------------------------------------------
+    def _close_up_to(self, wm_ts: int, retain: bool) -> None:
+        """Emit every closed not-yet-emitted session; drop retained closed
+        sessions whose lateness horizon passed (``retain=False`` drops at
+        emission — batch completion)."""
+        op = self.op
+        ready: List[Tuple[int, Any, _Session]] = []
+        for key, sess in self.sessions.items():
+            for s in sess:
+                if s.end <= wm_ts and not s.emitted:
+                    ready.append((s.end, key, s))
+        ready.sort(key=lambda x: (x[0], x[2].start))
+        for end, key, s in ready:
+            self._emit_buf.append(
+                Event(end - 1, key,
+                      SessionResult(s.start, end, key, op.export(s.acc))))
+            s.emitted = True
+        drop_before = (wm_ts - self.allowed_lateness if retain
+                       else MAX_TIME)
+        for key in list(self.sessions):
+            kept = [s for s in self.sessions[key]
+                    if not (s.emitted and s.end <= drop_before)]
+            if kept:
+                self.sessions[key] = kept
+            else:
+                del self.sessions[key]
+
+    def try_process_watermark(self, wm: Watermark) -> bool:
+        # leftovers (backpressured LateEvents) first — then the close work
+        # must still run for THIS watermark, or it would be forwarded ahead
+        # of the session results it closes
+        if not self._flush():
+            return False
+        if wm.ts > self._last_wm:       # close exactly once per watermark
+            self._last_wm = wm.ts
+            self._close_up_to(wm.ts, retain=True)
+        return self._flush()
+
+    def complete(self) -> bool:
+        # unconditional: closing is idempotent (sessions emit once and are
+        # dropped), and gating on a drained buffer would lose every open
+        # session when LateEvents sit buffered at DONE
+        self._close_up_to(MAX_TIME, retain=False)
+        return self._flush()
+
+    def _flush(self) -> bool:
+        buf = self._emit_buf
+        while buf:
+            if not self.outbox.offer(buf[0]):
+                return False
+            buf.popleft()
+        return True
+
+    # -- snapshots ------------------------------------------------------------
+    def save_to_snapshot(self) -> bool:
+        # backpressured LateEvents are pre-barrier output: emit them before
+        # the barrier or a restore loses them
+        if not self._flush():
+            return False
+        for key, sess in self.sessions.items():
+            self.outbox.offer_to_snapshot(
+                ("s", key),
+                [(s.start, s.end, s.acc, s.emitted) for s in sess])
+        # _last_wm deliberately not snapshotted — same rationale as
+        # AccumulateByFrameProcessor: the horizon rebuilds from replayed
+        # watermarks; restoring it would drop replayed events
+        return True
+
+    def restore_from_snapshot(self, items) -> None:
+        combine = self.op.combine
+        for (tag, key), vals in items:
+            if tag != "s":
+                continue
+            sess = self.sessions.get(key)
+            if sess is None:
+                self.sessions[key] = [
+                    _Session(st, en, acc, em) for st, en, acc, em in vals]
+                continue
+            # merge the restored intervals with whatever is already there
+            # (two snapshot shards of one key land on the same instance)
+            for st, en, acc, em in vals:
+                merged = self._merge_interval(sess, st, en)
+                if merged is None:
+                    sess.append(_Session(st, en, acc, em))
+                    continue
+                merged.acc = combine(merged.acc, acc)
+                merged.emitted = merged.emitted and em
+            sess.sort(key=lambda x: x.start)
+
+    def snapshot_partition(self, skey):
         from .dag import PARTITION_COUNT
         return hash(skey[1]) % PARTITION_COUNT

@@ -187,6 +187,11 @@ def attention(params, x, cfg, *, positions, compute_dtype,
             return y, None
         kc, vc = k, v
         if cfg.attention == "swa" and S >= cfg.swa_window:
+            # rolling-slot layout: decode writes position p at slot p % W,
+            # so the last W prefill positions S-W+i (i in [0, W)) must land
+            # at slot (S-W+i) % W = (S%W + i) % W — a roll by S % W.  (This
+            # is exactly what a token-by-token decode would have produced;
+            # verified bit-identical in test_swa_prefill_cache_rolls_*.)
             W = cfg.swa_window
             r = S % W
             kc = jnp.roll(kc[:, -W:], r, axis=1)

@@ -1,7 +1,8 @@
 """NEXMark benchmark workload (Tucker et al.) as used in the paper §7."""
 
 from .model import Person, Auction, Bid
-from .generator import NexmarkGenerator
+from .generator import DisorderedNexmarkGenerator, NexmarkGenerator
 from . import queries
 
-__all__ = ["Person", "Auction", "Bid", "NexmarkGenerator", "queries"]
+__all__ = ["Person", "Auction", "Bid", "DisorderedNexmarkGenerator",
+           "NexmarkGenerator", "queries"]

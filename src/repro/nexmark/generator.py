@@ -66,8 +66,71 @@ class NexmarkGenerator:
         return ts, aid, v
 
 
-def fill_journal(journal, generator: NexmarkGenerator, n_events: int) -> None:
-    """Pre-materialize events into a replayable journal (FT tests)."""
+class DisorderedNexmarkGenerator:
+    """Bounded-shuffle wrapper: the same events as ``inner``, emitted out of
+    timestamp order with event-time skew bounded by ``max_skew_ms``.
+
+    The sequence axis is cut into blocks of ``floor(max_skew_ms * rate /
+    1000)`` events (the floor is what keeps the within-block timestamp
+    spread at or under ``max_skew_ms``); each block is emitted in a seeded
+    Fisher-Yates permutation of itself.  Timestamps travel WITH their event (an event is
+    early/late relative to its ideal emission slot), so the disordered
+    stream contains exactly the ordered stream's events — window results
+    must match the ordered run whenever the watermark lag covers the skew.
+    Pure function of ``seq`` given ``seed``: replayable, deterministic,
+    parallelism-agnostic.
+
+    Note: the permutation is block-local, so a run truncated mid-block
+    draws a few tail events from beyond the cut (and omits their swapped
+    counterparts).  For exact ordered-vs-disordered multiset equality,
+    size runs to a multiple of ``self.block`` events.
+    """
+
+    def __init__(self, inner: NexmarkGenerator, max_skew_ms: int,
+                 seed: int = 0):
+        if max_skew_ms < 0:
+            raise ValueError("max_skew_ms must be >= 0")
+        self.inner = inner
+        self.rate = inner.rate
+        self.n_keys = inner.n_keys
+        self.max_skew_ms = max_skew_ms
+        self.seed = seed
+        # events whose ideal timestamps span <= max_skew_ms of event time;
+        # within-block ts spread is (block-1) * 1000/rate <= max_skew_ms
+        self.block = max(1, int(max_skew_ms * inner.rate / 1000))
+        self._perm_cache: dict = {}
+
+    def timestamp_ms(self, seq: int) -> int:
+        return self.inner.timestamp_ms(self._mapped(seq))
+
+    def _perm(self, block_idx: int):
+        perm = self._perm_cache.get(block_idx)
+        if perm is not None:
+            return perm
+        n = self.block
+        perm = list(range(n))
+        # Fisher-Yates driven by splitmix64 of (seed, block, step)
+        base = _mix64(self.seed * 0x9E3779B97F4A7C15 + block_idx)
+        for i in range(n - 1, 0, -1):
+            j = _mix64(base + i) % (i + 1)
+            perm[i], perm[j] = perm[j], perm[i]
+        if len(self._perm_cache) >= 8:
+            # block access is near-sequential: keep a small window
+            self._perm_cache.pop(min(self._perm_cache))
+        self._perm_cache[block_idx] = perm
+        return perm
+
+    def _mapped(self, seq: int) -> int:
+        b, off = divmod(seq, self.block)
+        return b * self.block + self._perm(b)[off]
+
+    def __call__(self, seq: int) -> Tuple[int, Any, Any]:
+        return self.inner(self._mapped(seq))
+
+
+def fill_journal(journal, generator, n_events: int) -> None:
+    """Pre-materialize events into a replayable journal (FT tests).
+    ``generator`` is a Nexmark or DisorderedNexmark generator."""
     for seq in range(n_events):
         ts, key, value = generator(seq)
         journal.append(ts, key, value)

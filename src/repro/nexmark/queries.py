@@ -16,7 +16,7 @@ from ..core.events import MIN_TIME, Event, Watermark
 from ..core.pipeline import Pipeline
 from ..core.processor import Inbox, Processor
 from ..core.window import (AggregateOperation, averaging, co_aggregate,
-                           counting, max_by, sliding, tumbling)
+                           counting, max_by, session, sliding, tumbling)
 from .model import Auction, Bid, Person
 
 USD_TO_EUR = 0.9
@@ -285,6 +285,147 @@ def q8(person_source, auction_source, sink,
     (persons.window(sliding(window_ms, slide_ms))
         .aggregate2(auctions, join_op)
         .filter(lambda wr: wr.value is not None)
+        .write_to(sink))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Q11 — bids per user session (gap-based session windows)
+# ---------------------------------------------------------------------------
+
+def q11(source, sink, gap_ms: int = 10_000, allowed_lateness: int = 0,
+        late_sink=None) -> Pipeline:
+    """How many bids did each user make in each of their active sessions?
+    The event-time-completeness showcase: session windows + allowed
+    lateness + optional late-event side output, correct under disorder."""
+    p = Pipeline.create()
+    win = (p.read_from(source, name="bids")
+             .filter(is_bid)
+             .with_key(lambda b: b.bidder)
+             .window(session(gap_ms))
+             .allowed_lateness(allowed_lateness))
+    if late_sink is not None:
+        win = win.late_sink(late_sink)
+    win.aggregate(counting()).write_to(sink)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Q12 — bids per bidder per processing-time window
+# ---------------------------------------------------------------------------
+
+class ProcessingTimeWindowProcessor(Processor):
+    """Tumbling *processing-time* window: frames are labelled by the
+    cluster clock at ARRIVAL, so disorder in event time is irrelevant by
+    construction (NEXMark Q12's defining property).  Emission is driven by
+    the clock — checked whenever data or a watermark arrives — rather than
+    by event-time watermarks."""
+
+    def __init__(self, size_ms: int, op: AggregateOperation):
+        from collections import deque
+        self.size_ms = size_ms
+        self.op = op
+        self.frames: Dict = {}          # (key, frame_end_ms) -> acc
+        self._t0: Optional[float] = None
+        self._emit = deque()
+        # frames from a restored snapshot (previous clock epoch); flushed
+        # as-is by finish_snapshot_restore, never merged with new frames
+        self._restored: Dict = {}
+
+    def _now_ms(self) -> int:
+        if self._t0 is None:
+            self._t0 = self.ctx.clock.now()
+        return int((self.ctx.clock.now() - self._t0) * 1000)
+
+    def process(self, ordinal: int, inbox: Inbox) -> None:
+        op, frames = self.op, self.frames
+        acc_fn, create = op.accumulate, op.create
+        size = self.size_ms
+        fend = (self._now_ms() // size + 1) * size
+        get = frames.get
+        for ev in inbox:
+            fkey = (ev.key, fend)
+            acc = get(fkey)
+            frames[fkey] = acc_fn(create() if acc is None else acc, ev)
+        inbox.clear()
+        self._emit_due()
+
+    def _emit_due(self) -> None:
+        now = self._now_ms()
+        due = [kf for kf in self.frames if kf[1] <= now]
+        due.sort(key=lambda kf: kf[1])
+        export = self.op.export
+        for key, fend in due:
+            self._emit.append(
+                Event(fend - 1, key,
+                      (fend, key, export(self.frames.pop((key, fend))))))
+        self._flush()
+
+    def _flush(self) -> bool:
+        while self._emit:
+            if not self.outbox.offer(self._emit[0]):
+                return False
+            self._emit.popleft()
+        return True
+
+    def try_process_watermark(self, wm: Watermark) -> bool:
+        # watermarks only serve as a liveness tick for the clock check
+        self._emit_due()
+        return self._flush()
+
+    def complete(self) -> bool:
+        # frames move into the emit queue unconditionally (popped as they
+        # go, so re-calls under backpressure are safe); gating on a drained
+        # queue would lose the final window of every key
+        export = self.op.export
+        for key, fend in sorted(self.frames, key=lambda kf: kf[1]):
+            self._emit.append(
+                Event(fend - 1, key,
+                      (fend, key, export(self.frames.pop((key, fend))))))
+        return self._flush()
+
+    def save_to_snapshot(self) -> bool:
+        # pre-barrier results stuck behind backpressure leave first
+        if not self._flush():
+            return False
+        for (key, fend), acc in self.frames.items():
+            self.outbox.offer_to_snapshot((key, fend), acc)
+        return True
+
+    def restore_from_snapshot(self, items) -> None:
+        combine = self.op.combine
+        for (key, fend), acc in items:
+            cur = self._restored.get((key, fend))
+            self._restored[(key, fend)] = (acc if cur is None
+                                           else combine(cur, acc))
+
+    def finish_snapshot_restore(self) -> None:
+        # frame labels are epoch-relative (clock restarts at 0 after a
+        # restore), so restored frames must NOT merge with the new epoch's
+        # frames of the same label: their processing-time interval ended
+        # with the old epoch — emit them immediately instead
+        export = self.op.export
+        for key, fend in sorted(self._restored, key=lambda kf: kf[1]):
+            self._emit.append(
+                Event(fend - 1, key,
+                      (fend, key, export(self._restored.pop((key, fend))))))
+
+    def snapshot_partition(self, skey):
+        from ..core.dag import PARTITION_COUNT
+        return hash(skey[0]) % PARTITION_COUNT
+
+
+def q12(source, sink, window_ms: int = 10_000) -> Pipeline:
+    """How many bids does each user make within a fixed *processing-time*
+    window? (Uses the cluster clock, not event timestamps.)"""
+    p = Pipeline.create()
+    (p.read_from(source, name="bids")
+        .filter(is_bid)
+        .with_key(lambda b: b.bidder)
+        .custom_transform(
+            "q12-ptime-window",
+            lambda: ProcessingTimeWindowProcessor(window_ms, counting()),
+            partitioned=True, distributed=True)
         .write_to(sink))
     return p
 

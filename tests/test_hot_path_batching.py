@@ -218,6 +218,104 @@ def test_fused_source_fanout_routes_watermarks():
     assert windows, "keyed branch emitted no window results"
 
 
+def test_fanout_flush_batched_equivalence():
+    """The multi-collector (fan-out) flush moves data runs in bulk with
+    per-collector progress; every queue must still see exactly the
+    per-item protocol's sequence — events in stream order on its route,
+    control items broadcast in position — under backpressure/resumption
+    (tiny queues force partial acceptance mid-run)."""
+    from repro.core.processor import Processor
+    from repro.core.tasklet import (GUARANTEE_NONE, ProcessorTasklet,
+                                    SnapshotContext)
+    from repro.core.events import DoneItem
+
+    items = []
+    for i in range(300):
+        items.append(Event(i, i % 7, i))
+        if i % 31 == 30:
+            # a fused source interleaves watermarks into the same outbox
+            items.append(Watermark(i))
+
+    class Src(Processor):
+        def __init__(self):
+            self._i = 0
+
+        def complete(self):
+            n = 0
+            while self._i < len(items) and n < 16:
+                if not self.outbox.offer(items[self._i]):
+                    return False
+                self._i += 1
+                n += 1
+            return self._i >= len(items)
+
+    qs_a = [SPSCQueue(8), SPSCQueue(8)]          # keyed branch
+    p2q = [pid % 2 for pid in range(PARTITION_COUNT)]
+    col_a = EdgeCollector(qs_a, Routing.PARTITIONED, None, p2q)
+    q_b = SPSCQueue(4)                           # raw sink branch
+    col_b = EdgeCollector([q_b], Routing.ISOLATED, None, None)
+    t = ProcessorTasklet("src", Src(), [], [col_a, col_b],
+                         SnapshotContext(GUARANTEE_NONE), "src", 0,
+                         is_source=True)
+    t.processor.init(t.outbox, None)
+    got_a, got_b = [[], []], []
+    for _ in range(100_000):
+        t.call()
+        for qi, q in enumerate(qs_a):
+            got_a[qi].extend(q.poll_many(64))
+        got_b.extend(q_b.poll_many(64))
+        if t.is_done:
+            break
+    assert t.is_done
+    for qi, q in enumerate(qs_a):
+        got_a[qi].extend(q.poll_many(64))
+    got_b.extend(q_b.poll_many(64))
+
+    # per-item oracle: partitioned routes events by key, broadcasts
+    # control; isolated takes everything; DONE closes every queue
+    exp_a = [[], []]
+    for it in items:
+        if isinstance(it, Event):
+            exp_a[p2q[hash(it.key) % PARTITION_COUNT]].append(it)
+        else:
+            exp_a[0].append(it)
+            exp_a[1].append(it)
+    assert [x for x in got_b if not isinstance(x, DoneItem)] == items
+    for qi in range(2):
+        assert [x for x in got_a[qi]
+                if not isinstance(x, DoneItem)] == exp_a[qi]
+        assert isinstance(got_a[qi][-1], DoneItem)
+
+
+def test_flush_zero_collectors_consumes_silently():
+    """A terminal vertex (no out-edges) whose processor emits to its outbox
+    must consume the items silently, as the per-item loop did (regression:
+    the bulk fan-out path crashed on min() of an empty offsets list)."""
+    from repro.core.processor import Processor
+    from repro.core.tasklet import (GUARANTEE_NONE, ProcessorTasklet,
+                                    SnapshotContext)
+
+    class Src(Processor):
+        def __init__(self):
+            self._emitted = False
+
+        def complete(self):
+            if not self._emitted:
+                self.outbox.offer(Event(1, "k", 1))
+                self._emitted = True
+            return True
+
+    t = ProcessorTasklet("s", Src(), [], [], SnapshotContext(GUARANTEE_NONE),
+                         "s", 0, is_source=True)
+    t.processor.init(t.outbox, None)
+    for _ in range(10):
+        t.call()
+        if t.is_done:
+            break
+    assert t.is_done
+    assert t.items_out == 1
+
+
 def test_batched_drain_equivalent_without_guarantee(monkeypatch):
     def run(drain):
         from repro.core import tasklet as tasklet_mod
