@@ -125,7 +125,8 @@ def host_q5_latency(rate: float = 20_000, duration_s: float = 4.0,
                     window_ms: int = 1000, slide_ms: int = 20,
                     n_keys: int = 100, threads: int = 2,
                     warmup_s: float = 1.0, disorder_ms: int = 0,
-                    disorder_seed: int = 7) -> Dict:
+                    disorder_seed: int = 7,
+                    block_size: Optional[int] = None) -> Dict:
     """Paced Q5 on the host tier; returns percentiles + events/s/core.
 
     ``disorder_ms`` > 0 runs the generator through a seeded bounded shuffle
@@ -165,7 +166,8 @@ def host_q5_latency(rate: float = 20_000, duration_s: float = 4.0,
 
     p = queries.q5(
         lambda: PacedGeneratorSource(gen, rate=rate, max_events=total,
-                                     wm_lag=disorder_ms),
+                                     wm_lag=disorder_ms,
+                                     block_size=block_size),
         lambda: _SinkAdapter(sink), window_ms=window_ms, slide_ms=slide_ms)
     t0_holder[0] = clock.now()
     cut_holder[0] = t0_holder[0] + warmup_s
@@ -177,21 +179,30 @@ def host_q5_latency(rate: float = 20_000, duration_s: float = 4.0,
         cluster.step()
     wall = time.monotonic() - t_start
     stats = job.execution.stats()
+    engine = {k: stats[k] for k in ("items_in", "items_out", "calls",
+                                    "idle_calls")}
+    # sampled per-tasklet timing, aggregated per vertex: where the
+    # remaining host-tier time goes (feeds the next perf PR)
+    engine["per_vertex_time_share"] = cluster.vertex_time_share()
     return {
         "tier": "host", "query": "q5", "rate": rate,
         "window_ms": window_ms, "slide_ms": slide_ms,
         "disorder_ms": disorder_ms,
         "events_per_sec_per_core": round(total / wall, 0),
         "latency_ms": hist.summary_ms(),
-        "engine": {k: stats[k] for k in ("items_in", "items_out", "calls",
-                                         "idle_calls")},
+        "engine": engine,
     }
 
 
 def host_q5_saturation(n_events: int = 800_000, threads: int = 2,
-                       probe_rate: float = 2_000_000) -> float:
+                       probe_rate: float = 2_000_000,
+                       block_size: Optional[int] = None) -> float:
     """Max sustained events/s/core: pace far beyond capacity (every event
-    is always due) and measure the wall time to drain a fixed stream."""
+    is always due) and measure the wall time to drain a fixed stream.
+
+    ``block_size=0`` forces the scalar per-event datapath (the A/B
+    baseline for the columnar EventBlock path); the default auto-enables
+    columnar blocks."""
     from repro.core import (JetCluster, PacedGeneratorSource, WallClock)
     from repro.core.engine import JOB_COMPLETED
     from repro.nexmark import NexmarkGenerator, queries
@@ -202,7 +213,8 @@ def host_q5_saturation(n_events: int = 800_000, threads: int = 2,
     gen = NexmarkGenerator(rate=probe_rate, n_keys=100)
     p = queries.q5(
         lambda: PacedGeneratorSource(gen, rate=probe_rate,
-                                     max_events=n_events),
+                                     max_events=n_events,
+                                     block_size=block_size),
         lambda: _SinkAdapter(lambda ev: None), window_ms=1000, slide_ms=20)
     job = cluster.submit(p.to_dag())
     t0 = time.monotonic()
@@ -211,6 +223,23 @@ def host_q5_saturation(n_events: int = 800_000, threads: int = 2,
         cluster.step()
     wall = time.monotonic() - t0
     return n_events / wall
+
+
+def host_q5_saturation_ab(n_events: int = 600_000, threads: int = 2,
+                          rounds: int = 2) -> Dict[str, float]:
+    """Interleaved A/B saturation: scalar datapath vs columnar EventBlock
+    datapath, alternated on the same machine in the same process (the
+    PR 2 methodology), reporting the best round of each arm."""
+    scalar, blocked = [], []
+    for _ in range(rounds):
+        scalar.append(host_q5_saturation(n_events, threads, block_size=0))
+        blocked.append(host_q5_saturation(n_events, threads))
+    return {
+        "saturation_events_per_sec_per_core": round(max(blocked), 0),
+        "saturation_scalar_events_per_sec_per_core": round(max(scalar), 0),
+        "saturation_block_speedup": round(max(blocked) / max(scalar), 2),
+        "saturation_rounds": rounds,
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -295,8 +324,8 @@ def run(quick: bool = True, disorder_ms: int = 100) -> Dict:
     host_rate = 20_000
     host = host_q5_latency(rate=host_rate,
                            duration_s=4.0 if quick else 10.0)
-    host["saturation_events_per_sec_per_core"] = round(
-        host_q5_saturation(n_events=600_000 if quick else 2_000_000), 0)
+    host.update(host_q5_saturation_ab(
+        n_events=600_000 if quick else 2_000_000))
     result = {
         "meta": {
             "metric": "event-time -> emission latency (ms), "
@@ -314,7 +343,10 @@ def run(quick: bool = True, disorder_ms: int = 100) -> Dict:
         result["host_disordered"] = host_q5_latency(
             rate=host_rate, duration_s=4.0 if quick else 10.0,
             disorder_ms=disorder_ms)
-    result["device"] = device_q5_latency(steps=1000 if quick else 10_000)
+    # >= 10k steps even in quick mode: at millions of events/s this stays
+    # well under a minute and makes the headline p99.99 a real measurement
+    # (1k steps used to report it null+warning in CI)
+    result["device"] = device_q5_latency(steps=10_000)
     return result
 
 
@@ -331,6 +363,7 @@ def rows(quick: bool = True, disorder_ms: int = 100) -> List[Dict]:
     """CSV-row shaped output for benchmarks.run."""
     result = run(quick, disorder_ms=disorder_ms)
     write_report(result)
+    append_trajectory(result)
     out = []
     for tier in ("host", "host_disordered", "device"):
         r = result.get(tier)
@@ -345,11 +378,64 @@ def rows(quick: bool = True, disorder_ms: int = 100) -> List[Dict]:
             row["warning"] = lat["warning"]
         if r.get("disorder_ms"):
             row["disorder_ms"] = r["disorder_ms"]
-        if "saturation_events_per_sec_per_core" in r:
-            row["saturation_events_per_sec_per_core"] = \
-                r["saturation_events_per_sec_per_core"]
+        for k in ("saturation_events_per_sec_per_core",
+                  "saturation_scalar_events_per_sec_per_core",
+                  "saturation_block_speedup"):
+            if k in r:
+                row[k] = r[k]
         out.append(row)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Cross-PR perf trajectory
+# ---------------------------------------------------------------------------
+
+
+def append_trajectory(result: Dict,
+                      path: Optional[pathlib.Path] = None) -> pathlib.Path:
+    """Append one per-run record (git SHA, saturation A/B, paced and device
+    percentiles) to the cumulative ``BENCH_trajectory.json`` so perf
+    regressions across PRs are visible at a glance."""
+    import subprocess
+    if path is None:
+        path = pathlib.Path(__file__).resolve().parents[1] / \
+            "BENCH_trajectory.json"
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=path.parent, capture_output=True, text=True,
+            timeout=10).stdout.strip() or "unknown"
+    except Exception:
+        sha = "unknown"
+    host = result.get("host", {})
+    lat = host.get("latency_ms", {})
+    device = result.get("device", {})
+    record = {
+        "sha": sha,
+        "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "quick": result.get("meta", {}).get("quick"),
+        "host_saturation_events_per_sec_per_core":
+            host.get("saturation_events_per_sec_per_core"),
+        "host_saturation_scalar_events_per_sec_per_core":
+            host.get("saturation_scalar_events_per_sec_per_core"),
+        "host_paced_rate": host.get("rate"),
+        "host_p50_ms": lat.get("p50"),
+        "host_p99_ms": lat.get("p99"),
+        "host_p99.99_ms": lat.get("p99.99"),
+        "device_events_per_sec_per_core":
+            device.get("events_per_sec_per_core"),
+        "device_p99.99_ms": device.get("latency_ms", {}).get("p99.99"),
+    }
+    try:
+        records = json.loads(path.read_text())
+        if not isinstance(records, list):
+            records = []
+    except (FileNotFoundError, ValueError):
+        records = []
+    records.append(record)
+    path.write_text(json.dumps(records, indent=1, default=float) + "\n")
+    return path
 
 
 if __name__ == "__main__":
@@ -362,5 +448,7 @@ if __name__ == "__main__":
     args = ap.parse_args()
     result = run(quick=not args.full, disorder_ms=args.disorder)
     p = write_report(result)
+    t = append_trajectory(result)
     print(json.dumps(result, indent=1, default=float))
     print(f"# wrote {p}")
+    print(f"# appended {t}")

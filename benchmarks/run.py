@@ -107,6 +107,12 @@ def main() -> None:
         json.dumps({"figures": all_rows, "roofline": rl}, indent=1,
                    default=float))
     print(f"# wrote {out / 'bench_results.json'}", file=sys.stderr)
+    # the latency section appends the per-run record (git SHA, saturation
+    # A/B, paced + device percentiles) to the cumulative cross-PR log
+    traj = out.parent / "BENCH_trajectory.json"
+    if traj.exists():
+        n = len(json.loads(traj.read_text()))
+        print(f"# perf trajectory: {traj} ({n} records)", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -4,7 +4,8 @@ watermarks, windows, Chandy-Lamport snapshots and backpressure."""
 from .clock import Clock, VirtualClock, WallClock
 from .dag import DAG, Edge, PARTITION_COUNT, Routing, Vertex
 from .engine import (JetCluster, Job, JobConfig, JOB_COMPLETED, JOB_RUNNING)
-from .events import Barrier, DONE, Event, LateEvent, Watermark
+from .events import (Barrier, DONE, Event, EventBlock, LateEvent, Watermark,
+                     block_form)
 from .pipeline import Pipeline, group_aggregate
 from .processor import (FilterProcessor, FlatMapProcessor,
                         FusedFunctionProcessor, Inbox, MapProcessor, Outbox,
@@ -23,7 +24,8 @@ __all__ = [
     "Clock", "VirtualClock", "WallClock",
     "DAG", "Edge", "PARTITION_COUNT", "Routing", "Vertex",
     "JetCluster", "Job", "JobConfig", "JOB_COMPLETED", "JOB_RUNNING",
-    "Barrier", "DONE", "Event", "LateEvent", "Watermark",
+    "Barrier", "DONE", "Event", "EventBlock", "LateEvent", "Watermark",
+    "block_form",
     "Pipeline", "group_aggregate",
     "FilterProcessor", "FlatMapProcessor", "FusedFunctionProcessor",
     "Inbox", "MapProcessor", "Outbox", "Processor", "SinkProcessor",

@@ -18,7 +18,7 @@ from collections import deque
 from typing import Any, Deque, Optional, Tuple
 
 from .clock import Clock
-from .events import Event
+from .events import Event, EventBlock
 
 ACK_INTERVAL_S = 0.1
 WINDOW_FILL_FACTOR = 3
@@ -83,7 +83,7 @@ class NetworkLink:
         self._processed += 1
         return self._recv.popleft()
 
-    def poll_prefix(self, limit: int):
+    def poll_prefix(self, limit: int, explode_blocks: bool = False):
         """Batched control-aware drain; see ``SPSCQueue.poll_prefix``."""
         recv = self._recv
         n = len(recv)
@@ -93,20 +93,27 @@ class NetworkLink:
             return (), None
         events = []
         append = events.append
+        extend = events.extend
         popleft = recv.popleft
         ctrl = None
         consumed = 0
         while consumed < n:
             item = recv[0]
-            if item.__class__ is Event or isinstance(item, Event):
+            cls = item.__class__
+            if cls is EventBlock:
+                if explode_blocks:
+                    extend(item.to_events())
+                else:
+                    append(item)
+            elif cls is Event or isinstance(item, Event):
                 append(item)
-                popleft()
-                consumed += 1
             else:
                 ctrl = item
                 popleft()
                 consumed += 1
                 break
+            popleft()
+            consumed += 1
         self._processed += consumed
         return events, ctrl
 

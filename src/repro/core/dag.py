@@ -13,15 +13,41 @@ from __future__ import annotations
 import graphlib
 from typing import Callable, Dict, List, Optional
 
+import numpy as np
+
 DEFAULT_QUEUE_SIZE = 1024
 #: Number of key partitions in the cluster; Hazelcast's default is 271.
 PARTITION_COUNT = 271
+
+#: CPython's hash modulus for int (sys.hash_info.modulus, 2**61 - 1)
+_PYHASH_MODULUS = (1 << 61) - 1
 
 
 def partition_for_key(key, partition_count: int = PARTITION_COUNT) -> int:
     """Key -> partition id.  Stable across the cluster (and across tiers:
     the device tier uses the same function vectorized)."""
     return hash(key) % partition_count
+
+
+def partitions_for_keys(keys, partition_count: int = PARTITION_COUNT):
+    """Vectorized :func:`partition_for_key` over an int64 key column.
+
+    Bit-identical to ``hash(int(k)) % partition_count`` for every int64
+    key (CPython int hash is the value mod 2**61-1, sign-preserving, with
+    -1 mapped to -2; Python ``%`` then yields the non-negative residue).
+    """
+    k = np.asarray(keys, dtype=np.int64)
+    h = k % _PYHASH_MODULUS
+    neg = k < 0
+    if neg.any():
+        # hash(-n) == -hash(n); int64 min would overflow on negation, but
+        # its hash is the constant -(2**63 % modulus) == -4
+        imin = k == np.iinfo(np.int64).min
+        safe = np.nonzero(neg & ~imin)[0]
+        h[safe] = -((-k[safe]) % _PYHASH_MODULUS)
+        h[imin] = -4
+        h[h == -1] = -2
+    return h % partition_count
 
 
 class Routing:

@@ -156,6 +156,30 @@ class ExecutionContext:
         self.ssctx.tasklets = self.tasklets
         self.ssctx.on_complete = self.job._on_snapshot_complete
 
+        # columnar emission is only a win when blocks survive past the
+        # source: a fused chain without a vectorized form, or immediate
+        # consumers none of whom accept blocks, would explode every block
+        # straight back to events — paying vectorized generation PLUS the
+        # per-row scalar materialization.  Downgrade auto-mode sources on
+        # such topologies to the scalar path (an EXPLICIT block_size is
+        # honored as given).
+        for name, insts in self.instances.items():
+            if dag.in_edges(name) or not dag.out_edges(name):
+                continue
+            dst_accepts = any(
+                getattr(self.instances[e.dst][0].tasklet.processor,
+                        "accepts_blocks", False)
+                for e in dag.out_edges(name))
+            for inst in insts:
+                p = inst.tasklet.processor
+                inner = getattr(p, "inner", p)
+                if getattr(inner, "block_size", 0) is not None:
+                    continue        # scalar-forced, explicit, or no knob
+                chain_explodes = (hasattr(p, "_chain_blk")
+                                  and p._chain_blk is None)
+                if chain_explodes or not dst_accepts:
+                    inner.block_size = 0
+
     def _wire_edge(self, edge: Edge, lp_of: Dict[str, int],
                    nodes: List[int], table,
                    in_queues, collectors) -> None:
@@ -384,6 +408,27 @@ class JetCluster:
     def run_steps(self, n: int) -> None:
         for _ in range(n):
             self.step()
+
+    # -- telemetry -------------------------------------------------------------
+    def vertex_time_share(self) -> Dict[str, float]:
+        """Fraction of sampled worker time spent in each vertex.
+
+        Aggregates the cooperative workers' sampled per-tasklet timing
+        (see :class:`CooperativeWorker`) across all nodes, summed per
+        vertex (tasklet names are ``vertex#globalIndex``), normalized to
+        shares.  This is where the next perf PR should look first.
+        """
+        time_in: Dict[str, float] = {}
+        for node in self.nodes.values():
+            for worker in node.workers:
+                for name, secs in worker._time_in.items():
+                    vertex = name.rsplit("#", 1)[0]
+                    time_in[vertex] = time_in.get(vertex, 0.0) + secs
+        total = sum(time_in.values())
+        if total <= 0:
+            return {}
+        return {v: round(s / total, 4)
+                for v, s in sorted(time_in.items(), key=lambda kv: -kv[1])}
 
     # -- membership -----------------------------------------------------------------
     def kill_node(self, node_id: int) -> None:

@@ -18,7 +18,7 @@ import itertools
 from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 from .dag import DAG, Edge, Routing
-from .events import Event, LateEvent
+from .events import Event, EventBlock, LateEvent
 from .processor import (FusedFunctionProcessor, Inbox, Processor,
                         SinkProcessor)
 from .window import (AccumulateByFrameProcessor, AggregateOperation,
@@ -193,20 +193,62 @@ class _ChainOutbox:
     control items (watermarks) pass straight through.  This is what lets
     the planner collapse ``source -> fused-chain`` into ONE vertex: the
     whole queue hop between them disappears.
+
+    EventBlocks take the vectorized chain (``chain_blk``) when every step
+    declared a block form; otherwise they explode here and run the scalar
+    chain per event — the source boundary is where per-event semantics are
+    restored for black-box chains.  Like the scalar fan-out case, an
+    exploded block may overshoot the outbox batch limit (by up to the
+    block size); the engine avoids the path entirely for auto-mode
+    sources by downgrading them to scalar emission when their chain
+    cannot vectorize (see ExecutionContext._build).
     """
 
-    __slots__ = ("_target", "_chain", "_chain1")
+    __slots__ = ("_target", "_chain", "_chain1", "_chain_blk")
 
-    def __init__(self, target, chain, chain1=None):
+    def __init__(self, target, chain, chain1=None, chain_blk=None):
         self._target = target
         self._chain = chain
         #: scalar in-place variant (Event -> Event | None); preferred when
         #: the chain has no flat_map — no per-event tuple/Event churn
         self._chain1 = chain1
+        #: vectorized variant (EventBlock -> EventBlock | None)
+        self._chain_blk = chain_blk
+
+    def _chain_block(self, blk):
+        """Block through the chain -> list of result items (0 or 1 block,
+        or the exploded per-event results for a scalar-only chain)."""
+        chain_blk = self._chain_blk
+        if chain_blk is not None:
+            out = chain_blk(blk)
+            return () if out is None or not len(out) else (out,)
+        chain1 = self._chain1
+        if chain1 is not None:
+            out = []
+            append = out.append
+            for ev in blk.to_events():
+                ev = chain1(ev)
+                if ev is not None:
+                    append(ev)
+            return out
+        chain = self._chain
+        out = []
+        for ev in blk.to_events():
+            out.extend(chain(ev))
+        return out
 
     def offer(self, item) -> bool:
         t = self._target
-        if item.__class__ is Event or isinstance(item, Event):
+        cls = item.__class__
+        if cls is EventBlock:
+            outs = self._chain_block(item)
+            if not outs:
+                return True
+            if t.space() <= 0:
+                return False
+            t.extend(outs)
+            return True
+        if cls is Event or isinstance(item, Event):
             chain1 = self._chain1
             if chain1 is not None:
                 ev = chain1(item)
@@ -227,9 +269,13 @@ class _ChainOutbox:
         chain1 = self._chain1
         out: List[Any] = []
         append = out.append
+        extend = out.extend
         if chain1 is not None:
             for item in items:
-                if item.__class__ is Event or isinstance(item, Event):
+                cls = item.__class__
+                if cls is EventBlock:
+                    extend(self._chain_block(item))
+                elif cls is Event or isinstance(item, Event):
                     ev = chain1(item)
                     if ev is not None:
                         append(ev)
@@ -237,9 +283,11 @@ class _ChainOutbox:
                     append(item)
         else:
             chain = self._chain
-            extend = out.extend
             for item in items:
-                if item.__class__ is Event or isinstance(item, Event):
+                cls = item.__class__
+                if cls is EventBlock:
+                    extend(self._chain_block(item))
+                elif cls is Event or isinstance(item, Event):
                     extend(chain(item))
                 else:
                     append(item)
@@ -263,10 +311,11 @@ class ChainedSourceProcessor(Processor):
     """Wraps a source processor so a fused stateless chain runs at its
     outbox (operator fusion extended through the source boundary, §3.1)."""
 
-    def __init__(self, inner: Processor, chain, chain1=None):
+    def __init__(self, inner: Processor, chain, chain1=None, chain_blk=None):
         self.inner = inner
         self._chain = chain
         self._chain1 = chain1
+        self._chain_blk = chain_blk
         self.is_cooperative = inner.is_cooperative
         # optional hooks the engine discovers via getattr
         if hasattr(inner, "snapshot_partition"):
@@ -276,7 +325,8 @@ class ChainedSourceProcessor(Processor):
 
     def init(self, outbox, ctx) -> None:
         super().init(outbox, ctx)
-        self.inner.init(_ChainOutbox(outbox, self._chain, self._chain1), ctx)
+        self.inner.init(_ChainOutbox(outbox, self._chain, self._chain1,
+                                     self._chain_blk), ctx)
 
     def process(self, ordinal: int, inbox: Inbox) -> None:
         self.inner.process(ordinal, inbox)
@@ -513,6 +563,40 @@ def _compile_chain_inplace(ops: List[Tuple[str, Callable]]):
     return chain_inplace
 
 
+def _compile_chain_block(ops: List[Tuple[str, Callable]]):
+    """Vectorized chain variant: EventBlock -> EventBlock | None.
+
+    Compiles only when the chain is all-scalar (no flat_map) AND every
+    stage function carries a block form (see
+    :func:`~repro.core.events.block_form`); otherwise returns None and
+    blocks explode to events at the chain boundary.
+    """
+    scalar = _scalar_steps(ops)
+    if scalar is None:
+        return None
+    if not all(hasattr(fn, "__block_form__") for _, fn in ops):
+        return None
+    steps = tuple((kind, fn.__block_form__)
+                  for (kind, _), (_, fn) in zip(scalar, ops))
+
+    def chain_block(blk, _steps=steps):
+        """EventBlock -> EventBlock | None (None == fully filtered)."""
+        for kind, f in _steps:
+            if kind == 1:
+                mask = f(blk)
+                if not mask.all():
+                    blk = blk.compress(mask)
+                    if not len(blk):
+                        return None
+            elif kind == 0:
+                blk = blk.with_value_col(f(blk))
+            else:
+                blk = blk.with_key_col(f(blk))
+        return blk
+
+    return chain_block
+
+
 def _compile_chain(ops: List[Tuple[str, Callable]]):
     """Compose a fused op chain into one Event -> tuple(Event) closure."""
     steps = []
@@ -587,19 +671,20 @@ class _Planner:
                 fused = _compile_chain([(s.params["op"], s.params["fn"])
                                         for s in chain])
                 up = chain[0].upstreams[0]
+                chain_ops = [(s.params["op"], s.params["fn"]) for s in chain]
+                blocked = _compile_chain_block(chain_ops)
                 if up.kind == "source" and up.downstream_count == 1:
                     # source fusion: the chain runs inside the source
                     # vertex itself — no intermediate vertex, no queue hop.
                     # The source owns each event until it enters a queue,
                     # so a scalar chain may rewrite it in place.
-                    inplace = _compile_chain_inplace(
-                        [(s.params["op"], s.params["fn"]) for s in chain])
+                    inplace = _compile_chain_inplace(chain_ops)
                     src_name = self.vertex_of[up]
                     vertex = self.dag.vertices[src_name]
                     supplier = vertex.supplier
                     vertex.supplier = (
-                        lambda s=supplier, c=fused, c1=inplace:
-                        ChainedSourceProcessor(s(), c, c1))
+                        lambda s=supplier, c=fused, c1=inplace, cb=blocked:
+                        ChainedSourceProcessor(s(), c, c1, cb))
                     # rename so telemetry (straggler reports) attributes
                     # the chain's cost to it; no edges reference the
                     # source yet, so only the vertex table changes
@@ -614,7 +699,8 @@ class _Planner:
                     continue
                 name = last.name
                 self.dag.vertex(
-                    name, (lambda c=fused: FusedFunctionProcessor(c)))
+                    name, (lambda c=fused, cb=blocked:
+                           FusedFunctionProcessor(c, cb)))
                 self.vertex_of[last] = name
                 for s in chain:
                     self.vertex_of[s] = name

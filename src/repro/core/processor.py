@@ -16,7 +16,7 @@ from __future__ import annotations
 from collections import deque
 from typing import Any, Callable, Iterable, Iterator, List, Optional, Tuple
 
-from .events import DONE, Event, Watermark
+from .events import DONE, Event, EventBlock, Watermark
 
 
 class Inbox:
@@ -139,6 +139,13 @@ class Processor:
     #: them on a dedicated non-cooperative thread (paper §3.2).
     is_cooperative = True
 
+    #: True for processors whose ``process`` understands
+    #: :class:`~repro.core.events.EventBlock` items.  When False (the
+    #: default) the owning tasklet explodes incoming blocks into per-event
+    #: runs at the queue boundary, so a black-box processor keeps exact
+    #: per-event semantics (the columnar fast path is opt-in per vertex).
+    accepts_blocks = False
+
     def init(self, outbox: Outbox, ctx: ProcessorContext) -> None:
         self.outbox = outbox
         self.ctx = ctx
@@ -190,11 +197,19 @@ class FusedFunctionProcessor(Processor):
     vertex running this processor — Jet's operator fusion (paper §3.1).  The
     chain is compiled once into a single Python closure so the per-event cost
     is one call, not one call per stage.
+
+    When every step of the chain declares a block form the planner also
+    hands over ``block_chain`` (EventBlock -> EventBlock | None) and the
+    vertex becomes block-aware: whole blocks run as column ops, per-event
+    cost drops to per-block cost.
     """
 
-    def __init__(self, chain: Callable[[Event], Iterable[Event]]):
+    def __init__(self, chain: Callable[[Event], Iterable[Event]],
+                 block_chain: Optional[Callable] = None):
         # chain: Event -> iterable of Events (possibly empty)
         self._chain = chain
+        self._block_chain = block_chain
+        self.accepts_blocks = block_chain is not None
 
     def process(self, ordinal: int, inbox: Inbox) -> None:
         chain = self._chain
@@ -209,10 +224,25 @@ class FusedFunctionProcessor(Processor):
         items = inbox._items
         popleft = items.popleft
         extend = out_items.extend
+        block_chain = self._block_chain
+        if block_chain is None:
+            while items:
+                if len(out_items) >= limit:
+                    return
+                extend(chain(items[0]))
+                popleft()
+            return
+        append = out_items.append
         while items:
             if len(out_items) >= limit:
                 return
-            extend(chain(items[0]))
+            item = items[0]
+            if item.__class__ is EventBlock:
+                out = block_chain(item)
+                if out is not None and len(out):
+                    append(out)
+            else:
+                extend(chain(item))
             popleft()
 
 

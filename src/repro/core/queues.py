@@ -12,7 +12,7 @@ from __future__ import annotations
 
 from typing import Any, List, Optional, Tuple
 
-from .events import Event
+from .events import Event, EventBlock
 
 
 class SPSCQueue:
@@ -103,16 +103,23 @@ class SPSCQueue:
         self._head += n
         return out
 
-    def poll_prefix(self, limit: int) -> Tuple[List[Any], Any]:
+    def poll_prefix(self, limit: int,
+                    explode_blocks: bool = False) -> Tuple[List[Any], Any]:
         """Batched, control-aware drain for the tasklet hot path.
 
-        Dequeues the leading run of data :class:`Event`s (up to ``limit``)
-        as a list; if the next item is a control item (watermark, barrier,
-        DONE) it is dequeued too and returned separately.  Stopping *before*
-        any item that follows a control item keeps the drain observably
-        identical to the seed item-at-a-time loop, while the common case —
-        a long run of events — moves as C-level slices with one type check
-        per item.
+        Dequeues the leading run of data items — :class:`Event`s and
+        :class:`EventBlock`s — (up to ``limit`` queue slots) as a list; if
+        the next item is a control item (watermark, barrier, DONE) it is
+        dequeued too and returned separately.  Stopping *before* any item
+        that follows a control item keeps the drain observably identical
+        to the seed item-at-a-time loop, while the common case — a long
+        run of events — moves as C-level slices with one type check per
+        item.
+
+        ``explode_blocks=True`` replaces each EventBlock in the run with
+        its per-event explosion (the tasklet's shim for processors that do
+        not declare block support); the block still counts as one slot
+        toward ``limit``.
 
         Returns ``(events, control_item_or_None)``.
         """
@@ -130,13 +137,31 @@ class SPSCQueue:
             chunk = buf[idx:] + buf[:n - seg]
         ctrl = None
         k = n
+        block_at = None
         for pos, item in enumerate(chunk):
-            if item.__class__ is Event or isinstance(item, Event):
+            cls = item.__class__
+            if cls is Event:
+                continue
+            if cls is EventBlock:
+                if explode_blocks and block_at is None:
+                    block_at = pos
+                continue
+            if isinstance(item, (Event, EventBlock)):
                 continue
             ctrl = item
             k = pos
             break
-        events = chunk if k == n and ctrl is None else chunk[:k]
+        if block_at is None or block_at >= k:
+            events = chunk if k == n and ctrl is None else chunk[:k]
+        else:
+            # explode shim: splice each block's event run into position
+            events = chunk[:block_at]
+            ext = events.extend
+            for item in chunk[block_at:k]:
+                if item.__class__ is EventBlock:
+                    ext(item.to_events())
+                else:
+                    events.append(item)
         consumed = k + (1 if ctrl is not None else 0)
         # clear the consumed slots segment-wise
         if consumed <= seg:

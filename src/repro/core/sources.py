@@ -18,9 +18,19 @@ from __future__ import annotations
 
 from typing import Any, Callable, Iterable, List, Optional, Sequence, Tuple
 
-from .events import Event, Watermark, MAX_TIME
+import numpy as np
+
+from .events import Event, EventBlock, Watermark, MAX_TIME, MIN_TIME
 from .processor import Inbox, Processor
 from .watermark import EventTimePolicy
+
+#: max events per EventBlock a block-mode source emits in one burst
+SOURCE_BLOCK_EVENTS = 4096
+#: bursts smaller than this run the scalar loop — numpy per-call overhead
+#: beats object churn only once a burst has real width (a paced source at
+#: a modest rate produces 1-2 due events per slice; the saturation /
+#: catch-up path produces thousands)
+SCALAR_BURST_CUTOFF = 48
 
 
 class ListSource(Processor):
@@ -58,7 +68,8 @@ class PacedGeneratorSource(Processor):
     def __init__(self, gen_fn: Callable[[int], Tuple[int, Any, Any]],
                  rate: float, max_events: Optional[int] = None,
                  wm_policy: Optional[Callable[[], EventTimePolicy]] = None,
-                 wm_stride: int = 1, wm_lag: int = 0):
+                 wm_stride: int = 1, wm_lag: int = 0,
+                 block_size: Optional[int] = None):
         self.gen_fn = gen_fn
         self.rate = rate
         self.max_events = max_events
@@ -68,9 +79,20 @@ class PacedGeneratorSource(Processor):
         self.policy_factory = wm_policy or (
             lambda lag=wm_lag: EventTimePolicy(lag=lag))
         self.wm_stride = wm_stride
+        #: columnar emission: ``None`` = auto (use ``gen_fn.gen_block``
+        #: when available and the watermark policy is vectorizable),
+        #: ``0`` = force the scalar per-event path, ``n`` = block cap
+        self.block_size = block_size
         self._seq = None           # next seq for THIS instance
         self._start = None         # absolute schedule anchor (cluster clock)
         self.policy = None
+        self._gen_block = None
+        #: exact-replay filter after a restore that changed parallelism:
+        #: old residue class -> first seq NOT yet emitted by the previous
+        #: topology (events below their class frontier are skipped)
+        self._frontiers = None
+        self._old_total = 0
+        self._replay_horizon = 0
 
     def _setup(self):
         if self._seq is None:      # a restore may have set the offset
@@ -78,10 +100,24 @@ class PacedGeneratorSource(Processor):
         if self._start is None:    # a restore re-anchors to the ORIGINAL t0
             self._start = self.ctx.clock.now()
         self.policy = self.policy_factory()
+        # columnar mode: the generator must offer a vectorized form and
+        # the watermark policy must be the plain bounded-lag policy with
+        # min_step == 1, whose per-event decisions ("emit on every strict
+        # rise of the running-max timestamp") vectorize exactly
+        if self.block_size != 0:
+            gb = getattr(self.gen_fn, "gen_block", None)
+            if gb is not None and type(self.policy) is EventTimePolicy \
+                    and self.policy.min_step == 1:
+                self._gen_block = gb
 
     def complete(self) -> bool:
         if self.policy is None:
             self._setup()
+        if self._gen_block is not None:
+            done = self._complete_block()
+            if done is not None:
+                return done
+            # fall through: burst too small for the columnar path
         step = self.ctx.total_parallelism
         rate = self.rate
         clock, start = self.ctx.clock, self._start
@@ -114,8 +150,19 @@ class PacedGeneratorSource(Processor):
                 append = buf.append
                 unthrottled = wm_stride == 1
                 last_ts = None
+                frontiers = self._frontiers
                 while budget > 0 and len(buf) < room:
                     budget -= 1
+                    if frontiers is not None:
+                        if seq >= self._replay_horizon:
+                            frontiers = self._frontiers = None
+                        else:
+                            front = frontiers.get(seq % self._old_total)
+                            if front is not None and seq < front:
+                                # already emitted by the pre-restart
+                                # topology: exact replay skips it
+                                seq += step
+                                continue
                     ts, key, value = gen(seq)
                     append(Event(ts, key, value))
                     seq += step
@@ -134,16 +181,127 @@ class PacedGeneratorSource(Processor):
         finally:
             self._seq = seq
 
+    def _complete_block(self) -> Optional[bool]:
+        """One columnar burst: generate up to ``block_size`` due events as
+        ONE EventBlock, split it at the exact positions the scalar loop
+        would have emitted watermarks, and extend the outbox with
+        ``[block, wm, block, ...]``.
+
+        Returns True when the stream is exhausted, False when no further
+        progress is possible this slice, or None to delegate a small burst
+        (< SCALAR_BURST_CUTOFF events) to the scalar loop — tiny bursts
+        are cheaper as plain Events than as 2-row numpy columns.
+        """
+        step = self.ctx.total_parallelism
+        seq = self._seq
+        max_events = self.max_events
+        if max_events is not None and seq >= max_events:
+            return True
+        overdue = (self.ctx.clock.now() - self._start) * self.rate - seq
+        if overdue < 0:
+            return False
+        room = self.outbox.space()
+        if room <= 0:
+            return False
+        n = int(overdue) // step + 1
+        cap = self.block_size or SOURCE_BLOCK_EVENTS
+        if n > cap:
+            n = cap
+        if max_events is not None:
+            left = (max_events - seq + step - 1) // step
+            if n > left:
+                n = left
+        # an explicitly small block_size still gets blocks; only the auto
+        # mode trades tiny bursts back to the scalar loop
+        if n < min(SCALAR_BURST_CUTOFF, cap):
+            return None
+        seqs = seq + step * np.arange(n, dtype=np.int64)
+        self._seq = seq + n * step
+        if self._frontiers is not None:
+            # exact replay after a parallelism change: drop seqs the old
+            # topology already emitted (same rule as the scalar loop)
+            if seq >= self._replay_horizon:
+                self._frontiers = None
+            else:
+                fr = np.full(self._old_total, MIN_TIME, dtype=np.int64)
+                for cls, front in self._frontiers.items():
+                    fr[cls] = front
+                seqs = seqs[seqs >= fr[seqs % self._old_total]]
+                if not len(seqs):
+                    return False
+                n = len(seqs)
+        blk = self._gen_block(seqs)
+        ts = blk.ts
+        pol = self.policy
+        lag = pol.lag
+        # watermark fire positions: every strict rise of the running-max
+        # timestamp (EventTimePolicy with min_step == 1), optionally
+        # throttled by wm_stride — identical to observe() per event.  The
+        # running max is seeded with the policy's carried-over top so a
+        # disordered burst starting below it cannot falsely fire
+        prev_top = pol._top_ts
+        top = np.maximum.accumulate(ts)
+        if prev_top > MIN_TIME:
+            np.maximum(top, prev_top, out=top)
+        rising = np.empty(n, dtype=bool)
+        rising[0] = int(ts[0]) > prev_top
+        np.greater(top[1:], top[:-1], out=rising[1:])
+        if self.wm_stride > 1:
+            rising &= ((seqs // step + 1) % self.wm_stride) == 0
+        pos = np.nonzero(rising)[0]
+        # bound the ITEM count this burst appends (each fire position
+        # costs one block slice + one watermark): when fires are dense,
+        # cut the burst at the last watermark that fits the outbox room
+        # and return the remainder to the schedule — the outbox batch
+        # limit stays a real per-slice latency bound, as in scalar mode
+        max_w = max(1, (room - 1) // 2)
+        if len(pos) > max_w:
+            cut = int(pos[max_w - 1]) + 1
+            self._seq = int(seqs[cut])
+            blk = blk.slice(0, cut)
+            top = top[:cut]
+            pos = pos[:max_w]
+            n = cut
+        # policy state advances regardless of stride throttling, exactly
+        # like the scalar loop's unconditional observe()
+        new_top = int(top[-1])
+        if new_top > pol._top_ts:
+            pol._top_ts = new_top
+            pol._last_wm = new_top - lag
+        if not len(pos):
+            items: List[Any] = [blk]
+        else:
+            items = []
+            append = items.append
+            tops = top[pos].tolist()
+            prev = 0
+            for k, p in enumerate(pos.tolist()):
+                if p + 1 > prev:
+                    append(blk.slice(prev, p + 1))
+                append(Watermark(tops[k] - lag))
+                prev = p + 1
+            if prev < n:
+                append(blk.slice(prev, n))
+        self.outbox.extend(items)
+        if max_events is not None and self._seq >= max_events:
+            return True
+        return False
+
     # replay support: offsets ride on the owned state partitions (like
-    # JournalSource) so any post-restart topology finds them.  The restart
-    # resumes from the MINIMUM saved sequence — exactly-once for the
-    # generator's own state, at-least-once for events in the residue gap
-    # when parallelism changed (documented; the journal source is the
-    # exactly-once-replay path).
+    # JournalSource) so any post-restart topology finds them.  Each entry
+    # additionally records which residue class (old global index / old
+    # total parallelism) the frontier belongs to: after a restart that
+    # CHANGED parallelism, the new instances skip exactly the seqs the old
+    # topology already emitted — exact replay, not the at-least-once
+    # residue-gap duplication the seed accepted.  (An old class whose
+    # frontier entry landed entirely on other instances falls back to
+    # emit-everything for that class, i.e. at-least-once, never loss.)
     def save_to_snapshot(self) -> bool:
         for p in self.ctx.partition_ids:
-            self.outbox.offer_to_snapshot(("gen", p),
-                                          (self._seq, self._start))
+            self.outbox.offer_to_snapshot(
+                ("gen", p),
+                (self._seq, self._start, self.ctx.global_index,
+                 self.ctx.total_parallelism))
         return True
 
     def snapshot_partition(self, skey):
@@ -152,16 +310,31 @@ class PacedGeneratorSource(Processor):
         return None
 
     def restore_from_snapshot(self, items) -> None:
-        seqs = [val[0] for (tag, _p), val in items
-                if tag == "gen" and val and val[0] is not None]
-        starts = [val[1] for (tag, _p), val in items
-                  if tag == "gen" and val and val[1] is not None]
+        seqs, starts = [], []
+        frontiers = {}
+        old_total = 0
+        for (tag, _p), val in items:
+            if tag != "gen" or not val:
+                continue
+            if val[0] is not None:
+                seqs.append(val[0])
+            if val[1] is not None:
+                starts.append(val[1])
+            if len(val) >= 4 and val[2] is not None and val[0] is not None:
+                cls, tot = val[2], val[3]
+                old_total = max(old_total, tot)
+                if frontiers.get(cls, MIN_TIME) < val[0]:
+                    frontiers[cls] = val[0]
         if seqs:
             base = min(seqs)
             total = self.ctx.total_parallelism
             idx = self.ctx.global_index
             # smallest seq >= base in this instance's residue class
             self._seq = base + ((idx - base) % total)
+            if frontiers and old_total:
+                self._frontiers = frontiers
+                self._old_total = old_total
+                self._replay_horizon = max(frontiers.values())
         if starts:
             # the cluster clock is monotonic across restarts: anchoring to
             # the original t0 keeps the ideal schedule (and therefore the

@@ -23,8 +23,11 @@ from __future__ import annotations
 import time as _time
 from typing import Any, Callable, List, Optional, Sequence
 
-from .dag import PARTITION_COUNT, Routing
-from .events import DONE, Barrier, DoneItem, Event, Watermark, MIN_TIME
+import numpy as np
+
+from .dag import PARTITION_COUNT, Routing, partitions_for_keys
+from .events import (DONE, Barrier, DoneItem, Event, EventBlock, Watermark,
+                     MIN_TIME)
 from .processor import Inbox, Outbox, Processor
 from .watermark import WatermarkCoalescer
 
@@ -82,7 +85,8 @@ class EdgeCollector:
     """
 
     __slots__ = ("queues", "routing", "key_fn", "partition_to_queue",
-                 "_rr_cursor", "_bc_item", "_bc_remaining", "_route_cache")
+                 "_rr_cursor", "_bc_item", "_bc_remaining", "_route_cache",
+                 "_p2q_arr", "_blk_pending")
 
     def __init__(self, queues: Sequence, routing: str,
                  key_fn: Optional[Callable],
@@ -97,6 +101,10 @@ class EdgeCollector:
         #: key -> queue index memo (partitioned routing); bounded so a
         #: high-cardinality key space cannot grow it without limit
         self._route_cache: dict = {}
+        #: vectorized partition->queue table (built on first block)
+        self._p2q_arr = None
+        #: (block, computed sub-blocks) awaiting all-or-nothing admission
+        self._blk_pending = None
 
     # -- data items ---------------------------------------------------------
     def _queue_index_for(self, item) -> int:
@@ -111,9 +119,63 @@ class EdgeCollector:
                 cache[key] = qi
         return qi
 
+    def _offer_block(self, blk: EventBlock) -> bool:
+        """Route one EventBlock onto a partitioned edge.
+
+        The key column is hashed once (vectorized), rows are stably
+        counting-sorted by destination queue, and each destination gets
+        ONE sub-block with its rows in stream order — exactly the
+        per-queue sequence the per-item protocol produces.  Delivery is
+        all-or-nothing: every destination must have a free slot, else
+        nothing is enqueued and the call retries later (the computed
+        split is cached for the retry).
+        """
+        if not len(blk):
+            return True
+        pending = self._blk_pending
+        if pending is not None and pending[0] is blk:
+            parts = pending[1]
+        else:
+            if self.key_fn is None:
+                pids = partitions_for_keys(blk.key)
+            else:
+                # a custom key extractor sees the EVENT (e.g. all_to_one's
+                # constant key): materialize rows for it — rare path
+                key_fn = self.key_fn
+                pids = np.fromiter(
+                    (hash(key_fn(ev)) % PARTITION_COUNT
+                     for ev in blk.to_events()),
+                    np.int64, len(blk))
+            if self._p2q_arr is None:
+                self._p2q_arr = np.asarray(self.partition_to_queue,
+                                           dtype=np.int64)
+            dests = self._p2q_arr[pids]
+            first = dests[0]
+            if (dests == first).all():
+                parts = [(int(first), blk)]
+            else:
+                order = np.argsort(dests, kind="stable")
+                sd = dests[order]
+                starts = np.nonzero(
+                    np.concatenate(([True], sd[1:] != sd[:-1])))[0]
+                ends = np.append(starts[1:], len(sd))
+                parts = [(int(sd[s]), blk.take(order[s:e]))
+                         for s, e in zip(starts, ends)]
+        qs = self.queues
+        for qi, _sub in parts:
+            if qs[qi].remaining_capacity() < 1:
+                self._blk_pending = (blk, parts)
+                return False
+        for qi, sub in parts:
+            qs[qi].offer(sub)
+        self._blk_pending = None
+        return True
+
     def offer(self, item: Event) -> bool:
         r = self.routing
         if r == Routing.PARTITIONED:
+            if item.__class__ is EventBlock:
+                return self._offer_block(item)
             return self.queues[self._queue_index_for(item)].offer(item)
         if r == Routing.ROUND_ROBIN:
             n = len(self.queues)
@@ -165,10 +227,17 @@ class EdgeCollector:
             i = start
             while i < n:
                 item = items[i]
+                if item.__class__ is EventBlock:
+                    if not self._offer_block(item):
+                        break
+                    i += 1
+                    continue
                 qi = dest_of(item)
                 j = i + 1
                 while j < n:
                     nxt = items[j]
+                    if nxt.__class__ is EventBlock:
+                        break
                     key = key_fn(nxt) if key_fn is not None else nxt.key
                     q2 = cache_get(key)
                     if q2 is None:
@@ -282,6 +351,12 @@ class ProcessorTasklet:
         self.vertex_name = vertex_name
         self.global_index = global_index
         self.is_source = is_source or not in_queues
+        #: explode shim: a processor that does not declare
+        #: ``accepts_blocks`` receives per-event explosions of any
+        #: EventBlock (exploded at the queue boundary, where the drain's
+        #: per-item type check already runs)
+        self._explode_blocks = not getattr(processor, "accepts_blocks",
+                                           False)
         for i, iq in enumerate(in_queues):
             iq.index = i
         # per-ordinal inboxes
@@ -435,7 +510,8 @@ class ProcessorTasklet:
                 continue
             if iq.priority > cur_priority:
                 continue
-            events, ctrl = iq.q.poll_prefix(DRAIN_BATCH)
+            events, ctrl = iq.q.poll_prefix(DRAIN_BATCH,
+                                            self._explode_blocks)
             if events:
                 progress = True
                 self.items_in += len(events)
@@ -513,7 +589,7 @@ class ProcessorTasklet:
                 if pid is None:
                     pid = hash(key) % PARTITION_COUNT
                 writer.put(self.snapshot_in_progress, self.vertex_name,
-                           key, value, pid)
+                           key, value, pid, instance=self.global_index)
         self.outbox.snapshot_queue.clear()
         self._flush_outbox()
         if ok:
@@ -603,12 +679,15 @@ class ProcessorTasklet:
                 # forward runs of events in bulk, control items one by one
                 while pos < n:
                     item = items[pos]
-                    if item.__class__ is Event or isinstance(item, Event):
+                    cls = item.__class__
+                    if (cls is Event or cls is EventBlock
+                            or isinstance(item, (Event, EventBlock))):
                         j = pos + 1
                         while j < n:
                             nxt = items[j]
-                            if not (nxt.__class__ is Event
-                                    or isinstance(nxt, Event)):
+                            ncls = nxt.__class__
+                            if not (ncls is Event or ncls is EventBlock
+                                    or isinstance(nxt, (Event, EventBlock))):
                                 break
                             j += 1
                         accepted = c.offer_many(items, pos, j)
@@ -645,7 +724,9 @@ class ProcessorTasklet:
                 # a fused source with fan-out can interleave watermarks
                 # here too: they must take the control route on keyed edges
                 if is_source and not (item.__class__ is Event
-                                      or isinstance(item, Event)):
+                                      or item.__class__ is EventBlock
+                                      or isinstance(item,
+                                                    (Event, EventBlock))):
                     col = self._pend_col
                     blocked = False
                     while col < n_cols:
@@ -665,7 +746,9 @@ class ProcessorTasklet:
                 if is_source:
                     j = pos + 1
                     while j < n and (items[j].__class__ is Event
-                                     or isinstance(items[j], Event)):
+                                     or items[j].__class__ is EventBlock
+                                     or isinstance(items[j],
+                                                   (Event, EventBlock))):
                         j += 1
                 else:
                     j = n

@@ -23,7 +23,10 @@ from __future__ import annotations
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
-from .events import MAX_TIME, MIN_TIME, Event, LateEvent, Watermark
+import numpy as np
+
+from .events import (MAX_TIME, MIN_TIME, Event, EventBlock, LateEvent,
+                     Watermark)
 from .processor import Inbox, Processor
 
 
@@ -38,20 +41,32 @@ class AggregateOperation:
     ``accumulate_fns`` has one accumulate function per input ordinal
     (co-aggregation, Jet's AggregateOperation2/3).  ``deduct`` being present
     makes sliding windows O(1) per slide instead of O(size/slide).
+
+    ``kind``/``block_get`` mark ops the columnar accumulate fast path can
+    vectorize: ``kind='count'`` needs nothing else; ``kind='sum'``
+    additionally needs ``block_get(block) -> ndarray`` — the vectorized
+    form of the scalar getter (attached via
+    :func:`~repro.core.events.block_form`).  Everything else accumulates
+    through the scalar path (blocks explode at the vertex boundary).
     """
 
-    __slots__ = ("create", "accumulate_fns", "combine", "deduct", "export")
+    __slots__ = ("create", "accumulate_fns", "combine", "deduct", "export",
+                 "kind", "block_get")
 
     def __init__(self, create: Callable[[], Any],
                  accumulate_fns: Tuple[Callable[[Any, Event], Any], ...],
                  combine: Callable[[Any, Any], Any],
                  deduct: Optional[Callable[[Any, Any], Any]],
-                 export: Callable[[Any], Any]):
+                 export: Callable[[Any], Any],
+                 kind: Optional[str] = None,
+                 block_get: Optional[Callable] = None):
         self.create = create
         self.accumulate_fns = accumulate_fns
         self.combine = combine
         self.deduct = deduct
         self.export = export
+        self.kind = kind
+        self.block_get = block_get
 
     @property
     def accumulate(self):
@@ -65,6 +80,7 @@ def counting() -> AggregateOperation:
         combine=lambda a, b: a + b,
         deduct=lambda a, b: a - b,
         export=lambda acc: acc,
+        kind="count",
     )
 
 
@@ -75,6 +91,8 @@ def summing(get: Callable[[Event], float]) -> AggregateOperation:
         combine=lambda a, b: a + b,
         deduct=lambda a, b: a - b,
         export=lambda acc: acc,
+        kind="sum",
+        block_get=getattr(get, "__block_form__", None),
     )
 
 
@@ -226,6 +244,13 @@ class AccumulateByFrameProcessor(Processor):
         #: events that arrived too late to be admissible (deliberate drops)
         self.late_dropped = 0
         self._last_wm = MIN_TIME
+        #: columnar fast path: counting (needs nothing) and summing (needs
+        #: a vectorized getter) vectorize per block; co-aggregation keeps
+        #: the scalar path (two accumulate fns, object accumulators)
+        self.accepts_blocks = (
+            not self.ordinal_map
+            and (op.kind == "count"
+                 or (op.kind == "sum" and op.block_get is not None)))
 
     def process(self, ordinal: int, inbox: Inbox) -> None:
         acc_fn = self.op.accumulate_fns[self.ordinal_map.get(ordinal, 0)]
@@ -238,6 +263,9 @@ class AccumulateByFrameProcessor(Processor):
         # pass over the inbox (only data events reach a processor's inbox);
         # higher_frame_ts is inlined — it runs once per event
         for ev in inbox:
+            if ev.__class__ is EventBlock:
+                self._accumulate_block(ev, horizon)
+                continue
             fts = (ev.ts // slide + 1) * slide
             if fts <= horizon:
                 # frame's lateness horizon passed: deliberate drop, not the
@@ -252,6 +280,54 @@ class AccumulateByFrameProcessor(Processor):
             acc = get(fkey)
             frames[fkey] = acc_fn(create() if acc is None else acc, ev)
         inbox.clear()
+
+    def _accumulate_block(self, blk: EventBlock, horizon: int) -> None:
+        """Columnar accumulate: frame assignment by floor-divide on the ts
+        column, per-(key, frame) partial aggregation by a stable lexsort +
+        segment reduce.  Within one (key, frame) group rows stay in stream
+        order, so integer sums and counts are bit-identical to the scalar
+        path; the only reassociation is the single ``combine`` of the
+        block partial into the running accumulator."""
+        op = self.op
+        slide = self.wdef.slide
+        ts, keys = blk.ts, blk.key
+        if not len(ts):
+            return
+        fts = (ts // slide + 1) * slide
+        weights = None
+        if op.kind == "sum":
+            weights = np.asarray(op.block_get(blk))
+        late = fts <= horizon
+        if late.any():
+            late_idx = np.nonzero(late)[0]
+            self.late_dropped += len(late_idx)
+            if self.late_output:
+                for i in late_idx.tolist():
+                    le = LateEvent(int(ts[i]), int(keys[i]), blk.value_at(i))
+                    if not self.outbox.offer(le):
+                        self._emit_buf.append(le)
+            keep = np.nonzero(~late)[0]
+            if not len(keep):
+                return
+            keys, fts = keys[keep], fts[keep]
+            if weights is not None:
+                weights = weights[keep]
+        order = np.lexsort((fts, keys))
+        ks, fs = keys[order], fts[order]
+        starts = np.nonzero(np.concatenate(
+            ([True], (ks[1:] != ks[:-1]) | (fs[1:] != fs[:-1]))))[0]
+        if weights is None:
+            sums = np.diff(np.append(starts, len(ks)))
+        else:
+            sums = np.add.reduceat(weights[order], starts)
+        frames = self.frames
+        get = frames.get
+        combine = op.combine
+        gk, gf = ks[starts].tolist(), fs[starts].tolist()
+        for i, part in enumerate(sums.tolist()):
+            fkey = (gk[i], gf[i])
+            cur = get(fkey)
+            frames[fkey] = part if cur is None else combine(cur, part)
 
     def _flush(self) -> bool:
         buf = self._emit_buf

@@ -12,11 +12,12 @@ from __future__ import annotations
 
 from typing import Callable, Dict, Optional
 
-from ..core.events import MIN_TIME, Event, Watermark
+from ..core.events import MIN_TIME, Event, Watermark, block_form
 from ..core.pipeline import Pipeline
 from ..core.processor import Inbox, Processor
 from ..core.window import (AggregateOperation, averaging, co_aggregate,
                            counting, max_by, session, sliding, tumbling)
+from .generator import KIND_BID
 from .model import Auction, Bid, Person
 
 USD_TO_EUR = 0.9
@@ -75,6 +76,24 @@ class IncrementalJoinProcessor(Processor):
 
 def is_bid(v) -> bool:
     return isinstance(v, Bid)
+
+
+# columnar forms over NEXMark generator blocks (the fusion planner lowers
+# filter/rekey chains to these when the whole chain declares block forms;
+# any other block shape explodes to events first, so these only ever see
+# blocks carrying the generator's aux columns)
+block_form(is_bid, lambda blk: blk.cols["kind"] == KIND_BID)
+
+#: grouping key of a bid stream by auction — the generator's key column
+#: already IS the auction id for bid rows
+bid_auction = block_form(lambda b: b.auction, lambda blk: blk.key)
+
+#: grouping key by bidder (NEXMark Q11's session key)
+bid_bidder = block_form(lambda b: b.bidder, lambda blk: blk.cols["bidder"])
+
+#: vectorized price getter for summing-style aggregates over bid streams
+#: (scalar form reads the Event, like every AggregateOperation getter)
+bid_price = block_form(lambda ev: ev.value.price, lambda blk: blk.value)
 
 
 # ---------------------------------------------------------------------------
@@ -169,7 +188,7 @@ def q5(source, sink, window_ms: int = 10_000, slide_ms: int = 10,
     p = Pipeline.create()
     counts = (p.read_from(source, name="bids")
                 .filter(is_bid)
-                .with_key(lambda b: b.auction)
+                .with_key(bid_auction)
                 .window(sliding(window_ms, slide_ms))
                 .aggregate(counting()))
     if with_global_max:
@@ -301,7 +320,7 @@ def q11(source, sink, gap_ms: int = 10_000, allowed_lateness: int = 0,
     p = Pipeline.create()
     win = (p.read_from(source, name="bids")
              .filter(is_bid)
-             .with_key(lambda b: b.bidder)
+             .with_key(bid_bidder)
              .window(session(gap_ms))
              .allowed_lateness(allowed_lateness))
     if late_sink is not None:

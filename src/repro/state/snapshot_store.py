@@ -15,15 +15,26 @@ from .imap import IMap, IMapService
 
 
 class SnapshotWriter:
-    """Tasklets write through this; bound to one (job, snapshot) epoch."""
+    """Tasklets write through this; bound to one (job, snapshot) epoch.
+
+    Entries are stored under ``(vertex, instance, key)``: two parallel
+    instances of one vertex may legitimately hold state under the SAME
+    state key (e.g. the per-node stage-1 window accumulators' partials for
+    one (key, frame)), and without the instance discriminator the second
+    ``put`` silently overwrote the first — restored state lost one
+    instance's share.  Recovery strips the discriminator and hands every
+    entry to the new owner, whose ``restore_from_snapshot`` merges shards
+    of one key (the documented restore contract).
+    """
 
     def __init__(self, store: "SnapshotStore", job_id: str):
         self.store = store
         self.job_id = job_id
 
-    def put(self, snapshot_id: int, vertex: str, key, value, pid: int) -> None:
+    def put(self, snapshot_id: int, vertex: str, key, value, pid: int,
+            instance: int = 0) -> None:
         imap = self.store._map(self.job_id, snapshot_id)
-        imap.put_with_pid((vertex, key), value, pid)
+        imap.put_with_pid((vertex, instance, key), value, pid)
 
 
 class SnapshotStore:
@@ -62,15 +73,18 @@ class SnapshotStore:
     # -- recovery ---------------------------------------------------------------
     def entries_for_partition(self, job_id: str, snapshot_id: int,
                               pid: int) -> List[Tuple[str, Any, Any]]:
-        """[(vertex, key, value)] for one partition of a committed snapshot."""
+        """[(vertex, key, value)] for one partition of a committed snapshot.
+        Multiple entries may share (vertex, key) — one per instance that
+        held a shard of that key's state."""
         imap = self._map(job_id, snapshot_id)
         return [(vertex, key, value)
-                for (vertex, key), value in imap.entries_for_partition(pid).items()]
+                for (vertex, _inst, key), value
+                in imap.entries_for_partition(pid).items()]
 
     def vertex_entries(self, job_id: str, snapshot_id: int,
                        vertex: str) -> List[Tuple[Any, Any]]:
         imap = self._map(job_id, snapshot_id)
-        return [(key, value) for (v, key), value in imap.items().items()
+        return [(key, value) for (v, _inst, key), value in imap.items().items()
                 if v == vertex]
 
     def size(self, job_id: str, snapshot_id: int) -> int:
