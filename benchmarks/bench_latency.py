@@ -126,13 +126,21 @@ def host_q5_latency(rate: float = 20_000, duration_s: float = 4.0,
                     n_keys: int = 100, threads: int = 2,
                     warmup_s: float = 1.0, disorder_ms: int = 0,
                     disorder_seed: int = 7,
-                    block_size: Optional[int] = None) -> Dict:
+                    block_size: Optional[int] = None,
+                    placement: str = "host",
+                    device: Optional[Dict] = None) -> Dict:
     """Paced Q5 on the host tier; returns percentiles + events/s/core.
 
     ``disorder_ms`` > 0 runs the generator through a seeded bounded shuffle
     (events arrive up to that much event time out of order) with a matching
     watermark lag — the p99.99 then includes the completeness wait the lag
     imposes, which is the honest cost of disorder tolerance.
+
+    ``placement="device"`` swaps the host two-stage window plan for the
+    device-offloaded window vertex (core/device_window.py): EventBlocks
+    pack into padded device batches, the compiled StreamExecutor
+    aggregates, and results cross back to host events — the end-to-end
+    ``host_to_device`` bridge measurement.
 
     The whole cluster simulation runs on one OS thread, so aggregate
     events/s == events/s/core."""
@@ -168,11 +176,16 @@ def host_q5_latency(rate: float = 20_000, duration_s: float = 4.0,
         lambda: PacedGeneratorSource(gen, rate=rate, max_events=total,
                                      wm_lag=disorder_ms,
                                      block_size=block_size),
-        lambda: _SinkAdapter(sink), window_ms=window_ms, slide_ms=slide_ms)
+        lambda: _SinkAdapter(sink), window_ms=window_ms, slide_ms=slide_ms,
+        placement=placement, device=device)
+    # submit BEFORE anchoring t0: processor init (incl. the device
+    # vertex's one-time XLA compile) must not count against event latency
+    # — the paced source anchors its own schedule on its first slice,
+    # which happens after init, so t0 and the schedule stay aligned
+    job = cluster.submit(p.to_dag(), JobConfig())
     t0_holder[0] = clock.now()
     cut_holder[0] = t0_holder[0] + warmup_s
     end_holder[0] = t0_holder[0] + total / rate
-    job = cluster.submit(p.to_dag(), JobConfig())
     deadline = time.monotonic() + duration_s * 3 + 10
     t_start = time.monotonic()
     while job.status != JOB_COMPLETED and time.monotonic() < deadline:
@@ -185,7 +198,8 @@ def host_q5_latency(rate: float = 20_000, duration_s: float = 4.0,
     # remaining host-tier time goes (feeds the next perf PR)
     engine["per_vertex_time_share"] = cluster.vertex_time_share()
     return {
-        "tier": "host", "query": "q5", "rate": rate,
+        "tier": "host" if placement == "host" else "host_to_device",
+        "query": "q5", "rate": rate,
         "window_ms": window_ms, "slide_ms": slide_ms,
         "disorder_ms": disorder_ms,
         "events_per_sec_per_core": round(total / wall, 0),
@@ -343,6 +357,14 @@ def run(quick: bool = True, disorder_ms: int = 100) -> Dict:
         result["host_disordered"] = host_q5_latency(
             rate=host_rate, duration_s=4.0 if quick else 10.0,
             disorder_ms=disorder_ms)
+    # the host->device bridge: the same paced Q5 but the window vertex
+    # offloaded to the device tier (EventBlocks -> padded device batches
+    # -> StreamExecutor -> WindowResult events), so the bridge's
+    # throughput and p99.99 trend alongside the pure host/device numbers
+    result["host_to_device"] = host_q5_latency(
+        rate=host_rate, duration_s=4.0 if quick else 10.0,
+        placement="device",
+        device={"n_key_buckets": 128, "batch_size": 1024})
     # >= 10k steps even in quick mode: at millions of events/s this stays
     # well under a minute and makes the headline p99.99 a real measurement
     # (1k steps used to report it null+warning in CI)
@@ -365,7 +387,7 @@ def rows(quick: bool = True, disorder_ms: int = 100) -> List[Dict]:
     write_report(result)
     append_trajectory(result)
     out = []
-    for tier in ("host", "host_disordered", "device"):
+    for tier in ("host", "host_disordered", "host_to_device", "device"):
         r = result.get(tier)
         if r is None:
             continue
@@ -411,6 +433,7 @@ def append_trajectory(result: Dict,
     host = result.get("host", {})
     lat = host.get("latency_ms", {})
     device = result.get("device", {})
+    bridge = result.get("host_to_device", {})
     record = {
         "sha": sha,
         "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
@@ -426,6 +449,12 @@ def append_trajectory(result: Dict,
         "device_events_per_sec_per_core":
             device.get("events_per_sec_per_core"),
         "device_p99.99_ms": device.get("latency_ms", {}).get("p99.99"),
+        "host_to_device_events_per_sec_per_core":
+            bridge.get("events_per_sec_per_core"),
+        "host_to_device_p50_ms":
+            bridge.get("latency_ms", {}).get("p50"),
+        "host_to_device_p99.99_ms":
+            bridge.get("latency_ms", {}).get("p99.99"),
     }
     try:
         records = json.loads(path.read_text())

@@ -55,8 +55,10 @@ def main() -> None:
 
     if args.quick:
         # CI smoke target: the latency harness alone keeps the perf
-        # trajectory (BENCH_latency.json) accumulating per PR; it always
-        # runs both tiers, taking precedence over --skip-host
+        # trajectory (BENCH_latency.json) accumulating per PR; it runs
+        # the host tier, the device tier AND the host_to_device bridge
+        # (the device-placed window vertex), taking precedence over
+        # --skip-host
         sections = [("latency", lambda: bench_latency.rows(quick=quick))]
     else:
         sections = []

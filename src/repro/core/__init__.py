@@ -3,6 +3,7 @@ watermarks, windows, Chandy-Lamport snapshots and backpressure."""
 
 from .clock import Clock, VirtualClock, WallClock
 from .dag import DAG, Edge, PARTITION_COUNT, Routing, Vertex
+from .device_window import DeviceWindowProcessor
 from .engine import (JetCluster, Job, JobConfig, JOB_COMPLETED, JOB_RUNNING)
 from .events import (Barrier, DONE, Event, EventBlock, LateEvent, Watermark,
                      block_form)
@@ -23,6 +24,7 @@ from .window import (AggregateOperation, SessionResult, SessionWindowDef,
 __all__ = [
     "Clock", "VirtualClock", "WallClock",
     "DAG", "Edge", "PARTITION_COUNT", "Routing", "Vertex",
+    "DeviceWindowProcessor",
     "JetCluster", "Job", "JobConfig", "JOB_COMPLETED", "JOB_RUNNING",
     "Barrier", "DONE", "Event", "EventBlock", "LateEvent", "Watermark",
     "block_form",

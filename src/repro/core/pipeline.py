@@ -140,7 +140,28 @@ class WindowedStage:
         self._late_sink = sink_supplier
         return self
 
-    def aggregate(self, op: AggregateOperation) -> GeneralStage:
+    def aggregate(self, op: AggregateOperation, placement: str = "host",
+                  device: Optional[Dict[str, Any]] = None) -> GeneralStage:
+        """``placement="device"`` offloads the aggregation to the compiled
+        device tier: ONE block-aware vertex drives a
+        :class:`~repro.core.device_window.DeviceWindowProcessor`
+        (StreamExecutor step per padded batch) instead of the host
+        two-stage accumulate/combine plan.  ``device`` forwards keyword
+        overrides (``n_key_buckets``, ``batch_size``, ...) to the
+        processor.  Sessions and allowed lateness stay host-only."""
+        if placement == "device":
+            if isinstance(self.wdef, SessionWindowDef):
+                raise ValueError("session windows run on the host")
+            if self._lateness or self._late_sink is not None:
+                raise ValueError(
+                    "allowed_lateness/late_sink are host-only features")
+            st = _Stage(self.pipeline, "window_agg_device", "win_agg_dev",
+                        [self.stage],
+                        {"wdef": self.wdef, "op": op,
+                         "device": device or {}})
+            return GeneralStage(self.pipeline, st)
+        if placement != "host":
+            raise ValueError(f"unknown placement {placement!r}")
         st = _Stage(self.pipeline, "window_agg", "win_agg", [self.stage],
                     {"wdef": self.wdef, "op": op,
                      "lateness": self._lateness,
@@ -709,6 +730,8 @@ class _Planner:
                                    routing=Routing.ISOLATED))
             elif st.kind in ("window_agg", "window_agg2"):
                 self._plan_window_agg(st)
+            elif st.kind == "window_agg_device":
+                self._plan_window_agg_device(st)
             elif st.kind == "hash_join":
                 self._plan_hash_join(st)
             elif st.kind == "sink":
@@ -807,6 +830,24 @@ class _Planner:
         if has_late:
             self._wire_late_sink(st.name, acc_name, late_sink)
         self.vertex_of[st] = cmb_name
+
+    def _plan_window_agg_device(self, st: _Stage) -> None:
+        """Device placement: a block-aware vertex on a distributed
+        partitioned edge, so EventBlocks route vectorized straight into
+        the device packer.  Each parallel instance owns a StreamExecutor
+        over its key-partition subset — partitioning of device state
+        follows partitioning of compute, like the host two-stage plan."""
+        from .device_window import DeviceWindowProcessor
+        name = st.name + ".device"
+        self.dag.vertex(
+            name,
+            (lambda w=st.params["wdef"], o=st.params["op"],
+                    kw=st.params["device"]:
+             DeviceWindowProcessor(w, o, **kw)))
+        e = Edge(self._vname(st.upstreams[0]), name,
+                 routing=Routing.PARTITIONED, distributed=True)
+        self._connect_up(st.upstreams[0], e)
+        self.vertex_of[st] = name
 
     def _plan_session_agg(self, st: _Stage, wdef: SessionWindowDef,
                           op: AggregateOperation, lateness: int,

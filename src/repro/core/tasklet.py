@@ -357,6 +357,11 @@ class ProcessorTasklet:
         #: per-item type check already runs)
         self._explode_blocks = not getattr(processor, "accepts_blocks",
                                            False)
+        #: optional non-blocking pump for processors driving asynchronous
+        #: device work (core/device_window.py): called once per RUNNING
+        #: slice even when no input is pending, so finished device futures
+        #: are harvested without ever blocking the cooperative loop
+        self._poll_async = getattr(processor, "poll_async", None)
         for i, iq in enumerate(in_queues):
             iq.index = i
         # per-ordinal inboxes
@@ -463,6 +468,12 @@ class ProcessorTasklet:
                     progress |= after != before or len(self.outbox) > 0
                     if len(self.outbox):
                         self._flush_outbox()
+        # asynchronous-device processors: harvest finished futures (the
+        # pump is non-blocking; device completions happen off-thread)
+        if self._poll_async is not None:
+            progress |= self._poll_async()
+            if len(self.outbox):
+                self._flush_outbox()
         # watermark became due after this slice's inbox processing
         if self._pending_wm is not None and not self._nonempty_inboxes:
             progress |= self._forward_watermark()

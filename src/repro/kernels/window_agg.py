@@ -54,19 +54,36 @@ def _kernel(key_ref, slot_ref, val_ref, out_ref, *, R: int, BK: int):
 def window_agg(keys, slots, values, valid, n_key_buckets: int, ring_len: int,
                block_k: int = BK, block_n: int = BN,
                interpret: bool = True):
-    """keys/slots: (N,) int32; values/valid: (N,). Returns (K, R) f32."""
+    """keys/slots: (N,) int32; values/valid: (N,). Returns (K, R) f32.
+
+    Non-tile-multiple shapes are handled by padding: the event axis pads
+    with ``valid=False`` rows (value forced to 0 below, so they contribute
+    nothing) and the key axis pads to the next tile multiple with buckets
+    no event points at; the padded key rows are sliced off the result.
+    """
     N = keys.shape[0]
     K, R = n_key_buckets, ring_len
+    if N == 0:
+        return jnp.zeros((K, R), jnp.float32)
     bn = min(block_n, N)
     bk = min(block_k, K)
-    assert N % bn == 0 and K % bk == 0, (N, bn, K, bk)
+    n_pad = (-N) % bn
+    if n_pad:
+        keys = jnp.concatenate([keys, jnp.zeros((n_pad,), keys.dtype)])
+        slots = jnp.concatenate([slots, jnp.zeros((n_pad,), slots.dtype)])
+        values = jnp.concatenate(
+            [values, jnp.zeros((n_pad,), values.dtype)])
+        valid = jnp.concatenate([valid, jnp.zeros((n_pad,), bool)])
+        N += n_pad
+    k_pad = (-K) % bk
+    K_padded = K + k_pad
     vals = jnp.where(valid, values, 0.0).astype(jnp.float32)
     # out-of-range guard: invalid events point at a bucket that exists but
     # carry value 0, so they contribute nothing
     keys = jnp.where(valid, keys, 0).astype(jnp.int32)
     slots = jnp.where(valid, slots, 0).astype(jnp.int32)
-    grid = (K // bk, N // bn)
-    return pl.pallas_call(
+    grid = (K_padded // bk, N // bn)
+    out = pl.pallas_call(
         functools.partial(_kernel, R=R, BK=bk),
         grid=grid,
         in_specs=[
@@ -75,6 +92,7 @@ def window_agg(keys, slots, values, valid, n_key_buckets: int, ring_len: int,
             pl.BlockSpec((bn,), lambda kt, nt: (nt,)),
         ],
         out_specs=pl.BlockSpec((bk, R), lambda kt, nt: (kt, 0)),
-        out_shape=jax.ShapeDtypeStruct((K, R), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((K_padded, R), jnp.float32),
         interpret=interpret,
     )(keys, slots, vals)
+    return out[:K] if k_pad else out

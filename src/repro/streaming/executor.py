@@ -215,11 +215,16 @@ class StreamExecutor:
             st = accumulate(loc_spec, st, r_ts.reshape(-1),
                             (r_key.reshape(-1) - first), r_val.reshape(-1),
                             r_ok.reshape(-1), batch.get("wm"))
-            # watermark frontier comes from the PRE-ROUTE local slice
-            # (sources are ts-ordered per shard); coalesce with pmin
-            frontier = jnp.max(jnp.where(valid, ts, -1)).astype(jnp.int32)
-            wm = jax.lax.pmin(
-                jnp.maximum(frontier, state["watermark"]), "data")
+            # watermark frontier comes from the PRE-ROUTE local slice,
+            # trailing by the bounded-out-of-orderness allowance; coalesce
+            # with pmin (hint-only mode skips the data frontier entirely)
+            if spec.frontier_from_data:
+                frontier = jnp.max(jnp.where(valid, ts, -1)).astype(
+                    jnp.int32) - jnp.int32(spec.wm_lag)
+                wm = jnp.maximum(frontier, state["watermark"])
+            else:
+                wm = state["watermark"]
+            wm = jax.lax.pmin(wm, "data")
             if batch.get("wm") is not None:
                 wm = jnp.maximum(wm, jnp.asarray(batch["wm"], jnp.int32))
             st["watermark"] = wm

@@ -18,12 +18,28 @@ Frame/window convention: frame ``f`` covers event time
 frames ``[L-F+1, L]`` and its end is ``w_end = (L+1)*slide``; it emits
 once the watermark reaches ``w_end``.
 
-All shapes are static; a step emits at most ``max_windows_per_step``
-windows, each tagged valid/invalid; events that arrive after their last
-window emitted are dropped and counted (``dropped_late``), events whose
-ring slot is still occupied by a live older frame are dropped and counted
-(``dropped_conflict`` — bounded by pacing ingestion against emission,
-which is the executor's credit-based backpressure job).
+All shapes are static; a step emits up to ``max_windows_per_step`` windows
+per emission *round* and loops rounds (bounded ``lax.while_loop``) until
+the emission front catches the watermark or the per-step output buffer
+(``max_windows_per_step * emit_rounds`` rows) fills; empty windows — no
+live frame in range — are skipped in O(1) by fast-forwarding the front,
+so an idle source followed by a burst (or a large ``wm`` heartbeat jump)
+cannot leave emission permanently behind.  Events that arrive after their
+last window emitted are dropped and counted (``dropped_late``), events
+whose ring slot is still occupied by a live older frame are dropped and
+counted (``dropped_conflict`` — bounded by pacing ingestion against
+emission, which is the executor's credit-based backpressure job).
+
+``wm_lag`` is the bounded-out-of-orderness allowance (the host tier's
+``EventTimePolicy.lag``): the data-driven watermark frontier is
+``max(ts) - wm_lag``, so cross-batch disorder up to ``wm_lag`` of event
+time is admitted instead of silently dropped as late — ordered and
+disordered runs with ``wm_lag >= max_skew_ms`` produce identical results,
+the same disorder-equivalence guarantee the host tier gives.
+``frontier_from_data=False`` disables the data-driven frontier entirely:
+the watermark then advances only on explicit ``wm`` hints, which is how
+the host bridge (core/device_window.py) drives emission from the host's
+own coalesced watermarks.
 """
 
 from __future__ import annotations
@@ -34,6 +50,9 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+#: sentinel for "no frame / uninitialised emission front" (int32-safe)
+_FAR = 2**30
+
 
 @dataclasses.dataclass(frozen=True)
 class VectorWindowSpec:
@@ -42,6 +61,15 @@ class VectorWindowSpec:
     n_key_buckets: int = 1024
     max_windows_per_step: int = 4
     ring_margin: int = 4
+    #: bounded out-of-orderness allowance subtracted from the data-driven
+    #: watermark frontier (0 keeps the legacy max(ts) frontier)
+    wm_lag: int = 0
+    #: False = the watermark advances only on explicit ``wm`` hints (the
+    #: host bridge mode: host watermarks are already lagged at the source)
+    frontier_from_data: bool = True
+    #: max emission rounds per step (0 = auto: ceil(ring_len / E), enough
+    #: output rows to retire every live frame's next window in one step)
+    emit_rounds: int = 0
 
     @property
     def frames_per_window(self) -> int:
@@ -50,7 +78,23 @@ class VectorWindowSpec:
 
     @property
     def ring_len(self) -> int:
-        return self.frames_per_window + self.ring_margin
+        # the watermark lag keeps frames live for wm_lag/slide extra
+        # slides past the emission front: size the ring for it, or the
+        # admitted disorder would bleed straight into ring conflicts
+        lag_frames = -(-self.wm_lag // self.slide_ms) if self.wm_lag else 0
+        return self.frames_per_window + self.ring_margin + lag_frames
+
+    @property
+    def emit_rounds_resolved(self) -> int:
+        if self.emit_rounds > 0:
+            return self.emit_rounds
+        return -(-self.ring_len // self.max_windows_per_step)
+
+    @property
+    def emit_buffer_rows(self) -> int:
+        """Rows in a step's emission output (``results``/``window_ends``/
+        ``valid`` leading dimension)."""
+        return self.max_windows_per_step * self.emit_rounds_resolved
 
 
 def window_state_init(spec: VectorWindowSpec, dtype=jnp.float32) -> Dict:
@@ -103,8 +147,14 @@ def accumulate(spec: VectorWindowSpec, state: Dict, ts, key_bucket, value,
     slot_frame = slot_frame.at[jnp.where(live, slot, R)].max(
         jnp.where(live, frame, -1), mode="drop")
 
-    wm = jnp.maximum(state["watermark"],
-                     jnp.max(jnp.where(valid, ts, -1)).astype(jnp.int32))
+    wm = state["watermark"]
+    if spec.frontier_from_data:
+        # bounded out-of-orderness: the frontier trails the running-max
+        # timestamp by wm_lag, so cross-batch disorder within the
+        # allowance is admitted instead of dropped as late
+        frontier = jnp.max(jnp.where(valid, ts, -1)).astype(jnp.int32) \
+            - jnp.int32(spec.wm_lag)
+        wm = jnp.maximum(wm, frontier)
     if wm_hint is not None:
         wm = jnp.maximum(wm, jnp.asarray(wm_hint, jnp.int32))
     return dict(state, panes=panes, slot_frame=slot_frame, watermark=wm,
@@ -114,43 +164,96 @@ def accumulate(spec: VectorWindowSpec, state: Dict, ts, key_bucket, value,
 
 def emit(spec: VectorWindowSpec, state: Dict
          ) -> Tuple[Dict, Dict[str, jnp.ndarray]]:
-    """Jet stage 2, vectorized: emit up to ``max_windows_per_step`` window
-    results with end <= watermark; evict the frame each emission retires."""
+    """Jet stage 2, vectorized: emit window results with end <= watermark;
+    evict the frame each emission retires.
+
+    Emission runs in rounds of ``max_windows_per_step`` windows (one
+    ``(E, R) @ (R, K)`` matmul per round) inside a bounded
+    ``lax.while_loop`` that stops when the front passes the watermark or
+    the output buffer (``emit_buffer_rows`` rows) fills.  Between rounds
+    the front *fast-forwards over empty windows* — window ends no live
+    frame participates in — so a watermark jump across an idle gap (idle
+    source then burst, or a ``wm`` heartbeat) costs O(1) instead of one
+    round per skipped window: emission can no longer fall permanently
+    behind and bleed ``dropped_conflict``.
+    """
     K, R, F = spec.n_key_buckets, spec.ring_len, spec.frames_per_window
     slide = spec.slide_ms
     E = spec.max_windows_per_step
+    EB = spec.emit_buffer_rows
 
     wm = state["watermark"]
-    # initialise next_emit from the first frame present
-    first_frame = jnp.min(jnp.where(state["slot_frame"] >= 0,
-                                    state["slot_frame"], 2**30))
-    ne0 = jnp.where(state["next_emit"] < 0,
-                    (first_frame + 1) * slide,
-                    state["next_emit"])
+    panes0, slot_frame0 = state["panes"], state["slot_frame"]
+    # first window end strictly beyond the watermark: reaching it means
+    # emission is fully caught up
+    caught = (wm // slide + 1) * slide
 
-    # all E candidate windows in ONE matmul: masks (E, R) @ panes (R, K)
-    panes, slot_frame = state["panes"], state["slot_frame"]
-    w_ends = ne0 + jnp.arange(E, dtype=jnp.int32) * slide
-    ready = (w_ends <= wm) & (ne0 < 2**30)                      # (E,)
-    L = w_ends // slide - 1                                     # (E,)
-    ring_f = slot_frame                                         # (R,)
-    in_win = ((ring_f[None, :] > (L - F)[:, None])
-              & (ring_f[None, :] <= L[:, None])
-              & (ring_f[None, :] >= 0) & ready[:, None])
-    masks = jnp.where(in_win, 1.0, 0.0).astype(panes.dtype)     # (E, R)
-    results = masks @ panes                                     # (E, K)
-    # evict every frame retired by an emitted window (single pass)
-    evict = jnp.any((ring_f[None, :] == (L - F + 1)[:, None])
-                    & ready[:, None], axis=0) & (ring_f >= 0)
-    panes = jnp.where(evict[:, None], 0.0, panes)
-    slot_frame = jnp.where(evict, -1, slot_frame)
-    n_emitted = jnp.sum(ready, dtype=jnp.int32)
-    new_next = jnp.where(ne0 < 2**30, ne0 + n_emitted * slide,
-                         state["next_emit"])
+    def fast_forward(ne, slot_frame):
+        """Smallest window end >= ne containing a live frame; if none is
+        at or below the watermark, jump to ``caught`` (every window in
+        between is empty — skipping it emits exactly nothing)."""
+        live = slot_frame >= 0
+        # frame f participates in windows ending (f+1)*slide..(f+F)*slide
+        cand = jnp.where(live & ((slot_frame + F) * slide >= ne),
+                         jnp.maximum(ne, (slot_frame + 1) * slide), _FAR)
+        nxt = jnp.min(cand)
+        return jnp.where(ne >= _FAR, ne,
+                         jnp.where(nxt <= wm, nxt,
+                                   jnp.maximum(ne, caught)))
+
+    # initialise next_emit from the first frame present
+    first_frame = jnp.min(jnp.where(slot_frame0 >= 0, slot_frame0, _FAR))
+    ne0 = jnp.where(state["next_emit"] < 0,
+                    jnp.where(first_frame < _FAR,
+                              (first_frame + 1) * slide,
+                              jnp.int32(_FAR)),
+                    state["next_emit"])
+    ne0 = fast_forward(ne0, slot_frame0)
+
+    res0 = jnp.zeros((EB, panes0.shape[1]), panes0.dtype)
+    ends0 = jnp.zeros((EB,), jnp.int32)
+    val0 = jnp.zeros((EB,), bool)
+
+    def cond(carry):
+        ne, _panes, _sf, _res, _ends, _val, count = carry
+        return (ne <= wm) & (ne < _FAR) & (count + E <= EB)
+
+    def body(carry):
+        ne, panes, slot_frame, res, ends, val, count = carry
+        # E candidate windows in ONE matmul: masks (E, R) @ panes (R, K)
+        w_ends = ne + jnp.arange(E, dtype=jnp.int32) * slide
+        ready = w_ends <= wm                                    # (E,)
+        L = w_ends // slide - 1                                 # (E,)
+        ring_f = slot_frame                                     # (R,)
+        in_win = ((ring_f[None, :] > (L - F)[:, None])
+                  & (ring_f[None, :] <= L[:, None])
+                  & (ring_f[None, :] >= 0) & ready[:, None])
+        masks = jnp.where(in_win, 1.0, 0.0).astype(panes.dtype)  # (E, R)
+        results = masks @ panes                                  # (E, K)
+        # evict every frame retired by an emitted window (single pass)
+        evict = jnp.any((ring_f[None, :] == (L - F + 1)[:, None])
+                        & ready[:, None], axis=0) & (ring_f >= 0)
+        panes = jnp.where(evict[:, None], 0.0, panes)
+        slot_frame = jnp.where(evict, -1, slot_frame)
+        n_emitted = jnp.sum(ready, dtype=jnp.int32)
+        # the ready rows are a prefix of the E candidates (w_ends are
+        # ascending), so advancing the cursor by n_emitted lets the next
+        # round overwrite only the not-ready tail
+        res = jax.lax.dynamic_update_slice(res, results, (count, 0))
+        ends = jax.lax.dynamic_update_slice(ends, w_ends, (count,))
+        val = jax.lax.dynamic_update_slice(val, ready, (count,))
+        count = count + n_emitted
+        ne = fast_forward(ne + n_emitted * slide, slot_frame)
+        return ne, panes, slot_frame, res, ends, val, count
+
+    ne_f, panes, slot_frame, res, ends, val, _count = jax.lax.while_loop(
+        cond, body,
+        (ne0, panes0, slot_frame0, res0, ends0, val0, jnp.int32(0)))
+
+    new_next = jnp.where(ne_f < _FAR, ne_f, state["next_emit"])
     out_state = dict(state, panes=panes, slot_frame=slot_frame,
                      next_emit=new_next)
-    return out_state, {"results": results, "window_ends": w_ends,
-                       "valid": ready}
+    return out_state, {"results": res, "window_ends": ends, "valid": val}
 
 
 def step(spec: VectorWindowSpec, state: Dict, batch: Dict
