@@ -210,32 +210,38 @@ def host_q5_latency(rate: float = 20_000, duration_s: float = 4.0,
 
 def host_q5_saturation(n_events: int = 800_000, threads: int = 2,
                        probe_rate: float = 2_000_000,
-                       block_size: Optional[int] = None) -> float:
+                       block_size: Optional[int] = None,
+                       backend: str = "inproc") -> float:
     """Max sustained events/s/core: pace far beyond capacity (every event
     is always due) and measure the wall time to drain a fixed stream.
 
     ``block_size=0`` forces the scalar per-event datapath (the A/B
     baseline for the columnar EventBlock path); the default auto-enables
-    columnar blocks."""
+    columnar blocks.  ``backend="mp"`` runs the same fixed stream across
+    ``threads`` real worker processes over shared-memory rings (the
+    coordinator loop stays on this thread)."""
     from repro.core import (JetCluster, PacedGeneratorSource, WallClock)
     from repro.core.engine import JOB_COMPLETED
     from repro.nexmark import NexmarkGenerator, queries
     from .common import _SinkAdapter
 
     cluster = JetCluster(n_nodes=1, cooperative_threads=threads,
-                         clock=WallClock())
+                         clock=WallClock(), backend=backend)
     gen = NexmarkGenerator(rate=probe_rate, n_keys=100)
     p = queries.q5(
         lambda: PacedGeneratorSource(gen, rate=probe_rate,
                                      max_events=n_events,
                                      block_size=block_size),
         lambda: _SinkAdapter(lambda ev: None), window_ms=1000, slide_ms=20)
-    job = cluster.submit(p.to_dag())
-    t0 = time.monotonic()
-    deadline = t0 + 120
-    while job.status != JOB_COMPLETED and time.monotonic() < deadline:
-        cluster.step()
-    wall = time.monotonic() - t0
+    try:
+        job = cluster.submit(p.to_dag())
+        t0 = time.monotonic()
+        deadline = t0 + 120
+        while job.status != JOB_COMPLETED and time.monotonic() < deadline:
+            cluster.step()
+        wall = time.monotonic() - t0
+    finally:
+        cluster.shutdown()
     return n_events / wall
 
 
@@ -253,6 +259,89 @@ def host_q5_saturation_ab(n_events: int = 600_000, threads: int = 2,
         "saturation_scalar_events_per_sec_per_core": round(max(scalar), 0),
         "saturation_block_speedup": round(max(blocked) / max(scalar), 2),
         "saturation_rounds": rounds,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Multiprocess backend: same host-tier Q5 across real worker processes
+# ---------------------------------------------------------------------------
+
+
+def mp_q5_latency(rate: float = 20_000, duration_s: float = 4.0,
+                  workers: int = 2, window_ms: int = 1000,
+                  slide_ms: int = 20, n_keys: int = 100,
+                  warmup_s: float = 1.0,
+                  block_size: Optional[int] = None) -> Dict:
+    """Paced Q5 on the multiprocess backend: ``workers`` real OS processes
+    exchanging EventBlocks over shared-memory rings, coordinator on this
+    thread.
+
+    The in-process harness can close over a parent-side sink; here the
+    sink runs inside a forked worker, so the latency clock is rebuilt from
+    shipped data instead: ``CollectorSink(with_time=True)`` stamps each
+    result with the child's wall clock at emission (same machine, same
+    clock domain), results ship to the coordinator incrementally, and t0
+    is the paced source's schedule anchor reported back with the worker's
+    final stats (``MultiprocessBackend.source_start``)."""
+    from repro.core import (CollectorSink, JetCluster, JobConfig,
+                            PacedGeneratorSource, WallClock)
+    from repro.core.engine import JOB_COMPLETED
+    from repro.nexmark import NexmarkGenerator, queries
+
+    cluster = JetCluster(n_nodes=1, cooperative_threads=workers,
+                         clock=WallClock(), backend="mp")
+    gen = NexmarkGenerator(rate=rate, n_keys=n_keys)
+    total = int(rate * duration_s)
+    out: list = []
+    p = queries.q5(
+        lambda: PacedGeneratorSource(gen, rate=rate, max_events=total,
+                                     block_size=block_size),
+        lambda: CollectorSink(out, with_time=True),
+        window_ms=window_ms, slide_ms=slide_ms)
+    try:
+        job = cluster.submit(p.to_dag(), JobConfig())
+        deadline = time.monotonic() + duration_s * 3 + 10
+        t_start = time.monotonic()
+        while job.status != JOB_COMPLETED and time.monotonic() < deadline:
+            cluster.step()
+        wall = time.monotonic() - t_start
+        t0 = cluster.backend.source_start(job.execution)
+    finally:
+        cluster.shutdown()
+    hist = LatencyHistogram()
+    if t0 is not None:
+        cut = t0 + warmup_s
+        end = t0 + total / rate
+        for t_arr, ev in out:
+            ideal = t0 + (ev.ts + 1) / 1000.0
+            # same filters as the in-process harness: drop warmup and the
+            # end-of-stream flush (ideal times in the future)
+            if cut <= t_arr and ideal <= end:
+                hist.record((t_arr - ideal) * 1e6)
+    return {
+        "tier": "host_mp", "backend": "mp", "query": "q5", "rate": rate,
+        "workers": workers, "window_ms": window_ms, "slide_ms": slide_ms,
+        "events_per_sec": round(total / wall, 0),
+        "latency_ms": hist.summary_ms(),
+    }
+
+
+def mp_saturation_curve(n_events: int = 200_000,
+                        workers=(1, 2, 4)) -> Dict:
+    """Blocked-Q5 saturation at each worker-process count — the scaling
+    shape of the shared-memory substrate.  The host's core count is
+    recorded alongside: on a single-core box the curve can only show the
+    coordination overhead of extra processes, not parallel speedup, and
+    the record must say so."""
+    import os
+    curve = {}
+    for w in workers:
+        curve[str(w)] = round(host_q5_saturation(
+            n_events=n_events, threads=w, backend="mp"), 0)
+    return {
+        "figure": "mp_saturation_curve", "backend": "mp",
+        "cpus": os.cpu_count(), "n_events": n_events,
+        "saturation_events_per_sec_by_workers": curve,
     }
 
 
@@ -334,12 +423,20 @@ def device_q5_latency(steps: int = 2000, batch: int = 4096,
 # ---------------------------------------------------------------------------
 
 
-def run(quick: bool = True, disorder_ms: int = 100) -> Dict:
+def run(quick: bool = True, disorder_ms: int = 100,
+        backend: str = "inproc", workers: Optional[int] = None) -> Dict:
     host_rate = 20_000
-    host = host_q5_latency(rate=host_rate,
-                           duration_s=4.0 if quick else 10.0)
-    host.update(host_q5_saturation_ab(
-        n_events=600_000 if quick else 2_000_000))
+    duration = 4.0 if quick else 10.0
+    threads = workers or 2
+    if backend == "mp":
+        # the knob swaps the substrate under the paced host run itself
+        host = mp_q5_latency(rate=host_rate, duration_s=duration,
+                             workers=threads)
+    else:
+        host = host_q5_latency(rate=host_rate, duration_s=duration,
+                               threads=threads)
+        host.update(host_q5_saturation_ab(
+            n_events=600_000 if quick else 2_000_000))
     result = {
         "meta": {
             "metric": "event-time -> emission latency (ms), "
@@ -348,9 +445,20 @@ def run(quick: bool = True, disorder_ms: int = 100) -> Dict:
             "host_config": {"query": "q5", "rate": host_rate,
                             "window_ms": 1000, "slide_ms": 20},
             "quick": quick,
+            "backend": backend,
+            "workers": threads,
         },
         "host": host,
     }
+    # multiprocess substrate, always measured so the trajectory tracks it:
+    # paced percentiles at the default worker count plus the saturation
+    # curve across 1/2/4 worker processes
+    if backend != "mp":
+        result["host_mp"] = mp_q5_latency(rate=host_rate,
+                                          duration_s=duration,
+                                          workers=threads)
+    result["mp_saturation"] = mp_saturation_curve(
+        n_events=200_000 if quick else 600_000)
     if disorder_ms > 0:
         # the paper's "handles out-of-order streams" claim, measured: same
         # query under bounded skew with a matching watermark lag
@@ -381,21 +489,30 @@ def write_report(result: Dict,
     return path
 
 
-def rows(quick: bool = True, disorder_ms: int = 100) -> List[Dict]:
+def rows(quick: bool = True, disorder_ms: int = 100,
+         backend: str = "inproc",
+         workers: Optional[int] = None) -> List[Dict]:
     """CSV-row shaped output for benchmarks.run."""
-    result = run(quick, disorder_ms=disorder_ms)
+    result = run(quick, disorder_ms=disorder_ms, backend=backend,
+                 workers=workers)
     write_report(result)
     append_trajectory(result)
     out = []
-    for tier in ("host", "host_disordered", "host_to_device", "device"):
+    for tier in ("host", "host_mp", "host_disordered", "host_to_device",
+                 "device"):
         r = result.get(tier)
         if r is None:
             continue
         lat = r["latency_ms"]
         row = {"figure": f"latency_{tier}",
-               "events_per_sec_per_core": r["events_per_sec_per_core"],
+               "events_per_sec_per_core":
+                   r.get("events_per_sec_per_core", r.get("events_per_sec")),
                **{k: lat[k] for k in ("p50", "p99", "p99.9", "p99.99")},
                "samples": lat["samples"]}
+        if r.get("backend"):
+            row["backend"] = r["backend"]
+        if r.get("workers"):
+            row["workers"] = r["workers"]
         if lat.get("warning"):
             row["warning"] = lat["warning"]
         if r.get("disorder_ms"):
@@ -405,6 +522,13 @@ def rows(quick: bool = True, disorder_ms: int = 100) -> List[Dict]:
                   "saturation_block_speedup"):
             if k in r:
                 row[k] = r[k]
+        out.append(row)
+    sat = result.get("mp_saturation")
+    if sat:
+        row = {"figure": "mp_saturation_curve", "cpus": sat["cpus"],
+               "n_events": sat["n_events"]}
+        for w, v in sat["saturation_events_per_sec_by_workers"].items():
+            row[f"workers_{w}_events_per_sec"] = v
         out.append(row)
     return out
 
@@ -456,6 +580,22 @@ def append_trajectory(result: Dict,
         "host_to_device_p99.99_ms":
             bridge.get("latency_ms", {}).get("p99.99"),
     }
+    # multiprocess substrate: paced percentiles + per-worker-count
+    # saturation curve (dict keyed by worker-process count), with the
+    # host's core count so single-core records are not misread as
+    # failed scaling
+    mp = result.get("host_mp") or (
+        host if host.get("backend") == "mp" else {})
+    sat = result.get("mp_saturation", {})
+    record.update({
+        "mp_workers": mp.get("workers"),
+        "mp_paced_events_per_sec": mp.get("events_per_sec"),
+        "mp_paced_p50_ms": mp.get("latency_ms", {}).get("p50"),
+        "mp_paced_p99.99_ms": mp.get("latency_ms", {}).get("p99.99"),
+        "mp_saturation_events_per_sec_by_workers":
+            sat.get("saturation_events_per_sec_by_workers"),
+        "cpus": sat.get("cpus"),
+    })
     try:
         records = json.loads(path.read_text())
         if not isinstance(records, list):
@@ -474,8 +614,15 @@ if __name__ == "__main__":
     ap.add_argument("--disorder", type=int, default=100, metavar="SKEW_MS",
                     help="bounded-shuffle skew for the disordered host run "
                          "(0 disables it)")
+    ap.add_argument("--backend", choices=("inproc", "mp"), default="inproc",
+                    help="substrate for the paced host run (the mp "
+                         "saturation curve is measured either way)")
+    ap.add_argument("--workers", type=int, default=None, metavar="N",
+                    help="cooperative threads (inproc) / worker processes "
+                         "(mp) for the paced host run; default 2")
     args = ap.parse_args()
-    result = run(quick=not args.full, disorder_ms=args.disorder)
+    result = run(quick=not args.full, disorder_ms=args.disorder,
+                 backend=args.backend, workers=args.workers)
     p = write_report(result)
     t = append_trajectory(result)
     print(json.dumps(result, indent=1, default=float))

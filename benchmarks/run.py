@@ -45,6 +45,13 @@ def main() -> None:
                          "(both tiers); emits BENCH_latency.json")
     ap.add_argument("--skip-host", action="store_true",
                     help="skip the wall-clock host-tier figures")
+    ap.add_argument("--backend", choices=("inproc", "mp"), default="inproc",
+                    help="execution substrate for the paced host-tier run: "
+                         "cooperative in-process simulation (default) or "
+                         "real worker processes over shared-memory rings")
+    ap.add_argument("--workers", type=int, default=None, metavar="N",
+                    help="cooperative threads (inproc) / worker processes "
+                         "(mp) for the paced host-tier run; default 2")
     args = ap.parse_args()
     quick = not args.full
 
@@ -53,19 +60,20 @@ def main() -> None:
     all_rows = []
     print("name,us_per_call,derived")
 
+    latency_rows = lambda: bench_latency.rows(  # noqa: E731
+        quick=quick, backend=args.backend, workers=args.workers)
     if args.quick:
         # CI smoke target: the latency harness alone keeps the perf
         # trajectory (BENCH_latency.json) accumulating per PR; it runs
-        # the host tier, the device tier AND the host_to_device bridge
-        # (the device-placed window vertex), taking precedence over
-        # --skip-host
-        sections = [("latency", lambda: bench_latency.rows(quick=quick))]
+        # the host tier (both substrates: inproc + mp saturation curve),
+        # the device tier AND the host_to_device bridge (the device-placed
+        # window vertex), taking precedence over --skip-host
+        sections = [("latency", latency_rows)]
     else:
         sections = []
         if not args.skip_host:
             # the latency harness drives the wall-clock host tier too
-            sections.append(
-                ("latency", lambda: bench_latency.rows(quick=quick)))
+            sections.append(("latency", latency_rows))
             sections += [
                 ("fig7",
                  lambda: bench_figures.fig7_throughput_vs_latency(quick)),

@@ -1,6 +1,7 @@
 """Jet core: DAG execution engine with tasklets, cooperative scheduling,
 watermarks, windows, Chandy-Lamport snapshots and backpressure."""
 
+from .backend import ExecutionBackend, InProcessBackend, make_backend
 from .clock import Clock, VirtualClock, WallClock
 from .dag import DAG, Edge, PARTITION_COUNT, Routing, Vertex
 from .device_window import DeviceWindowProcessor
@@ -22,6 +23,7 @@ from .window import (AggregateOperation, SessionResult, SessionWindowDef,
                      summing, to_list, tumbling)
 
 __all__ = [
+    "ExecutionBackend", "InProcessBackend", "make_backend",
     "Clock", "VirtualClock", "WallClock",
     "DAG", "Edge", "PARTITION_COUNT", "Routing", "Vertex",
     "DeviceWindowProcessor",

@@ -1,0 +1,190 @@
+"""Pluggable execution substrates for the Jet engine.
+
+The engine core (:mod:`repro.core.engine`) is substrate-agnostic: it plans
+executions, owns job lifecycle and snapshot *policy*, and delegates every
+"how does work actually run" decision to an :class:`ExecutionBackend`.  Two
+backends ship:
+
+* :class:`InProcessBackend` (default) — the paper-faithful cooperative
+  model with every worker stepped by one driver thread.  All queues are
+  in-process (:class:`~repro.core.queues.SPSCQueue` locally,
+  :class:`~repro.core.backpressure.NetworkLink` across simulated nodes).
+* :class:`~repro.runtime.worker_proc.MultiprocessBackend` — each
+  (node, cooperative-thread) pair becomes a real OS process; edges that
+  cross a process boundary become shared-memory EventBlock rings
+  (:class:`~repro.core.shm_ring.ShmRing`).
+
+The backend contract
+====================
+
+A backend is bound to one :class:`~repro.core.engine.JetCluster` and is
+consulted at four points of an execution's life:
+
+**Build time** (inside ``ExecutionContext._build``):
+
+* ``create_snapshot_context(job)`` returns the
+  :class:`~repro.core.tasklet.SnapshotContext` coordinating barrier/ack
+  bookkeeping for one execution attempt.  The in-process context acks
+  synchronously; the multiprocess one broadcasts begin/committed over
+  control pipes and collects acks (plus snapshot entries) from workers.
+* ``make_transport(execution, edge, src, dst)`` returns the queue-like
+  object carrying items from producer location ``src`` to consumer
+  location ``dst`` (each a ``(node_id, worker_slot)`` pair).  The object
+  must satisfy the transport contract documented on
+  :class:`~repro.core.queues.SPSCQueue` (offer/offer_many/has_room_for/
+  poll/peek/poll_prefix).
+* ``assign_tasklet(execution, inst, tasklet)`` places a built tasklet on
+  its worker (an in-process :class:`CooperativeWorker`, or a recorded
+  (node, slot) -> process plan).
+
+**Lifecycle**: ``start_execution`` runs after build *and after any
+snapshot restore* (the multiprocess backend forks workers here, so
+restored state is inherited by the children); ``stop_execution`` tears an
+attempt down (remove tasklets from workers / terminate worker processes
+and unlink rings).  Both must be idempotent.
+
+**Driving**: ``step(jobs)`` performs one scheduler iteration of whatever
+the backend owns (stepping cooperative workers and pumping links, or
+draining worker control pipes) and returns whether progress was made;
+``execution_done(execution)`` reports completion of the data plane.
+
+**Snapshot fan-out**: ``notify_snapshot_committed(execution, sid)``
+delivers the phase-2 commit signal to every processor's
+``on_snapshot_committed`` hook wherever the processors actually live.
+
+``clock_supported(clock)`` lets a backend veto clocks it cannot honor (a
+:class:`~repro.core.clock.VirtualClock` cannot tick across processes).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+from .backpressure import NetworkLink
+from .clock import Clock, VirtualClock
+from .queues import SPSCQueue
+from .tasklet import GUARANTEE_NONE, SnapshotContext
+
+Location = Tuple[int, int]      # (node_id, worker_slot)
+
+
+class ExecutionBackend:
+    """Abstract execution substrate; see the module docstring for the
+    contract.  Subclasses must be stateless across executions except for
+    what they stash in ``execution.backend_data``."""
+
+    name = "abstract"
+
+    def __init__(self):
+        self.cluster = None
+
+    def bind(self, cluster) -> None:
+        self.cluster = cluster
+
+    def clock_supported(self, clock: Clock) -> bool:
+        return True
+
+    # -- build time ----------------------------------------------------------
+    def create_snapshot_context(self, job) -> SnapshotContext:
+        raise NotImplementedError
+
+    def make_transport(self, execution, edge, src: Location,
+                       dst: Location):
+        raise NotImplementedError
+
+    def assign_tasklet(self, execution, inst, tasklet) -> None:
+        raise NotImplementedError
+
+    # -- lifecycle -----------------------------------------------------------
+    def start_execution(self, execution) -> None:
+        raise NotImplementedError
+
+    def stop_execution(self, execution) -> None:
+        raise NotImplementedError
+
+    # -- driving -------------------------------------------------------------
+    def step(self, jobs) -> bool:
+        raise NotImplementedError
+
+    def execution_done(self, execution) -> bool:
+        raise NotImplementedError
+
+    def notify_snapshot_committed(self, execution, snapshot_id: int) -> None:
+        raise NotImplementedError
+
+    def shutdown(self) -> None:
+        """Release any cluster-wide resources (idempotent)."""
+
+
+class InProcessBackend(ExecutionBackend):
+    """The default cooperative substrate: every tasklet of every node runs
+    on this thread, stepped round-robin; cross-node edges are simulated
+    :class:`NetworkLink`s pumped once per scheduler iteration.  This is
+    byte-for-byte the seed engine's behavior, factored behind the backend
+    contract."""
+
+    name = "inproc"
+
+    def create_snapshot_context(self, job) -> SnapshotContext:
+        writer = (self.cluster.snapshot_store.writer(job.id)
+                  if job.config.processing_guarantee != GUARANTEE_NONE
+                  else None)
+        return SnapshotContext(job.config.processing_guarantee, writer)
+
+    def make_transport(self, execution, edge, src: Location, dst: Location):
+        if src[0] == dst[0]:
+            return SPSCQueue(edge.queue_size)
+        link = NetworkLink(self.cluster.clock,
+                           latency_s=self.cluster.link_latency_s,
+                           recv_capacity=edge.queue_size)
+        execution.links.append(link)
+        return link
+
+    def assign_tasklet(self, execution, inst, tasklet) -> None:
+        cluster = self.cluster
+        worker = cluster.nodes[inst.node].workers[
+            inst.local_index % cluster.cooperative_threads]
+        worker.add(tasklet)
+
+    def start_execution(self, execution) -> None:
+        pass    # tasklets were placed on live workers at build time
+
+    def stop_execution(self, execution) -> None:
+        dead = set(map(id, execution.tasklets))
+        for node in self.cluster.nodes.values():
+            for w in node.workers:
+                w.tasklets = [t for t in w.tasklets if id(t) not in dead]
+
+    def step(self, jobs) -> bool:
+        progress = False
+        for node in self.cluster.nodes.values():
+            for worker in node.workers:
+                progress |= worker.run_iteration()
+        for job in jobs:
+            if job.execution is not None:
+                for link in job.execution.links:
+                    progress |= link.pump()
+        return progress
+
+    def execution_done(self, execution) -> bool:
+        return all(t.is_done for t in execution.tasklets)
+
+    def notify_snapshot_committed(self, execution, snapshot_id: int) -> None:
+        for t in execution.tasklets:
+            hook = getattr(t.processor, "on_snapshot_committed", None)
+            if hook is not None:
+                hook(snapshot_id)
+
+
+def make_backend(spec) -> ExecutionBackend:
+    """Resolve a backend from its registry name (``"inproc"``/``"mp"``) or
+    pass an already-constructed :class:`ExecutionBackend` through."""
+    if isinstance(spec, ExecutionBackend):
+        return spec
+    if spec in (None, "inproc"):
+        return InProcessBackend()
+    if spec == "mp":
+        from ..runtime.worker_proc import MultiprocessBackend
+        return MultiprocessBackend()
+    raise ValueError(f"unknown execution backend {spec!r} "
+                     "(expected 'inproc', 'mp', or an ExecutionBackend)")

@@ -76,6 +76,10 @@ class NetworkLink:
     def remaining_capacity(self) -> int:
         return max(0, self.acked_seq + self.receive_window - self.sent_seq)
 
+    def has_room_for(self, item) -> bool:
+        """Transport contract (see ``SPSCQueue``): one credit == one item."""
+        return self.sent_seq < self.acked_seq + self.receive_window
+
     # -- consumer side ---------------------------------------------------------
     def poll(self) -> Optional[Any]:
         if not self._recv:

@@ -11,8 +11,15 @@ those partitions to nodes is the *same* table the IMap state backend uses —
 Jet's "partitioning of IMDG aligns with partitioning of the execution
 engine" invariant.
 
-The whole cluster is simulated in-process and driven by :meth:`JetCluster.step`
-(this container has one core; the cooperative model maps 1:1).
+How the planned execution actually runs is delegated to a pluggable
+:class:`~repro.core.backend.ExecutionBackend` (see that module for the
+contract).  The default ``backend="inproc"`` drives the whole cluster
+cooperatively from :meth:`JetCluster.step` on the calling thread — the
+paper's model with every simulated core multiplexed onto one real one.
+``backend="mp"`` runs each (node, cooperative-thread) pair as a real OS
+process with shared-memory EventBlock rings between them
+(:mod:`repro.runtime.worker_proc`), so the cooperative model maps onto as
+many cores as the machine offers.
 """
 
 from __future__ import annotations
@@ -22,12 +29,12 @@ import time as _time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..state import IMapService, SnapshotStore
+from .backend import ExecutionBackend, InProcessBackend, make_backend
 from .backpressure import NetworkLink
 from .clock import Clock, VirtualClock, WallClock
 from .dag import DAG, Edge, PARTITION_COUNT, Routing, Vertex
 from .events import MAX_TIME
 from .processor import ProcessorContext
-from .queues import SPSCQueue
 from .tasklet import (CooperativeWorker, EdgeCollector, InQueue,
                       GUARANTEE_EXACTLY_ONCE, GUARANTEE_NONE,
                       ProcessorTasklet, SnapshotContext)
@@ -81,6 +88,9 @@ class ExecutionContext:
         self.tasklets: List[ProcessorTasklet] = []
         self.links: List[NetworkLink] = []
         self.ssctx: Optional[SnapshotContext] = None
+        #: backend-private per-execution state (worker plans, ring registry,
+        #: control pipes, ... — opaque to the engine core)
+        self.backend_data: Dict[str, Any] = {}
         self._build()
 
     # ------------------------------------------------------------------ build --
@@ -92,9 +102,7 @@ class ExecutionContext:
         n_nodes = len(nodes)
         table = cluster.imap_service.table
 
-        writer = (cluster.snapshot_store.writer(job.id)
-                  if job.config.processing_guarantee != GUARANTEE_NONE else None)
-        self.ssctx = SnapshotContext(job.config.processing_guarantee, writer)
+        self.ssctx = cluster.backend.create_snapshot_context(job)
 
         # 1. instantiate vertices
         lp_of: Dict[str, int] = {}
@@ -150,9 +158,7 @@ class ExecutionContext:
                 processor.init(tasklet.outbox, ctx)
                 inst.tasklet = tasklet
                 self.tasklets.append(tasklet)
-                worker = cluster.nodes[inst.node].workers[
-                    inst.local_index % cluster.cooperative_threads]
-                worker.add(tasklet)
+                cluster.backend.assign_tasklet(self, inst, tasklet)
         self.ssctx.tasklets = self.tasklets
         self.ssctx.on_complete = self.job._on_snapshot_complete
 
@@ -199,14 +205,11 @@ class ExecutionContext:
                 dests = [(n, li) for n in nodes for li in range(lp_dst)]
             else:
                 dests = [(src_inst.node, li) for li in range(lp_dst)]
+            threads = self.cluster.cooperative_threads
+            src_loc = (src_inst.node, src_inst.local_index % threads)
             for (n, li) in dests:
-                if n == src_inst.node:
-                    q = SPSCQueue(edge.queue_size)
-                else:
-                    q = NetworkLink(self.cluster.clock,
-                                    latency_s=self.cluster.link_latency_s,
-                                    recv_capacity=edge.queue_size)
-                    self.links.append(q)
+                q = self.cluster.backend.make_transport(
+                    self, edge, src_loc, (n, li % threads))
                 queues.append(q)
                 in_queues[(edge.dst, n, li)].append(
                     InQueue(q, edge.dst_ordinal, priority=edge.priority))
@@ -256,7 +259,7 @@ class ExecutionContext:
 
     @property
     def all_done(self) -> bool:
-        return all(t.is_done for t in self.tasklets)
+        return self.cluster.backend.execution_done(self)
 
     def stats(self) -> Dict[str, Any]:
         return {
@@ -299,33 +302,34 @@ class Job:
     def _on_snapshot_complete(self, snapshot_id: int) -> None:
         self.cluster.snapshot_store.commit(self.id, snapshot_id)
         self.snapshots_taken += 1
-        # phase-2 release for transactional sinks (paper §4.5)
-        for t in self.execution.tasklets:
-            hook = getattr(t.processor, "on_snapshot_committed", None)
-            if hook is not None:
-                hook(snapshot_id)
+        # phase-2 release for transactional sinks (paper §4.5), delivered
+        # wherever the processors actually live (this thread or a worker
+        # process)
+        self.cluster.backend.notify_snapshot_committed(self.execution,
+                                                       snapshot_id)
 
     # -- lifecycle -------------------------------------------------------------------
     def start(self) -> None:
         self.execution = ExecutionContext(self, self.cluster)
+        self.cluster.backend.start_execution(self.execution)
 
     def restart(self) -> None:
         """Rebuild the execution on the current topology and restore the
         latest committed snapshot (paper §4.4 recovery protocol)."""
         self.restarts += 1
         self.status = JOB_RESTARTING
-        # drop the old execution (its tasklets/queues die with it)
+        # drop the old execution (its tasklets/queues/processes die with it)
         old = self.execution
         if old is not None:
-            for node in self.cluster.nodes.values():
-                for w in node.workers:
-                    w.tasklets = [t for t in w.tasklets
-                                  if t not in old.tasklets]
+            self.cluster.backend.stop_execution(old)
         self.execution = ExecutionContext(self, self.cluster)
         committed = self.cluster.snapshot_store.latest_committed(self.id)
         if committed is not None:
             self.execution.restore_from_snapshot(committed)
         self._last_snapshot_at = self.cluster.clock.now()
+        # start AFTER the restore: a forking backend must hand workers the
+        # restored state
+        self.cluster.backend.start_execution(self.execution)
         self.status = JOB_RUNNING
 
 
@@ -337,15 +341,25 @@ class JetNode:
 
 
 class JetCluster:
-    """An in-process Jet cluster simulation."""
+    """A Jet cluster; execution substrate selected by ``backend``
+    (``"inproc"`` — cooperative simulation on this thread, ``"mp"`` — one
+    OS process per (node, cooperative thread), or a custom
+    :class:`~repro.core.backend.ExecutionBackend` instance)."""
 
     def __init__(self, n_nodes: int = 1, cooperative_threads: int = 2,
                  clock: Optional[Clock] = None,
                  partition_count: int = PARTITION_COUNT,
                  backup_count: int = 1,
                  link_latency_s: float = 0.0005,
-                 idle_backoff: bool = True):
+                 idle_backoff: bool = True,
+                 backend="inproc"):
         self.clock = clock or WallClock()
+        self.backend: ExecutionBackend = make_backend(backend)
+        if not self.backend.clock_supported(self.clock):
+            raise ValueError(
+                f"backend {self.backend.name!r} does not support "
+                f"{type(self.clock).__name__} (worker processes cannot "
+                "observe a driver-stepped virtual clock)")
         self.cooperative_threads = cooperative_threads
         self.link_latency_s = link_latency_s
         #: progressive spin->yield->park when a wall-clock driver is idle
@@ -360,6 +374,7 @@ class JetCluster:
         self.snapshot_store = SnapshotStore(self.imap_service)
         self.jobs: List[Job] = []
         self._next_node_id = n_nodes
+        self.backend.bind(self)
 
     # -- job control ---------------------------------------------------------------
     def submit(self, dag: DAG, config: Optional[JobConfig] = None) -> Job:
@@ -371,17 +386,15 @@ class JetCluster:
     # -- driver ---------------------------------------------------------------------
     def step(self) -> bool:
         """One scheduler iteration across the whole cluster."""
-        progress = False
-        for node in self.nodes.values():
-            for worker in node.workers:
-                progress |= worker.run_iteration()
+        progress = self.backend.step(self.jobs)
         for job in self.jobs:
-            if job.execution is not None:
-                for link in job.execution.links:
-                    progress |= link.pump()
             job.tick(self.clock.now())
-            if (job.status == JOB_RUNNING and job.execution.all_done):
+            if (job.status == JOB_RUNNING
+                    and self.backend.execution_done(job.execution)):
                 job.status = JOB_COMPLETED
+                # release substrate resources (worker processes, shm rings)
+                # the moment the data plane finished
+                self.backend.stop_execution(job.execution)
         if progress:
             self._idle_streak = 0
         elif isinstance(self.clock, VirtualClock):
@@ -408,6 +421,15 @@ class JetCluster:
     def run_steps(self, n: int) -> None:
         for _ in range(n):
             self.step()
+
+    def shutdown(self) -> None:
+        """Tear down substrate resources of every execution (terminate
+        worker processes, unlink shared memory).  Idempotent; a no-op for
+        the in-process backend beyond unhooking tasklets."""
+        for job in self.jobs:
+            if job.execution is not None:
+                self.backend.stop_execution(job.execution)
+        self.backend.shutdown()
 
     # -- telemetry -------------------------------------------------------------
     def vertex_time_share(self) -> Dict[str, float]:

@@ -61,12 +61,37 @@ Semantics relative to the scalar path:
 
 from __future__ import annotations
 
+import pickle
+import struct
 from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
 MIN_TIME = -(2**62)
 MAX_TIME = 2**62
+
+# -- EventBlock wire format (shared-memory transport) ------------------------
+#
+#   [u32 n][u8 flags]
+#   ts  : n * int64   (raw little-endian slab)
+#   key : n * int64
+#   value : n * float64            (flags bit 0)
+#   aux cols (flags bit 1): [u8 ncols] then per column
+#       [u8 namelen][name ascii][u8 dlen][dtype.str ascii][raw bytes]
+#   extras (flags bit 2): [u32 plen][pickle((payload, payload_fn))]
+#
+# The three primary columns cross process boundaries as raw byte slabs —
+# deserialization is one ``np.frombuffer(...).copy()`` per column, no
+# per-row work.  Only ``payload``/``payload_fn`` (arbitrary Python) ride
+# through pickle; a block whose ``payload_fn`` itself cannot pickle is
+# materialized into a payload list instead, so the wire form is always
+# observably equivalent to the original block.
+
+_BLK_HAS_VALUE = 1
+_BLK_HAS_COLS = 2
+_BLK_HAS_EXTRAS = 4
+_BLK_HDR = struct.Struct("<IB")
+_U32 = struct.Struct("<I")
 
 
 class Event:
@@ -207,6 +232,86 @@ class EventBlock:
         return EventBlock(self.ts, np.asarray(key, dtype=np.int64),
                           self.value, self.payload, self.payload_fn,
                           self.cols)
+
+    # -- wire form (cross-process shared-memory rings) ------------------------
+    def to_wire(self) -> bytes:
+        """Serialize to the shm wire format (module docstring): the three
+        primary columns as raw int64/float64 slabs, aux columns as tagged
+        slabs, payload/payload_fn through pickle (with a materialize
+        fallback when the row function itself cannot cross the wire)."""
+        n = len(self.ts)
+        flags = 0
+        parts: List[bytes] = [b""]      # placeholder for the header
+        parts.append(np.ascontiguousarray(self.ts, dtype="<i8").tobytes())
+        parts.append(np.ascontiguousarray(self.key, dtype="<i8").tobytes())
+        if self.value is not None:
+            flags |= _BLK_HAS_VALUE
+            parts.append(
+                np.ascontiguousarray(self.value, dtype="<f8").tobytes())
+        if self.cols:
+            flags |= _BLK_HAS_COLS
+            cparts = [bytes([len(self.cols)])]
+            for name, col in self.cols.items():
+                arr = np.ascontiguousarray(col)
+                nb = name.encode("ascii")
+                db = arr.dtype.str.encode("ascii")
+                cparts.append(bytes([len(nb)]) + nb + bytes([len(db)]) + db
+                              + arr.tobytes())
+            parts.append(b"".join(cparts))
+        extras = None
+        if self.payload is not None or self.payload_fn is not None:
+            try:
+                extras = pickle.dumps((self.payload, self.payload_fn),
+                                      protocol=pickle.HIGHEST_PROTOCOL)
+            except Exception:
+                # unpicklable materializer: ship concrete row values
+                extras = pickle.dumps((self.values(), None),
+                                      protocol=pickle.HIGHEST_PROTOCOL)
+        if extras is not None:
+            flags |= _BLK_HAS_EXTRAS
+            parts.append(_U32.pack(len(extras)))
+            parts.append(extras)
+        parts[0] = _BLK_HDR.pack(n, flags)
+        return b"".join(parts)
+
+    @classmethod
+    def from_wire(cls, buf) -> "EventBlock":
+        """Rebuild a block from :meth:`to_wire` bytes (or a memoryview over
+        a shm ring segment).  Columns are copied out of the buffer — ring
+        memory is recycled once the consumer advances."""
+        buf = memoryview(buf)
+        n, flags = _BLK_HDR.unpack_from(buf, 0)
+        off = _BLK_HDR.size
+        ts = np.frombuffer(buf, "<i8", n, off).copy()
+        off += 8 * n
+        key = np.frombuffer(buf, "<i8", n, off).copy()
+        off += 8 * n
+        value = None
+        if flags & _BLK_HAS_VALUE:
+            value = np.frombuffer(buf, "<f8", n, off).copy()
+            off += 8 * n
+        cols = None
+        if flags & _BLK_HAS_COLS:
+            ncols = buf[off]
+            off += 1
+            cols = {}
+            for _ in range(ncols):
+                nlen = buf[off]
+                off += 1
+                name = bytes(buf[off:off + nlen]).decode("ascii")
+                off += nlen
+                dlen = buf[off]
+                off += 1
+                dt = np.dtype(bytes(buf[off:off + dlen]).decode("ascii"))
+                off += dlen
+                cols[name] = np.frombuffer(buf, dt, n, off).copy()
+                off += dt.itemsize * n
+        payload = payload_fn = None
+        if flags & _BLK_HAS_EXTRAS:
+            (plen,) = _U32.unpack_from(buf, off)
+            off += _U32.size
+            payload, payload_fn = pickle.loads(buf[off:off + plen])
+        return cls(ts, key, value, payload, payload_fn, cols)
 
     @classmethod
     def from_events(cls, events) -> "EventBlock":

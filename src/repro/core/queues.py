@@ -2,10 +2,20 @@
 
 Jet connects each pair of communicating tasklets with a wait-free SPSC ring
 buffer; a full queue is the local backpressure signal (the producer backs off
-from its cooperative thread instead of blocking).  Inside this cooperative
-single-core runtime the queues are stepped by one driver thread, so plain
-index arithmetic *is* wait-free; the API surface (offer/poll never block,
-``offer`` returning ``False`` == backpressure) is preserved exactly.
+from its cooperative thread instead of blocking).  When both tasklets live in
+one process (the in-process backend, or two tasklets on the same worker under
+the multiprocess backend) the queues are stepped by one driver thread, so
+plain index arithmetic *is* wait-free; the API surface (offer/poll never
+block, ``offer`` returning ``False`` == backpressure) is preserved exactly.
+
+This class also defines the *transport contract* every edge implementation
+(:class:`SPSCQueue`, :class:`~repro.core.backpressure.NetworkLink`,
+:class:`~repro.core.shm_ring.ShmRing`) shares: ``offer``/``offer_many``/
+``has_room_for`` on the producer side, ``poll``/``peek``/``poll_prefix``/
+``poll_many`` on the consumer side.  ``has_room_for(item)`` answers whether
+an immediate ``offer(item)`` is guaranteed to succeed — block routing uses
+it for all-or-nothing sub-block admission, which a slot count alone cannot
+promise on byte-capacity transports.
 """
 
 from __future__ import annotations
@@ -66,6 +76,11 @@ class SPSCQueue:
 
     def remaining_capacity(self) -> int:
         return self._cap - (self._tail - self._head)
+
+    def has_room_for(self, item) -> bool:
+        """True when an immediate ``offer(item)`` must succeed (transport
+        contract; a slot queue needs exactly one free slot per item)."""
+        return self._tail - self._head < self._cap
 
     # -- consumer side -----------------------------------------------------
     def poll(self) -> Optional[Any]:

@@ -1,0 +1,338 @@
+"""Shared-memory SPSC ring buffer: the cross-process edge transport.
+
+Under the multiprocess backend every edge whose producer and consumer
+tasklets live in different worker processes is a :class:`ShmRing` — one
+``multiprocessing.shared_memory`` segment holding a byte-level ring of
+length-prefixed records.  EventBlocks travel as raw column slabs (the
+:meth:`EventBlock.to_wire` format: ts/key/value int64/float64 bytes copied
+straight out of the numpy buffers), while watermarks, barriers, DONE and
+scalar stragglers ride a small tagged control lane — so the columnar hot
+path never pays per-row pickling.
+
+Memory model
+============
+
+The ring is strictly SPSC: exactly one producer process writes records and
+advances ``tail``; exactly one consumer process reads records and advances
+``head``.  Both cursors are monotonically increasing byte offsets stored as
+aligned 8-byte little-endian integers in the segment header.  On x86-64
+(TSO) an aligned 8-byte store is atomic and stores are not reordered, and
+CPython's ``struct.pack_into`` performs the payload stores before the
+cursor store crosses the interpreter boundary — the same publication
+pattern every pure-Python shm ring uses.  ``offer``/``poll`` never block;
+``offer`` returning ``False`` is the backpressure signal, exactly the
+:class:`~repro.core.queues.SPSCQueue` contract.
+
+Record layout
+=============
+
+``[u32 total_len][u8 tag][payload]`` — ``total_len`` includes the 5-byte
+header.  Records never wrap: when the contiguous space to the physical end
+of the data region cannot hold a record, a PAD record (or a bare tail gap
+of < 5 bytes) fills it and the record starts at offset 0, keeping every
+payload contiguous for ``np.frombuffer``.  A record larger than the data
+region is a hard error — size rings to a few multiples of the largest
+block (the default 1 MiB holds ~6 full 4096-row NEXMark blocks).
+
+``has_room_for(item)`` serializes the item once, caches the encoding, and
+answers whether an ``offer`` of that item is guaranteed to succeed — the
+all-or-nothing admission primitive EventBlock routing needs on an edge
+whose capacity is bytes, not slots.
+"""
+
+from __future__ import annotations
+
+import pickle
+import struct
+from multiprocessing import shared_memory
+from typing import Any, List, Optional, Tuple
+
+from .events import (Barrier, DONE, DoneItem, Event, EventBlock, LateEvent,
+                     Watermark)
+
+#: record tags
+TAG_PICKLE = 0          # arbitrary item (pickle payload)
+TAG_BLOCK = 1           # EventBlock.to_wire payload
+TAG_EVENT = 2           # Event with int ts/key and int-or-float value
+TAG_WATERMARK = 3       # int64 ts
+TAG_BARRIER = 4         # int64 snapshot_id + u8 terminal
+TAG_DONE = 5            # empty payload
+TAG_PAD = 255           # fill to the physical end; carries no item
+
+_HDR_BYTES = 64         # segment header: head @0, tail @8, msgs @16/@24
+_REC = struct.Struct("<IB")
+_Q = struct.Struct("<q")
+_EVT_I = struct.Struct("<qqqB")     # ts, key, int value
+_EVT_F = struct.Struct("<qqdB")     # ts, key, float value
+_BARRIER = struct.Struct("<qB")
+_PICKLE_PROTO = pickle.HIGHEST_PROTOCOL
+
+DEFAULT_RING_BYTES = 1 << 20
+
+
+def _encode(item) -> Tuple[int, bytes]:
+    cls = item.__class__
+    if cls is EventBlock:
+        return TAG_BLOCK, item.to_wire()
+    if cls is Event:
+        ts, key, value = item.ts, item.key, item.value
+        if type(ts) is int and type(key) is int:
+            if type(value) is int and -(2**62) < value < 2**62:
+                return TAG_EVENT, _EVT_I.pack(ts, key, value, 0)
+            if type(value) is float:
+                return TAG_EVENT, _EVT_F.pack(ts, key, value, 1)
+    if cls is Watermark:
+        return TAG_WATERMARK, _Q.pack(item.ts)
+    if cls is Barrier:
+        return TAG_BARRIER, _BARRIER.pack(item.snapshot_id,
+                                          1 if item.terminal else 0)
+    if cls is DoneItem:
+        return TAG_DONE, b""
+    return TAG_PICKLE, pickle.dumps(item, protocol=_PICKLE_PROTO)
+
+
+def _decode(tag: int, payload) -> Any:
+    if tag == TAG_BLOCK:
+        return EventBlock.from_wire(payload)
+    if tag == TAG_EVENT:
+        if payload[-1]:
+            ts, key, value, _ = _EVT_F.unpack(payload)
+        else:
+            ts, key, value, _ = _EVT_I.unpack(payload)
+        return Event(ts, key, value)
+    if tag == TAG_WATERMARK:
+        return Watermark(_Q.unpack(payload)[0])
+    if tag == TAG_BARRIER:
+        sid, terminal = _BARRIER.unpack(payload)
+        return Barrier(sid, bool(terminal))
+    if tag == TAG_DONE:
+        return DONE
+    return pickle.loads(payload)
+
+
+class ShmRing:
+    """Fixed-capacity shared-memory SPSC ring with the SPSCQueue surface."""
+
+    __slots__ = ("_shm", "_cap", "_mv", "_data", "_created", "_staged",
+                 "_peeked", "name")
+
+    def __init__(self, capacity_bytes: int = DEFAULT_RING_BYTES,
+                 name: Optional[str] = None, create: bool = True):
+        if create:
+            self._shm = shared_memory.SharedMemory(
+                name=name, create=True, size=_HDR_BYTES + capacity_bytes)
+            self._shm.buf[:_HDR_BYTES] = b"\x00" * _HDR_BYTES
+        else:
+            self._shm = shared_memory.SharedMemory(name=name)
+        self.name = self._shm.name
+        self._created = create
+        self._cap = self._shm.size - _HDR_BYTES
+        self._mv = self._shm.buf
+        self._data = self._shm.buf[_HDR_BYTES:]
+        #: producer-side staged encoding: (item_id, tag, payload)
+        self._staged: Optional[Tuple[int, int, bytes]] = None
+        #: consumer-side lookahead for peek()
+        self._peeked = None
+
+    # -- header cursors ------------------------------------------------------
+    def _head(self) -> int:
+        return _Q.unpack_from(self._mv, 0)[0]
+
+    def _tail(self) -> int:
+        return _Q.unpack_from(self._mv, 8)[0]
+
+    def _set_head(self, v: int) -> None:
+        _Q.pack_into(self._mv, 0, v)
+
+    def _set_tail(self, v: int) -> None:
+        _Q.pack_into(self._mv, 8, v)
+
+    def _msgs_in(self) -> int:
+        return _Q.unpack_from(self._mv, 16)[0]
+
+    def _msgs_out(self) -> int:
+        return _Q.unpack_from(self._mv, 24)[0]
+
+    # -- producer side -------------------------------------------------------
+    def _stage(self, item) -> Tuple[int, bytes]:
+        staged = self._staged
+        if staged is not None and staged[0] == id(item):
+            return staged[1], staged[2]
+        tag, payload = _encode(item)
+        self._staged = (id(item), tag, payload)
+        return tag, payload
+
+    def _space_needed(self, tail: int, rec: int) -> int:
+        to_end = self._cap - (tail % self._cap)
+        return rec if rec <= to_end else to_end + rec
+
+    def has_room_for(self, item) -> bool:
+        """True when an immediate ``offer(item)`` is guaranteed to succeed.
+        Serializes (and caches) the item; in SPSC use free space only grows
+        between this call and the offer, so the answer cannot go stale."""
+        tag, payload = self._stage(item)
+        rec = _REC.size + len(payload)
+        if rec > self._cap:
+            raise ValueError(
+                f"item of {rec} bytes exceeds ring capacity {self._cap}")
+        free = self._cap - (self._tail() - self._head())
+        return self._space_needed(self._tail(), rec) <= free
+
+    def offer(self, item) -> bool:
+        """Enqueue ``item``; returns False (backpressure) when full."""
+        tag, payload = self._stage(item)
+        rec = _REC.size + len(payload)
+        if rec > self._cap:
+            raise ValueError(
+                f"item of {rec} bytes exceeds ring capacity {self._cap}")
+        tail = self._tail()
+        free = self._cap - (tail - self._head())
+        if self._space_needed(tail, rec) > free:
+            return False
+        cap, data = self._cap, self._data
+        idx = tail % cap
+        to_end = cap - idx
+        if rec > to_end:
+            # close out the physical tail with a PAD record (or leave the
+            # < 5-byte remainder implicit) and restart at offset 0
+            if to_end >= _REC.size:
+                _REC.pack_into(data, idx, to_end, TAG_PAD)
+            tail += to_end
+            idx = 0
+        _REC.pack_into(data, idx, rec, tag)
+        data[idx + _REC.size:idx + rec] = payload
+        _Q.pack_into(self._mv, 16, self._msgs_in() + 1)
+        self._set_tail(tail + rec)
+        self._staged = None
+        return True
+
+    def offer_many(self, items: List[Any], start: int = 0,
+                   end: Optional[int] = None) -> int:
+        n = len(items) if end is None else end
+        i = start
+        while i < n and self.offer(items[i]):
+            i += 1
+        return i - start
+
+    def remaining_capacity(self) -> int:
+        """Approximate free *item* slots (free bytes over a nominal record
+        size).  Use :meth:`has_room_for` for admission decisions — byte
+        capacity does not translate exactly into slots."""
+        free = self._cap - (self._tail() - self._head())
+        return free // 256
+
+    # -- consumer side -------------------------------------------------------
+    def _read_record(self, advance: bool):
+        """Next (item, consumed_bytes) or None; skips PAD records."""
+        head = self._head()
+        cap, data = self._cap, self._data
+        while True:
+            if head == self._tail():
+                return None
+            idx = head % cap
+            to_end = cap - idx
+            if to_end < _REC.size:
+                head += to_end          # implicit pad at the physical tail
+                continue
+            rec, tag = _REC.unpack_from(data, idx)
+            if tag == TAG_PAD:
+                head += rec
+                continue
+            item = _decode(tag, bytes(data[idx + _REC.size:idx + rec]))
+            if advance:
+                _Q.pack_into(self._mv, 24, self._msgs_out() + 1)
+                self._set_head(head + rec)
+            return item, head + rec
+
+    def poll(self) -> Optional[Any]:
+        if self._peeked is not None:
+            item = self._peeked[0]
+            self._peeked = None
+            return item
+        got = self._read_record(advance=True)
+        return got[0] if got is not None else None
+
+    def peek(self) -> Optional[Any]:
+        if self._peeked is None:
+            got = self._read_record(advance=True)
+            if got is None:
+                return None
+            self._peeked = got
+        return self._peeked[0]
+
+    def poll_many(self, limit: int) -> List[Any]:
+        out = []
+        while len(out) < limit:
+            item = self.poll()
+            if item is None:
+                break
+            out.append(item)
+        return out
+
+    def poll_prefix(self, limit: int,
+                    explode_blocks: bool = False) -> Tuple[List[Any], Any]:
+        """Batched control-aware drain; see ``SPSCQueue.poll_prefix``:
+        dequeues the leading run of data items (a block counts as one slot)
+        plus at most one trailing control item."""
+        events: List[Any] = []
+        ctrl = None
+        n = 0
+        while n < limit:
+            item = self.poll()
+            if item is None:
+                break
+            n += 1
+            cls = item.__class__
+            if cls is EventBlock:
+                if explode_blocks:
+                    events.extend(item.to_events())
+                else:
+                    events.append(item)
+            elif cls is Event or isinstance(item, Event):
+                events.append(item)
+            else:
+                ctrl = item
+                break
+        return events, ctrl
+
+    def drain_to(self, sink: list, limit: int) -> int:
+        items = self.poll_many(limit)
+        sink.extend(items)
+        return len(items)
+
+    # -- shared --------------------------------------------------------------
+    def __len__(self) -> int:
+        n = self._msgs_in() - self._msgs_out()
+        return n + (1 if self._peeked is not None else 0)
+
+    @property
+    def capacity(self) -> int:
+        return self._cap
+
+    def is_empty(self) -> bool:
+        return len(self) == 0
+
+    def is_full(self) -> bool:
+        return self._cap - (self._tail() - self._head()) < _REC.size + 1
+
+    # -- lifecycle -----------------------------------------------------------
+    def attach(self) -> "ShmRing":
+        """Open the same segment by name (the other process's end)."""
+        return ShmRing(name=self.name, create=False)
+
+    def close(self) -> None:
+        self._peeked = None
+        self._data.release()
+        try:
+            self._shm.close()
+        except BufferError:  # pragma: no cover - interpreter-version quirk
+            pass
+
+    def unlink(self) -> None:
+        try:
+            self._shm.unlink()
+        except FileNotFoundError:  # pragma: no cover - already unlinked
+            pass
+
+    def __reduce__(self):  # pragma: no cover - defensive
+        raise TypeError("ShmRing is shared by inheritance (fork), not pickle")

@@ -162,8 +162,11 @@ class EdgeCollector:
                 parts = [(int(sd[s]), blk.take(order[s:e]))
                          for s, e in zip(starts, ends)]
         qs = self.queues
-        for qi, _sub in parts:
-            if qs[qi].remaining_capacity() < 1:
+        # every destination must guarantee admission of ITS sub-block before
+        # anything is enqueued; has_room_for (not a slot count) is what makes
+        # this sound on byte-capacity transports like the shm ring
+        for qi, sub in parts:
+            if not qs[qi].has_room_for(sub):
                 self._blk_pending = (blk, parts)
                 return False
         for qi, sub in parts:

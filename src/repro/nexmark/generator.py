@@ -51,6 +51,21 @@ def _mix64_vec(x: np.ndarray) -> np.ndarray:
     return x ^ (x >> _U64(31))
 
 
+class _SeqMaterializer:
+    """Picklable ``payload_fn``: rebuilds the model object of block row
+    ``i`` from its ``seq`` column through the scalar generator.  A plain
+    closure would pin blocks to one process; this travels over the
+    multiprocess backend's shared-memory rings."""
+
+    __slots__ = ("gen",)
+
+    def __init__(self, gen: "NexmarkGenerator"):
+        self.gen = gen
+
+    def __call__(self, blk: EventBlock, i: int) -> Any:
+        return self.gen(int(blk.cols["seq"][i]))[2]
+
+
 class NexmarkGenerator:
     """Callable ``gen(seq) -> (ts_ms, key, value)`` for the paced source."""
 
@@ -118,8 +133,7 @@ class NexmarkGenerator:
                          np.where(kind == KIND_AUCTION, reserve, 0)
                          ).astype(np.float64)
         return EventBlock(
-            ts, key, value,
-            payload_fn=lambda blk, i, g=self: g(int(blk.cols["seq"][i]))[2],
+            ts, key, value, payload_fn=_SeqMaterializer(self),
             cols={"kind": kind, "seq": seqs, "bidder": bidder})
 
 
@@ -181,6 +195,13 @@ class DisorderedNexmarkGenerator:
     def _mapped(self, seq: int) -> int:
         b, off = divmod(seq, self.block)
         return b * self.block + int(self._perm(b)[off])
+
+    def __getstate__(self):
+        # the permutation cache is pure derived data (~KBs of argsorts);
+        # recompute after unpickling rather than shipping it per block
+        state = self.__dict__.copy()
+        state["_perm_cache"] = {}
+        return state
 
     def __call__(self, seq: int) -> Tuple[int, Any, Any]:
         return self.inner(self._mapped(seq))

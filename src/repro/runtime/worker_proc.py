@@ -1,0 +1,490 @@
+"""True multi-process execution: one OS process per cooperative worker.
+
+:class:`MultiprocessBackend` implements the
+:class:`~repro.core.backend.ExecutionBackend` contract by turning every
+(node, cooperative-thread) pair of the planned execution into a real
+``fork``-spawned worker process.  Edges between tasklets in the same
+process stay plain :class:`~repro.core.queues.SPSCQueue`s; every edge that
+crosses a process boundary — local threads of one JetNode as much as
+cross-node links — becomes a fixed-capacity shared-memory
+:class:`~repro.core.shm_ring.ShmRing` carrying EventBlock columns as raw
+slabs plus a control lane for watermarks/barriers/scalar stragglers.
+
+Coordination stays in the parent ("coordinator"), which never touches the
+data plane:
+
+* a duplex pipe per worker carries control: parent -> child ``("snapshot",
+  id)`` / ``("committed", id)`` / ``("stop",)``; child -> parent
+  ``("ack", id, entries)`` / ``("results", batch)`` / ``("done", stats)``
+  / ``("error", traceback)``.
+* the Chandy-Lamport protocol itself is unchanged — barriers flow through
+  the rings exactly as through in-process queues; each worker aligns and
+  snapshots its local tasklets, buffers the state entries, and ships them
+  with its ack.  :class:`MpSnapshotContext` (parent side) completes the
+  snapshot when every live worker acked, lands all entries in the
+  IMap-backed store in one bulk write, commits, and broadcasts phase 2.
+* ``kill_node`` / ``add_node`` keep their whole-job restart semantics:
+  the backend tears every worker process down, the engine rebuilds and
+  restores in the parent, and ``start_execution`` re-forks — children
+  inherit the restored state, so exactly-once replay works unchanged.
+* sink results (processors exposing an ``out`` list, e.g.
+  :class:`~repro.core.sources.CollectorSink`) are shipped incrementally to
+  the parent and merged into the parent-side processor's list, so tests
+  and benchmarks observe results exactly as under the in-process backend.
+
+Workers inherit the built execution via ``fork`` (no pickling of the DAG
+or closures); only items crossing rings and control messages serialize.
+"""
+
+from __future__ import annotations
+
+import multiprocessing
+import time as _time
+import traceback
+from multiprocessing import connection as _mpc
+from typing import Any, Dict, List, Optional, Tuple
+
+from ..core.backend import ExecutionBackend, Location
+from ..core.clock import Clock, VirtualClock
+from ..core.queues import SPSCQueue
+from ..core.shm_ring import DEFAULT_RING_BYTES, ShmRing
+from ..core.tasklet import (CooperativeWorker, GUARANTEE_NONE,
+                            SnapshotContext)
+from ..state.snapshot_store import own_snapshot_value
+
+_MP = multiprocessing.get_context("fork")
+
+#: child idle backoff (spin -> yield -> park), mirroring the engine driver
+_IDLE_SPIN_ITERS = 64
+_IDLE_YIELD_ITERS = 192
+_IDLE_PARK_MIN_S = 0.00005
+_IDLE_PARK_MAX_S = 0.0005
+#: how often a child ships new sink results to the coordinator
+_RESULT_SHIP_S = 0.02
+#: command-pipe poll cadence (iterations) while the child is busy
+_CMD_POLL_ITERS = 32
+
+
+class _BufferWriter:
+    """Child-local SnapshotWriter stand-in: buffers entries until the ack
+    ships them to the coordinator.  Values are copied at ``put`` time —
+    the processor keeps mutating its live containers between its barrier
+    and the worker-wide ack, and a buffered reference would ship the
+    mutated state (see :func:`repro.state.snapshot_store
+    .own_snapshot_value`)."""
+
+    __slots__ = ("entries",)
+
+    def __init__(self):
+        self.entries: List[Tuple] = []
+
+    def put(self, snapshot_id: int, vertex: str, key, value, pid: int,
+            instance: int = 0) -> None:
+        self.entries.append((snapshot_id, vertex, key,
+                             own_snapshot_value(value), pid, instance))
+
+    def take(self) -> List[Tuple]:
+        entries, self.entries = self.entries, []
+        return entries
+
+
+def _sink_list(processor) -> Optional[list]:
+    """The results list of a collector-style sink, if this processor is
+    one (duck-typed: an ``out`` attribute holding a list)."""
+    out = getattr(processor, "out", None)
+    return out if isinstance(out, list) else None
+
+
+def _tasklet_stats(tasklet) -> Dict[str, Any]:
+    p = tasklet.processor
+    inner = getattr(p, "inner", p)
+    stats: Dict[str, Any] = {
+        "items_in": tasklet.items_in, "items_out": tasklet.items_out,
+        "calls": tasklet.calls, "idle_calls": tasklet.idle_calls,
+    }
+    for obj in (p, inner):
+        if hasattr(obj, "late_dropped"):
+            stats["late_dropped"] = obj.late_dropped
+            break
+    start = getattr(inner, "_start", None)
+    if isinstance(start, float):
+        stats["source_start"] = start
+    return stats
+
+
+def _apply_stats(tasklet, stats: Dict[str, Any]) -> None:
+    tasklet.items_in = stats["items_in"]
+    tasklet.items_out = stats["items_out"]
+    tasklet.calls = stats["calls"]
+    tasklet.idle_calls = stats["idle_calls"]
+    if "late_dropped" in stats:
+        p = tasklet.processor
+        target = p if hasattr(p, "late_dropped") else getattr(p, "inner", p)
+        target.late_dropped = stats["late_dropped"]
+
+
+# --------------------------------------------------------------------------
+# child side
+# --------------------------------------------------------------------------
+
+def _ship_results(conn, sinks) -> None:
+    batch = []
+    for entry in sinks:
+        name, out, cursor = entry
+        n = len(out)
+        if n > cursor:
+            batch.append((name, out[cursor:n]))
+            entry[2] = n
+    if batch:
+        conn.send(("results", batch))
+
+
+def _worker_main(execution, key: Location, conn) -> None:
+    """Entry point of one worker process (runs post-fork; everything it
+    needs — tasklets, queues, rings — arrived by inheritance)."""
+    try:
+        assignment = execution.backend_data["assignment"]
+        tasklets = [t for t in execution.tasklets
+                    if assignment[id(t)] == key]
+        parent_ctx = execution.ssctx
+        writer = _BufferWriter()
+        local_ctx = SnapshotContext(parent_ctx.guarantee, writer)
+        local_ctx.requested_id = parent_ctx.requested_id
+        local_ctx.completed_id = parent_ctx.completed_id
+        local_ctx.tasklets = tasklets
+
+        def _acked(snapshot_id: int) -> None:
+            conn.send(("ack", snapshot_id, writer.take()))
+
+        local_ctx.on_complete = _acked
+        worker = CooperativeWorker(f"n{key[0]}-w{key[1]}")
+        for t in tasklets:
+            t.ssctx = local_ctx
+            worker.add(t)
+        sinks = [[t.name, out, len(out)] for t in tasklets
+                 for out in (_sink_list(t.processor),) if out is not None]
+
+        idle_streak = 0
+        done_sent = False
+        last_ship = _time.monotonic()
+        iters = 0
+        while True:
+            iters += 1
+            if done_sent or not iters % _CMD_POLL_ITERS or idle_streak:
+                while conn.poll(0):
+                    cmd = conn.recv()
+                    op = cmd[0]
+                    if op == "snapshot":
+                        local_ctx.begin(cmd[1])
+                    elif op == "committed":
+                        for t in tasklets:
+                            hook = getattr(t.processor,
+                                           "on_snapshot_committed", None)
+                            if hook is not None:
+                                hook(cmd[1])
+                    elif op == "stop":
+                        _ship_results(conn, sinks)
+                        return
+            progress = worker.run_iteration()
+            now = _time.monotonic()
+            if sinks and now - last_ship >= _RESULT_SHIP_S:
+                _ship_results(conn, sinks)
+                last_ship = now
+            if not done_sent and all(t.is_done for t in tasklets):
+                _ship_results(conn, sinks)
+                conn.send(("done",
+                           [(t.name, _tasklet_stats(t)) for t in tasklets]))
+                done_sent = True
+            if progress:
+                idle_streak = 0
+            elif done_sent:
+                # data plane finished: block on the command pipe
+                conn.poll(0.05)
+            else:
+                idle_streak += 1
+                if idle_streak > _IDLE_YIELD_ITERS:
+                    park = _IDLE_PARK_MIN_S * (
+                        1 << min(idle_streak - _IDLE_YIELD_ITERS, 8))
+                    _time.sleep(min(park, _IDLE_PARK_MAX_S))
+                elif idle_streak > _IDLE_SPIN_ITERS:
+                    _time.sleep(0)
+    except (EOFError, BrokenPipeError, KeyboardInterrupt):
+        pass
+    except BaseException:
+        try:
+            conn.send(("error", traceback.format_exc()))
+        except Exception:
+            pass
+        raise
+    finally:
+        try:
+            conn.close()
+        except Exception:
+            pass
+
+
+# --------------------------------------------------------------------------
+# parent side
+# --------------------------------------------------------------------------
+
+class MpSnapshotContext(SnapshotContext):
+    """Coordinator-side snapshot state: ``begin`` broadcasts to workers,
+    completion needs an ack (with state entries) from every live worker;
+    entries land in the snapshot store in one bulk write before commit."""
+
+    __slots__ = ("backend", "execution", "store_writer", "_await",
+                 "_entries")
+
+    def __init__(self, guarantee: str, store_writer):
+        super().__init__(guarantee, writer=None)
+        self.backend: Optional["MultiprocessBackend"] = None
+        self.execution = None
+        self.store_writer = store_writer
+        self._await: set = set()
+        self._entries: List[Tuple] = []
+
+    def begin(self, snapshot_id: int) -> None:
+        self.requested_id = snapshot_id
+        self._entries = []
+        self._await = self.backend.broadcast(self.execution,
+                                             ("snapshot", snapshot_id))
+        self._maybe_complete()
+
+    def worker_ack(self, key: Location, snapshot_id: int,
+                   entries: List[Tuple]) -> None:
+        if snapshot_id != self.requested_id:
+            return
+        self._entries.extend(entries)
+        self._await.discard(key)
+        self._maybe_complete()
+
+    def worker_gone(self, key: Location) -> None:
+        """A worker finished (or died) without acking; it can no longer
+        contribute in-flight state — same as the in-process exempt rule."""
+        if key in self._await:
+            self._await.discard(key)
+            self._maybe_complete()
+
+    def _maybe_complete(self) -> None:
+        if self.completed_id == self.requested_id or self._await:
+            return
+        if self.store_writer is not None and self._entries:
+            self.store_writer.put_many(self._entries)
+        self._entries = []
+        self.completed_id = self.requested_id
+        if self.on_complete is not None:
+            self.on_complete(self.completed_id)
+
+
+class _WorkerHandle:
+    __slots__ = ("key", "proc", "conn", "alive", "done")
+
+    def __init__(self, key: Location, proc, conn):
+        self.key = key
+        self.proc = proc
+        self.conn = conn
+        self.alive = True
+        self.done = False
+
+
+class MultiprocessBackend(ExecutionBackend):
+    """Execution substrate running cooperative workers as OS processes
+    over shared-memory rings (module docstring has the full protocol)."""
+
+    name = "mp"
+
+    def __init__(self, ring_bytes: int = DEFAULT_RING_BYTES):
+        super().__init__()
+        self.ring_bytes = ring_bytes
+
+    def clock_supported(self, clock: Clock) -> bool:
+        return not isinstance(clock, VirtualClock)
+
+    # -- build time ----------------------------------------------------------
+    def create_snapshot_context(self, job):
+        writer = (self.cluster.snapshot_store.writer(job.id)
+                  if job.config.processing_guarantee != GUARANTEE_NONE
+                  else None)
+        return MpSnapshotContext(job.config.processing_guarantee, writer)
+
+    def make_transport(self, execution, edge, src: Location, dst: Location):
+        if src == dst:
+            return SPSCQueue(edge.queue_size)
+        ring = ShmRing(self.ring_bytes)
+        execution.backend_data.setdefault("rings", []).append(ring)
+        return ring
+
+    def assign_tasklet(self, execution, inst, tasklet) -> None:
+        key = (inst.node,
+               inst.local_index % self.cluster.cooperative_threads)
+        data = execution.backend_data
+        data.setdefault("assignment", {})[id(tasklet)] = key
+        data.setdefault("by_worker", {}).setdefault(key, []).append(tasklet)
+
+    # -- lifecycle -----------------------------------------------------------
+    def start_execution(self, execution) -> None:
+        data = execution.backend_data
+        if data.get("started"):
+            return
+        for t in execution.tasklets:
+            if t._poll_async is not None:
+                raise NotImplementedError(
+                    "device-offloaded vertices need the coordinator's "
+                    "accelerator context; run them on backend='inproc'")
+        ssctx = execution.ssctx
+        ssctx.backend = self
+        ssctx.execution = execution
+        workers: Dict[Location, _WorkerHandle] = {}
+        for key in sorted(data.get("by_worker", {})):
+            parent_conn, child_conn = _MP.Pipe(duplex=True)
+            proc = _MP.Process(target=_worker_main,
+                               args=(execution, key, child_conn),
+                               name=f"jet-n{key[0]}-w{key[1]}", daemon=True)
+            proc.start()
+            child_conn.close()
+            workers[key] = _WorkerHandle(key, proc, parent_conn)
+        data["workers"] = workers
+        data["done"] = set()
+        data["by_name"] = {t.name: t for t in execution.tasklets}
+        data["started"] = True
+        data["stopped"] = False
+
+    def stop_execution(self, execution) -> None:
+        data = execution.backend_data
+        if not data.get("started") or data.get("stopped"):
+            data["stopped"] = True
+            return
+        workers = data["workers"]
+        for h in workers.values():
+            if h.alive:
+                try:
+                    h.conn.send(("stop",))
+                except (BrokenPipeError, OSError):
+                    h.alive = False
+        deadline = _time.monotonic() + 5.0
+        pending = list(workers.values())
+        while pending and _time.monotonic() < deadline:
+            still = []
+            for h in pending:
+                self._drain_handle(execution, h, raise_errors=False)
+                h.proc.join(timeout=0.05)
+                if h.proc.exitcode is None:
+                    still.append(h)
+            pending = still
+        for h in pending:  # pragma: no cover - stuck worker safety net
+            h.proc.terminate()
+            h.proc.join(timeout=1.0)
+        for h in workers.values():
+            h.alive = False
+            try:
+                h.conn.close()
+            except Exception:
+                pass
+        for ring in data.get("rings", ()):
+            ring.unlink()
+            ring.close()
+        data["stopped"] = True
+
+    def shutdown(self) -> None:
+        pass    # per-execution teardown covers everything
+
+    # -- driving -------------------------------------------------------------
+    def step(self, jobs) -> bool:
+        progress = False
+        waitable = []
+        for job in jobs:
+            execution = job.execution
+            if execution is None:
+                continue
+            data = execution.backend_data
+            if not data.get("started") or data.get("stopped"):
+                continue
+            for h in data["workers"].values():
+                if h.alive:
+                    progress |= self._drain_handle(execution, h,
+                                                   raise_errors=True)
+                    if h.alive:
+                        waitable.append(h.conn)
+        if not progress and waitable:
+            # nothing pending: block briefly on the control pipes instead
+            # of burning the coordinator's core (the data plane lives in
+            # the workers)
+            _mpc.wait(waitable, timeout=0.002)
+        return progress
+
+    def _drain_handle(self, execution, h: _WorkerHandle,
+                      raise_errors: bool) -> bool:
+        data = execution.backend_data
+        progress = False
+        try:
+            while h.conn.poll(0):
+                msg = h.conn.recv()
+                progress = True
+                op = msg[0]
+                if op == "results":
+                    by_name = data["by_name"]
+                    for name, items in msg[1]:
+                        sink = _sink_list(by_name[name].processor)
+                        if sink is not None:
+                            sink.extend(items)
+                elif op == "ack":
+                    execution.ssctx.worker_ack(h.key, msg[1], msg[2])
+                elif op == "done":
+                    for name, stats in msg[1]:
+                        _apply_stats(data["by_name"][name], stats)
+                        if "source_start" in stats:
+                            starts = data.setdefault("source_starts", {})
+                            starts[name] = stats["source_start"]
+                    h.done = True
+                    data["done"].add(h.key)
+                    execution.ssctx.worker_gone(h.key)
+                elif op == "error":
+                    h.alive = False
+                    self.stop_execution(execution)
+                    raise RuntimeError(
+                        f"worker {h.key} failed:\n{msg[1]}")
+        except (EOFError, OSError):
+            h.alive = False
+            if not h.done:
+                if raise_errors and not data.get("stopped"):
+                    self.stop_execution(execution)
+                    raise RuntimeError(
+                        f"worker {h.key} (pid {h.proc.pid}) exited "
+                        f"unexpectedly (exitcode {h.proc.exitcode})")
+                h.done = True
+                data["done"].add(h.key)
+            execution.ssctx.worker_gone(h.key)
+        return progress
+
+    def execution_done(self, execution) -> bool:
+        data = execution.backend_data
+        if not data.get("started"):
+            return False
+        return len(data["done"]) >= len(data["workers"])
+
+    # -- snapshot fan-out ----------------------------------------------------
+    def broadcast(self, execution, message) -> set:
+        """Send ``message`` to every live, not-yet-done worker; returns the
+        set of worker keys the message reached."""
+        reached = set()
+        data = execution.backend_data
+        if not data.get("started") or data.get("stopped"):
+            return reached
+        for h in data["workers"].values():
+            if h.alive and not h.done:
+                try:
+                    h.conn.send(message)
+                    reached.add(h.key)
+                except (BrokenPipeError, OSError):
+                    h.alive = False
+        return reached
+
+    def notify_snapshot_committed(self, execution, snapshot_id: int) -> None:
+        self.broadcast(execution, ("committed", snapshot_id))
+
+    # -- telemetry -----------------------------------------------------------
+    def source_start(self, execution) -> Optional[float]:
+        """Earliest paced-source schedule anchor across workers (shipped
+        with the final stats); the latency benchmark's t0."""
+        starts = execution.backend_data.get("source_starts")
+        return min(starts.values()) if starts else None

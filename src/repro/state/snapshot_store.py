@@ -9,9 +9,25 @@ recovery only after :meth:`commit` (all tasklets acked the barrier).
 
 from __future__ import annotations
 
+import copy
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 from .imap import IMap, IMapService
+
+#: value types that cannot alias live processor state
+_ATOMIC = (int, float, str, bytes, bool, type(None))
+
+
+def own_snapshot_value(value):
+    """Snapshot-time defensive copy — the serialization a real IMap would
+    perform.  Processors snapshot their live containers (frame rings,
+    session maps) by reference and keep mutating them after the barrier;
+    storing the reference lets post-barrier execution corrupt the
+    committed snapshot (rewound scalar fields next to advanced dicts), so
+    the writer must take ownership at ``put`` time."""
+    if type(value) in _ATOMIC:
+        return value
+    return copy.deepcopy(value)
 
 
 class SnapshotWriter:
@@ -34,7 +50,29 @@ class SnapshotWriter:
     def put(self, snapshot_id: int, vertex: str, key, value, pid: int,
             instance: int = 0) -> None:
         imap = self.store._map(self.job_id, snapshot_id)
-        imap.put_with_pid((vertex, instance, key), value, pid)
+        imap.put_with_pid((vertex, instance, key), own_snapshot_value(value),
+                          pid)
+
+    def put_many(self, entries: Iterable[Tuple[int, str, Any, Any, int,
+                                               int]]) -> int:
+        """Bulk ingest of ``(snapshot_id, vertex, key, value, pid,
+        instance)`` tuples — the cross-process commit path: worker
+        processes buffer their barrier-aligned state locally and ship it to
+        the coordinator in one message per (worker, snapshot); the
+        coordinator lands everything here before committing.  Returns the
+        entry count.  Values are stored as handed over (no defensive copy):
+        entries that crossed a process boundary were copied by pickling in
+        transit, and the child-side buffer already took ownership."""
+        n = 0
+        imaps: Dict[int, IMap] = {}
+        for snapshot_id, vertex, key, value, pid, instance in entries:
+            imap = imaps.get(snapshot_id)
+            if imap is None:
+                imap = imaps[snapshot_id] = self.store._map(self.job_id,
+                                                            snapshot_id)
+            imap.put_with_pid((vertex, instance, key), value, pid)
+            n += 1
+        return n
 
 
 class SnapshotStore:

@@ -60,7 +60,11 @@ def test_dryrun_artifacts_cover_all_cells():
     from repro.configs import applicable_cells
     d = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
     if not d.exists():
-        pytest.skip("dry-run artifacts not generated yet")
+        pytest.skip(
+            "dry-run sweep artifacts absent (experiments/dryrun/): generate "
+            "with `python -m repro.launch.dryrun --all --both-meshes` "
+            "(~33 cells x 2 meshes of XLA lowering on a 512-device host "
+            "platform — minutes of CPU, so not produced implicitly by CI)")
     missing = []
     for arch, shape in applicable_cells():
         for mesh in ("16x16", "2x16x16"):

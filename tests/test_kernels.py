@@ -6,7 +6,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dep 'hypothesis' is not installed in this image; the "
+           "property sweep needs it (pip install hypothesis) — the "
+           "deterministic kernel tests in test_streaming_device.py still "
+           "cover the ops against the jnp oracles")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.kernels import ops, ref

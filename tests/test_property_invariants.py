@@ -3,7 +3,12 @@
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dep 'hypothesis' is not installed in this image; these "
+           "randomized invariant sweeps need it (pip install hypothesis) — "
+           "the seeded transport/ring oracle in test_shm_ring.py covers the "
+           "queue invariants deterministically")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (CollectorSink, JetCluster, Journal, JournalSource,

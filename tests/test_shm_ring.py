@@ -1,0 +1,374 @@
+"""Shared-memory ring transport: wire-format round-trips plus a seeded
+randomized stress suite run against BOTH transports (in-process
+``SPSCQueue`` and cross-process ``ShmRing``) through one oracle — the two
+must be observably identical FIFO transports under arbitrary offer/poll
+interleavings, including ring wraparound, PAD records, control-item
+segregation in ``poll_prefix``, and the ``has_room_for`` all-or-nothing
+admission guarantee."""
+
+import pickle
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.events import (Barrier, DONE, Event, EventBlock, LateEvent,
+                               Watermark)
+from repro.core.queues import SPSCQueue
+from repro.core.shm_ring import DEFAULT_RING_BYTES, ShmRing
+
+
+# ---------------------------------------------------------------------------
+# EventBlock wire format
+# ---------------------------------------------------------------------------
+
+def _block(n=16, value=True, payload=None, payload_fn=None, cols=True):
+    return EventBlock(
+        np.arange(n, dtype=np.int64) * 3,
+        (np.arange(n, dtype=np.int64) * 7) % 5,
+        np.arange(n, dtype=np.float64) * 1.5 if value else None,
+        payload=payload, payload_fn=payload_fn,
+        cols={"kind": np.arange(n, dtype=np.int8) % 3,
+              "seq": np.arange(n, dtype=np.int64) + 1000} if cols else None)
+
+
+def _assert_blocks_equal(a: EventBlock, b: EventBlock):
+    assert a.ts.tolist() == b.ts.tolist()
+    assert a.key.tolist() == b.key.tolist()
+    if a.value is None:
+        assert b.value is None
+    else:
+        assert a.value.tolist() == b.value.tolist()
+    a_cols = a.cols or {}
+    b_cols = b.cols or {}
+    assert sorted(a_cols) == sorted(b_cols)
+    for name in a_cols:
+        assert a_cols[name].dtype == b_cols[name].dtype
+        assert a_cols[name].tolist() == b_cols[name].tolist()
+
+
+def test_wire_roundtrip_plain():
+    blk = _block()
+    out = EventBlock.from_wire(blk.to_wire())
+    _assert_blocks_equal(blk, out)
+    assert out.payload is None and out.payload_fn is None
+
+
+def test_wire_roundtrip_no_value_no_cols():
+    blk = _block(value=False, cols=False)
+    out = EventBlock.from_wire(blk.to_wire())
+    _assert_blocks_equal(blk, out)
+
+
+def test_wire_roundtrip_payload_list():
+    blk = _block(8, payload=[f"v{i}" for i in range(8)])
+    out = EventBlock.from_wire(blk.to_wire())
+    _assert_blocks_equal(blk, out)
+    assert out.values() == blk.payload
+
+
+def test_wire_roundtrip_picklable_payload_fn():
+    from repro.nexmark.generator import NexmarkGenerator
+    gen = NexmarkGenerator(rate=1000, n_keys=10)
+    blk = gen.gen_block(np.arange(50, dtype=np.int64))
+    out = EventBlock.from_wire(blk.to_wire())
+    _assert_blocks_equal(blk, out)
+    # the lazy materializer itself travels: values rebuilt on the far side
+    assert [type(v).__name__ for v in out.values()] == \
+        [type(v).__name__ for v in blk.values()]
+
+
+def test_wire_fallback_materializes_unpicklable_payload_fn():
+    blk = _block(4, payload_fn=lambda b, i: ("row", int(b.cols["seq"][i])))
+    with pytest.raises(Exception):
+        pickle.dumps(blk.payload_fn)
+    out = EventBlock.from_wire(blk.to_wire())
+    # closure could not travel -> payload was materialized instead
+    assert out.values() == blk.values()
+
+
+def test_wire_copy_decouples_from_buffer():
+    blk = _block()
+    buf = bytearray(blk.to_wire())
+    out = EventBlock.from_wire(buf)
+    before = out.ts.tolist()
+    buf[:] = b"\x00" * len(buf)     # ring memory gets recycled
+    assert out.ts.tolist() == before
+
+
+# ---------------------------------------------------------------------------
+# Ring basics: wraparound, pads, lifecycle
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def small_ring():
+    ring = ShmRing(capacity_bytes=1 << 12)
+    yield ring
+    ring.unlink()
+    ring.close()
+
+
+def test_ring_fifo_and_wraparound(small_ring):
+    """Push far more bytes than capacity through a small ring; every item
+    must come out once, in order, across many physical wraps."""
+    ring = small_ring
+    rng = random.Random(7)
+    pending = []
+    sent = recv = 0
+    while sent < 3000 or pending:
+        if sent < 3000 and (not pending or rng.random() < 0.6):
+            item = Event(sent, sent % 13, float(sent))
+            if ring.offer(item):
+                pending.append(sent)
+                sent += 1
+        else:
+            got = ring.poll()
+            if got is not None:
+                assert got.ts == pending.pop(0)
+                recv += 1
+            else:
+                assert not pending or sent < 3000
+    assert recv == 3000 and ring.is_empty()
+
+
+def test_ring_oversize_item_rejected(small_ring):
+    big = EventBlock(np.arange(4096, dtype=np.int64),
+                     np.arange(4096, dtype=np.int64))
+    with pytest.raises(ValueError):
+        small_ring.offer(big)
+
+
+def test_ring_attach_sees_producer_writes():
+    ring = ShmRing(capacity_bytes=1 << 12)
+    other = ring.attach()
+    try:
+        assert ring.offer(Watermark(42))
+        got = other.poll()
+        assert isinstance(got, Watermark) and got.ts == 42
+        assert ring.is_empty()
+    finally:
+        other.close()
+        ring.unlink()
+        ring.close()
+
+
+def test_ring_not_picklable(small_ring):
+    with pytest.raises(TypeError):
+        pickle.dumps(small_ring)
+
+
+def test_has_room_for_admission_guarantee(small_ring):
+    """The transport contract: has_room_for(x) True => offer(x) succeeds.
+    Fill until it says no, then verify offer agrees, then drain one and
+    re-check — the all-or-nothing primitive block routing relies on."""
+    ring = small_ring
+    blk = _block(48)
+    n = 0
+    while ring.has_room_for(blk):
+        assert ring.offer(blk)
+        n += 1
+        assert n < 100, "ring never filled"
+    assert not ring.offer(blk)
+    assert ring.poll() is not None
+    assert ring.has_room_for(blk) and ring.offer(blk)
+
+
+# ---------------------------------------------------------------------------
+# Randomized oracle: SPSCQueue and ShmRing must behave identically
+# ---------------------------------------------------------------------------
+
+def _canon(item):
+    """Canonical comparable form of any transport item."""
+    cls = item.__class__
+    if cls is EventBlock:
+        return ("B", item.ts.tolist(), item.key.tolist(),
+                None if item.value is None else item.value.tolist(),
+                sorted((k, v.tolist()) for k, v in (item.cols or {}).items()))
+    if cls is LateEvent:
+        return ("L", item.ts, item.key, item.value)
+    if isinstance(item, Event):
+        return ("E", item.ts, item.key, item.value)
+    if cls is Watermark:
+        return ("W", item.ts)
+    if cls is Barrier:
+        return ("X", item.snapshot_id, item.terminal)
+    if item is DONE:
+        return ("D",)
+    return ("P", item)
+
+
+def _random_item(rng):
+    roll = rng.random()
+    if roll < 0.45:
+        value = (rng.randrange(-10**6, 10**6) if rng.random() < 0.5
+                 else rng.random() * 100)
+        return Event(rng.randrange(10**6), rng.randrange(64), value)
+    if roll < 0.70:
+        n = rng.randrange(1, 40)
+        return EventBlock(
+            np.sort(np.asarray(
+                [rng.randrange(10**6) for _ in range(n)], dtype=np.int64)),
+            np.asarray([rng.randrange(64) for _ in range(n)],
+                       dtype=np.int64),
+            np.asarray([rng.random() for _ in range(n)], dtype=np.float64)
+            if rng.random() < 0.7 else None,
+            cols={"seq": np.arange(n, dtype=np.int64)}
+            if rng.random() < 0.5 else None)
+    if roll < 0.80:
+        return Watermark(rng.randrange(10**6))
+    if roll < 0.88:
+        return Barrier(rng.randrange(1, 100), rng.random() < 0.1)
+    if roll < 0.92:
+        return DONE
+    if roll < 0.96:
+        return LateEvent(rng.randrange(10**6), rng.randrange(64), "late")
+    return ("tuple", rng.randrange(100), [rng.random()])
+
+
+def _is_data(item):
+    return isinstance(item, (Event, EventBlock))
+
+
+def _model_poll_prefix(model, limit, explode):
+    """Reference semantics of poll_prefix over the pending-item model."""
+    events, ctrl, k = [], None, 0
+    while k < limit and model:
+        item = model[0]
+        k += 1
+        if _is_data(item):
+            model.pop(0)
+            if item.__class__ is EventBlock and explode:
+                events.extend(item.to_events())
+            else:
+                events.append(item)
+        else:
+            ctrl = model.pop(0)
+            break
+    return events, ctrl
+
+
+@pytest.mark.parametrize("make", [
+    pytest.param(lambda: SPSCQueue(64), id="spsc"),
+    pytest.param(lambda: ShmRing(1 << 14), id="shm_ring"),
+])
+@pytest.mark.parametrize("seed", range(6))
+def test_transport_oracle_random_interleavings(make, seed):
+    q = make()
+    rng = random.Random(1000 + seed)
+    model = []          # items offered and not yet observed
+    offered = polled = 0
+    try:
+        for _ in range(2500):
+            op = rng.random()
+            if op < 0.40:
+                item = _random_item(rng)
+                fits = q.has_room_for(item)
+                ok = q.offer(item)
+                assert ok or not fits, \
+                    "has_room_for promised room but offer failed"
+                if ok:
+                    model.append(item)
+                    offered += 1
+            elif op < 0.60:
+                got = q.poll()
+                if got is None:
+                    assert not model
+                else:
+                    assert _canon(got) == _canon(model.pop(0))
+                    polled += 1
+            elif op < 0.70:
+                got = q.peek()
+                if got is None:
+                    assert not model
+                else:
+                    assert _canon(got) == _canon(model[0])
+            elif op < 0.80:
+                limit = rng.randrange(1, 8)
+                got = q.poll_many(limit)
+                assert len(got) <= limit
+                for item in got:
+                    assert _canon(item) == _canon(model.pop(0))
+                polled += len(got)
+            else:
+                limit = rng.randrange(1, 8)
+                explode = rng.random() < 0.5
+                events, ctrl = q.poll_prefix(limit, explode_blocks=explode)
+                ref_events, ref_ctrl = _model_poll_prefix(model, limit,
+                                                          explode)
+                assert [_canon(e) for e in events] == \
+                    [_canon(e) for e in ref_events]
+                assert (ctrl is None) == (ref_ctrl is None)
+                if ctrl is not None:
+                    assert _canon(ctrl) == _canon(ref_ctrl)
+            assert len(q) == len(model)
+            assert q.is_empty() == (not model)
+        # drain and verify the tail
+        while model:
+            got = q.poll()
+            assert got is not None
+            assert _canon(got) == _canon(model.pop(0))
+        assert q.poll() is None
+        assert offered > 200 and polled > 100, "degenerate interleaving"
+    finally:
+        if isinstance(q, ShmRing):
+            q.unlink()
+            q.close()
+
+
+@pytest.mark.parametrize("make", [
+    pytest.param(lambda: SPSCQueue(4), id="spsc"),
+    pytest.param(lambda: ShmRing(1 << 9), id="shm_ring"),
+])
+@pytest.mark.parametrize("seed", range(4))
+def test_transport_oracle_capacity_edge(make, seed):
+    """Tiny capacity: constant full/empty transitions exercise the
+    admission boundary and (for the ring) the PAD/wrap corner cases."""
+    q = make()
+    rng = random.Random(7000 + seed)
+    model = []
+    rejections = 0
+    try:
+        for i in range(4000):
+            if rng.random() < 0.55:
+                item = (Event(i, i % 7, float(i)) if rng.random() < 0.7
+                        else Watermark(i))
+                fits = q.has_room_for(item)
+                ok = q.offer(item)
+                assert ok or not fits
+                if ok:
+                    model.append(item)
+                else:
+                    rejections += 1
+            else:
+                got = q.poll()
+                if got is None:
+                    assert not model
+                else:
+                    assert _canon(got) == _canon(model.pop(0))
+        assert rejections > 50, "capacity edge never reached"
+    finally:
+        if isinstance(q, ShmRing):
+            q.unlink()
+            q.close()
+
+
+def test_default_ring_capacity_holds_full_blocks():
+    """The sized-for-the-workload claim: a default ring admits several
+    full 4096-row generator blocks back to back."""
+    from repro.nexmark.generator import NexmarkGenerator
+    gen = NexmarkGenerator(rate=60_000)
+    ring = ShmRing(DEFAULT_RING_BYTES)
+    try:
+        n = 0
+        blk = gen.gen_block(np.arange(4096, dtype=np.int64))
+        while ring.has_room_for(blk):
+            assert ring.offer(blk)
+            n += 1
+            blk = gen.gen_block(np.arange(4096, dtype=np.int64) + n * 4096)
+        assert n >= 4
+        for i in range(n):
+            got = ring.poll()
+            assert got.ts[0] == i * 4096 * 1000 // 60_000
+    finally:
+        ring.unlink()
+        ring.close()

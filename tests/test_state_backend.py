@@ -90,3 +90,23 @@ def test_imap_elastic_add_member_migrates_about_one_nth():
         holders = [mem for mem, store in svc.stores.items()
                    if ("t", pid) in store]
         assert len(holders) <= 2
+
+
+def test_snapshot_writer_copies_mutable_state():
+    """The writer must take ownership of mutable values at put time — a
+    processor snapshots its live containers (frame rings, session maps) by
+    reference and keeps mutating them after the barrier; storing the
+    reference would let post-barrier execution corrupt the committed
+    snapshot (the restored scalar fields rewind while the aliased dict has
+    advanced)."""
+    from repro.state import SnapshotStore
+
+    svc = IMapService([0], partition_count=16, backup_count=0)
+    store = SnapshotStore(svc)
+    writer = store.writer("job-x")
+    ring = {20: 33, 40: 29}
+    writer.put(1, "combine", ("k", 0), (80, 80, ring), pid=3)
+    ring[100] = 25          # post-barrier execution mutates the live ring
+    store.commit("job-x", 1)
+    [(key, value)] = store.vertex_entries("job-x", 1, "combine")
+    assert value == (80, 80, {20: 33, 40: 29})
