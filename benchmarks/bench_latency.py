@@ -485,7 +485,17 @@ def write_report(result: Dict,
     if path is None:
         path = pathlib.Path(__file__).resolve().parents[1] / \
             "BENCH_latency.json"
-    path.write_text(json.dumps(result, indent=1, default=float) + "\n")
+    # merge over the existing report: sections other harnesses own (e.g.
+    # the "chaos" section from benchmarks/bench_chaos.py) must survive a
+    # latency-only refresh
+    try:
+        merged = json.loads(path.read_text())
+        if not isinstance(merged, dict):
+            merged = {}
+    except (FileNotFoundError, ValueError):
+        merged = {}
+    merged.update(result)
+    path.write_text(json.dumps(merged, indent=1, default=float) + "\n")
     return path
 
 

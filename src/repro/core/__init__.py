@@ -1,11 +1,13 @@
 """Jet core: DAG execution engine with tasklets, cooperative scheduling,
 watermarks, windows, Chandy-Lamport snapshots and backpressure."""
 
-from .backend import ExecutionBackend, InProcessBackend, make_backend
+from .backend import (ExecutionBackend, InProcessBackend, WorkerFailure,
+                      make_backend)
 from .clock import Clock, VirtualClock, WallClock
 from .dag import DAG, Edge, PARTITION_COUNT, Routing, Vertex
 from .device_window import DeviceWindowProcessor
-from .engine import (JetCluster, Job, JobConfig, JOB_COMPLETED, JOB_RUNNING)
+from .engine import (JetCluster, Job, JobConfig, JobFailedError,
+                     RestartPolicy, JOB_COMPLETED, JOB_FAILED, JOB_RUNNING)
 from .events import (Barrier, DONE, Event, EventBlock, LateEvent, Watermark,
                      block_form)
 from .pipeline import Pipeline, group_aggregate
@@ -23,11 +25,12 @@ from .window import (AggregateOperation, SessionResult, SessionWindowDef,
                      summing, to_list, tumbling)
 
 __all__ = [
-    "ExecutionBackend", "InProcessBackend", "make_backend",
+    "ExecutionBackend", "InProcessBackend", "WorkerFailure", "make_backend",
     "Clock", "VirtualClock", "WallClock",
     "DAG", "Edge", "PARTITION_COUNT", "Routing", "Vertex",
     "DeviceWindowProcessor",
-    "JetCluster", "Job", "JobConfig", "JOB_COMPLETED", "JOB_RUNNING",
+    "JetCluster", "Job", "JobConfig", "JobFailedError", "RestartPolicy",
+    "JOB_COMPLETED", "JOB_FAILED", "JOB_RUNNING",
     "Barrier", "DONE", "Event", "EventBlock", "LateEvent", "Watermark",
     "block_form",
     "Pipeline", "group_aggregate",

@@ -54,6 +54,41 @@ delivers the phase-2 commit signal to every processor's
 
 ``clock_supported(clock)`` lets a backend veto clocks it cannot honor (a
 :class:`~repro.core.clock.VirtualClock` cannot tick across processes).
+
+Failure semantics: cooperative vs detected
+==========================================
+
+Two distinct failure paths feed the engine's recovery machinery, and they
+must not be conflated:
+
+* **Cooperative failure** — an API call (``JetCluster.kill_node``,
+  ``add_node``) scheduled by the operator/test.  The engine *initiates*
+  the teardown, so every resource is released in order and the restart is
+  immediate and unconditional (it does not consume the restart budget).
+* **Detected failure** — the substrate notices, mid-flight, that part of
+  the execution died without being asked to: a worker process SIGKILL'd
+  by the OS (exitcode < 0), a hung worker (no heartbeat within the
+  supervisor deadline), an error-exited worker (processor raised), or —
+  in-process — a :class:`~repro.core.tasklet.TaskletFailureError` out of
+  a cooperative slice.  The backend converts the observation into
+  :class:`WorkerFailure` records surfaced via :meth:`take_failures`;
+  the engine's :class:`~repro.core.engine.RestartPolicy` then decides
+  between a bounded backoff restart (restore from the last *committed*
+  snapshot) and the terminal ``FAILED`` status.
+
+Abort vs commit: a snapshot whose barrier protocol is broken by a
+detected failure (a worker dies holding an un-acked barrier, an ack
+deadline lapses, a barrier broadcast hits a dead pipe) is **aborted** —
+its buffered entries are discarded and the last committed snapshot stays
+authoritative — never completed with partial state and never allowed to
+stall the job waiting for an ack that cannot come.
+
+``inject_fault(execution, kind, ...)`` is the seeded chaos layer's seam
+(:mod:`repro.runtime.chaos`): backends translate an abstract fault kind
+("kill", "stall", "raise", "drop_ack", "delay_ack") into the most real
+failure they can produce (SIGKILL/SIGSTOP a worker process; plant an
+exception inside a cooperative slice).  Returns False for kinds the
+substrate cannot express, so schedules stay portable across backends.
 """
 
 from __future__ import annotations
@@ -63,9 +98,37 @@ from typing import Any, Dict, List, Optional, Tuple
 from .backpressure import NetworkLink
 from .clock import Clock, VirtualClock
 from .queues import SPSCQueue
-from .tasklet import GUARANTEE_NONE, SnapshotContext
+from .tasklet import GUARANTEE_NONE, SnapshotContext, TaskletFailureError
 
 Location = Tuple[int, int]      # (node_id, worker_slot)
+
+#: WorkerFailure kinds
+FAILURE_CRASHED = "crashed"     # process died on a signal (e.g. SIGKILL)
+FAILURE_HUNG = "hung"           # no heartbeat within the deadline
+FAILURE_ERROR = "error"         # processor raised / nonzero exit
+
+
+class WorkerFailure:
+    """One detected (uncooperative) failure, as classified by the
+    substrate.  ``kind`` is one of :data:`FAILURE_CRASHED` /
+    :data:`FAILURE_HUNG` / :data:`FAILURE_ERROR`; ``key`` locates the
+    worker (``(node_id, worker_slot)``) where that is meaningful."""
+
+    __slots__ = ("kind", "key", "detail", "exitcode", "pid")
+
+    def __init__(self, kind: str, key: Optional[Location] = None,
+                 detail: str = "", exitcode: Optional[int] = None,
+                 pid: Optional[int] = None):
+        self.kind = kind
+        self.key = key
+        self.detail = detail
+        self.exitcode = exitcode
+        self.pid = pid
+
+    def __repr__(self):
+        return (f"WorkerFailure({self.kind}, key={self.key}, "
+                f"pid={self.pid}, exitcode={self.exitcode}, "
+                f"detail={self.detail[:80]!r})")
 
 
 class ExecutionBackend:
@@ -111,6 +174,27 @@ class ExecutionBackend:
 
     def notify_snapshot_committed(self, execution, snapshot_id: int) -> None:
         raise NotImplementedError
+
+    # -- failure detection ---------------------------------------------------
+    def take_failures(self, execution) -> List[WorkerFailure]:
+        """Detected failures since the last call (drained; each failure is
+        reported exactly once).  The engine consults this every driver
+        iteration and routes non-empty results into the job's restart
+        policy."""
+        if execution is None:
+            return []
+        failures = execution.backend_data.get("failures")
+        if not failures:
+            return []
+        execution.backend_data["failures"] = []
+        return failures
+
+    def inject_fault(self, execution, kind: str, worker_index: int = 0,
+                     **params) -> bool:
+        """Chaos seam: inject one fault of ``kind`` into a live execution.
+        Returns True if the substrate could express the fault (see module
+        docstring)."""
+        return False
 
     def shutdown(self) -> None:
         """Release any cluster-wide resources (idempotent)."""
@@ -159,12 +243,52 @@ class InProcessBackend(ExecutionBackend):
         progress = False
         for node in self.cluster.nodes.values():
             for worker in node.workers:
-                progress |= worker.run_iteration()
+                try:
+                    progress |= worker.run_iteration()
+                except TaskletFailureError as tf:
+                    # detected (uncooperative) failure on the in-process
+                    # substrate: route it into the owning job's failure
+                    # queue instead of crashing the driver; the engine's
+                    # restart policy takes it from there
+                    self._record_tasklet_failure(jobs, tf)
+                    progress = True
         for job in jobs:
             if job.execution is not None:
                 for link in job.execution.links:
                     progress |= link.pump()
         return progress
+
+    @staticmethod
+    def _record_tasklet_failure(jobs, tf: TaskletFailureError) -> None:
+        for job in jobs:
+            execution = job.execution
+            if execution is not None and any(t is tf.tasklet
+                                             for t in execution.tasklets):
+                execution.backend_data.setdefault("failures", []).append(
+                    WorkerFailure(FAILURE_ERROR,
+                                  detail=f"{tf.tasklet.name}: "
+                                         f"{tf.cause!r}"))
+                return
+        # no owning execution (already torn down): nothing to heal
+        raise tf
+
+    def inject_fault(self, execution, kind: str, worker_index: int = 0,
+                     **params) -> bool:
+        """In-process chaos: "kill" and "raise" both plant an exception in
+        a deterministic live tasklet (there is no process to SIGKILL; an
+        exception out of a cooperative slice IS this substrate's
+        uncooperative failure).  Ring/ack faults have no in-process
+        equivalent and report unsupported."""
+        if kind not in ("kill", "raise"):
+            return False
+        live = sorted((t for t in execution.tasklets if not t.is_done),
+                      key=lambda t: t.name)
+        if not live:
+            return False
+        target = live[worker_index % len(live)]
+        target._chaos_exc = RuntimeError(
+            params.get("message", f"chaos[{kind}] injected"))
+        return True
 
     def execution_done(self, execution) -> bool:
         return all(t.is_done for t in execution.tasklets)

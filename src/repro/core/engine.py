@@ -44,6 +44,41 @@ JOB_COMPLETED = "completed"
 JOB_FAILED = "failed"
 JOB_RESTARTING = "restarting"
 
+
+class JobFailedError(RuntimeError):
+    """A job reached the terminal FAILED status (restart budget exhausted,
+    or a detected failure with no snapshot guarantee to restore from)."""
+
+    def __init__(self, job):
+        self.job = job
+        self.failures = list(job.failures)
+        last = self.failures[-1] if self.failures else None
+        super().__init__(
+            f"job {job.id} FAILED after {job.auto_restarts} automatic "
+            f"restart(s); last failure: {last!r}")
+
+
+class RestartPolicy:
+    """Bounded self-healing for *detected* failures (paper §4.4 recovery,
+    made automatic): each detected worker death/hang/error triggers
+    teardown -> restore-from-committed-snapshot -> restart, delayed by
+    exponential backoff, at most ``max_restarts`` times before the job
+    transitions to the terminal FAILED status.  Cooperative restarts
+    (``kill_node`` / ``add_node``) do not consume this budget — the
+    operator asked for those."""
+
+    def __init__(self, max_restarts: int = 5, backoff_base_s: float = 0.05,
+                 backoff_max_s: float = 2.0):
+        self.max_restarts = max_restarts
+        self.backoff_base_s = backoff_base_s
+        self.backoff_max_s = backoff_max_s
+
+    def delay_for(self, attempt: int) -> float:
+        """Backoff before restart ``attempt`` (1-based): base * 2^(n-1),
+        capped."""
+        return min(self.backoff_base_s * (2 ** max(attempt - 1, 0)),
+                   self.backoff_max_s)
+
 # progressive idle backoff (paper §3.2: spin -> yield -> park).  An idle
 # scheduler first busy-spins (lowest wake-up latency), then yields its
 # timeslice, then parks in escalating naps so an idle job stops burning
@@ -58,10 +93,18 @@ IDLE_PARK_MAX_S = 0.0002
 class JobConfig:
     def __init__(self, name: str = "job",
                  processing_guarantee: str = GUARANTEE_NONE,
-                 snapshot_interval_s: float = 1.0):
+                 snapshot_interval_s: float = 1.0,
+                 restart_policy: Optional[RestartPolicy] = None,
+                 barrier_timeout_s: float = 5.0):
         self.name = name
         self.processing_guarantee = processing_guarantee
         self.snapshot_interval_s = snapshot_interval_s
+        self.restart_policy = restart_policy or RestartPolicy()
+        #: a snapshot whose barrier acks have not all arrived within this
+        #: deadline is ABORTED (entries discarded, last committed snapshot
+        #: stays authoritative) instead of stalling the job forever; only
+        #: meaningful on substrates whose acks can actually be lost (mp)
+        self.barrier_timeout_s = barrier_timeout_s
 
 
 class _Instance:
@@ -145,6 +188,7 @@ class ExecutionContext:
                     local_index=inst.local_index,
                     total_parallelism=lp * n_nodes, node_id=inst.node,
                     node_count=n_nodes, partition_ids=owned,
+                    partition_count=table.partition_count,
                     clock=cluster.clock)
                 key = (name, inst.node, inst.local_index)
                 spf = getattr(processor, "snapshot_partition", None)
@@ -286,6 +330,15 @@ class Job:
         self._last_snapshot_at = cluster.clock.now()
         self.snapshots_taken = 0
         self.restarts = 0
+        #: automatic restarts consumed by DETECTED failures (bounded by
+        #: ``config.restart_policy``; cooperative restarts not included)
+        self.auto_restarts = 0
+        #: detected-failure history (WorkerFailure records)
+        self.failures: List[Any] = []
+        #: cluster-clock instant the pending self-heal restart is due
+        self._restart_due_at: Optional[float] = None
+        #: aborted-snapshot tally of already-discarded executions
+        self._aborted_before = 0
 
     # -- snapshot coordination ----------------------------------------------------
     def tick(self, now: float) -> None:
@@ -293,11 +346,60 @@ class Job:
                 or self.config.processing_guarantee == GUARANTEE_NONE):
             return
         ssctx = self.execution.ssctx
+        if ssctx.check_timeout():
+            # in-flight snapshot aborted (overdue barrier acks): give the
+            # next attempt a full interval rather than retrying instantly
+            self._last_snapshot_at = now
+            return
         if (now - self._last_snapshot_at >= self.config.snapshot_interval_s
                 and ssctx.completed_id == ssctx.requested_id):
             ssctx.begin(self._next_snapshot_id)
             self._next_snapshot_id += 1
             self._last_snapshot_at = now
+
+    @property
+    def snapshots_aborted(self) -> int:
+        """Snapshots abandoned without commit across all execution
+        attempts of this job (ack timeouts, worker death mid-barrier)."""
+        aborted = self._aborted_before
+        if self.execution is not None and self.execution.ssctx is not None:
+            aborted += self.execution.ssctx.aborted_count
+        return aborted
+
+    # -- detected failures / self-healing -----------------------------------------
+    def on_detected_failure(self, failures) -> None:
+        """Route detected (uncooperative) failures into the restart
+        policy: tear the half-dead execution down, then either schedule a
+        backoff restart from the last committed snapshot or transition to
+        the terminal FAILED status."""
+        if self.status in (JOB_COMPLETED, JOB_FAILED):
+            return
+        self.failures.extend(failures)
+        if self.execution is not None:
+            # stop the attempt NOW: surviving workers must not keep
+            # producing into a topology that is about to be discarded
+            self.cluster.backend.stop_execution(self.execution)
+        policy = self.config.restart_policy
+        if self.config.processing_guarantee == GUARANTEE_NONE:
+            # nothing committed to restore from — a restart would replay
+            # the stream into sinks that already saw it
+            self.status = JOB_FAILED
+            return
+        if self.auto_restarts >= policy.max_restarts:
+            self.status = JOB_FAILED
+            return
+        self.auto_restarts += 1
+        self.status = JOB_RESTARTING
+        self._restart_due_at = (self.cluster.clock.now()
+                                + policy.delay_for(self.auto_restarts))
+
+    def maybe_heal(self, now: float) -> None:
+        """Run the pending self-heal restart once its backoff elapsed."""
+        if (self.status == JOB_RESTARTING
+                and self._restart_due_at is not None
+                and now >= self._restart_due_at):
+            self._restart_due_at = None
+            self.restart()
 
     def _on_snapshot_complete(self, snapshot_id: int) -> None:
         self.cluster.snapshot_store.commit(self.id, snapshot_id)
@@ -322,6 +424,8 @@ class Job:
         old = self.execution
         if old is not None:
             self.cluster.backend.stop_execution(old)
+            if old.ssctx is not None:
+                self._aborted_before += old.ssctx.aborted_count
         self.execution = ExecutionContext(self, self.cluster)
         committed = self.cluster.snapshot_store.latest_committed(self.id)
         if committed is not None:
@@ -388,6 +492,13 @@ class JetCluster:
         """One scheduler iteration across the whole cluster."""
         progress = self.backend.step(self.jobs)
         for job in self.jobs:
+            # detected (uncooperative) failures first: a job whose workers
+            # died must not be ticked for snapshots or marked completed
+            failures = self.backend.take_failures(job.execution)
+            if failures:
+                job.on_detected_failure(failures)
+                progress = True
+            job.maybe_heal(self.clock.now())
             job.tick(self.clock.now())
             if (job.status == JOB_RUNNING
                     and self.backend.execution_done(job.execution)):
@@ -413,6 +524,8 @@ class JetCluster:
         for _ in range(max_steps):
             if job.status == JOB_COMPLETED:
                 return
+            if job.status == JOB_FAILED:
+                raise JobFailedError(job)
             self.step()
         raise TimeoutError(
             f"job {job.id} did not complete in {max_steps} steps "

@@ -113,13 +113,15 @@ class ProcessorContext:
         "node_id",
         "node_count",
         "partition_ids",
+        "partition_count",
         "clock",
         "logger",
     )
 
     def __init__(self, vertex_name: str, global_index: int, local_index: int,
                  total_parallelism: int, node_id: int, node_count: int,
-                 partition_ids: Tuple[int, ...], clock=None, logger=None):
+                 partition_ids: Tuple[int, ...], partition_count=None,
+                 clock=None, logger=None):
         self.vertex_name = vertex_name
         self.global_index = global_index
         self.local_index = local_index
@@ -128,6 +130,10 @@ class ProcessorContext:
         self.node_count = node_count
         # partitions owned by this processor instance (for keyed state)
         self.partition_ids = partition_ids
+        # cluster-wide partition count (None when the embedding harness
+        # does not partition state); lets a processor address partitions
+        # it does NOT own, e.g. to replicate replay offsets everywhere
+        self.partition_count = partition_count
         self.clock = clock
         self.logger = logger
 

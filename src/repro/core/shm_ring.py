@@ -38,12 +38,32 @@ block (the default 1 MiB holds ~6 full 4096-row NEXMark blocks).
 answers whether an ``offer`` of that item is guaranteed to succeed — the
 all-or-nothing admission primitive EventBlock routing needs on an edge
 whose capacity is bytes, not slots.
+
+Leak guards
+===========
+
+A shm segment outlives the process that forgot to unlink it, so rings
+created here carry three layers of protection:
+
+* every segment is named ``jetring_<creator-pid>_<nonce>``
+  (:data:`RING_NAME_PREFIX`), so leaked segments are identifiable;
+* the creating :class:`ShmRing` registers a ``weakref.finalize`` (which
+  also runs at interpreter exit) that unlinks the segment if normal
+  teardown never did; the callback is guarded by the creator's pid —
+  worker processes inherit the object via fork and must NOT unlink a
+  segment the coordinator is still using when they exit;
+* :func:`sweep_leaked_rings` removes any ``jetring_*`` segment left on
+  the host by previous crashed runs (a SIGKILL'd coordinator gets no
+  atexit), for harnesses/CI to call up front.
 """
 
 from __future__ import annotations
 
+import os
 import pickle
+import secrets
 import struct
+import weakref
 from multiprocessing import shared_memory
 from typing import Any, List, Optional, Tuple
 
@@ -68,6 +88,48 @@ _BARRIER = struct.Struct("<qB")
 _PICKLE_PROTO = pickle.HIGHEST_PROTOCOL
 
 DEFAULT_RING_BYTES = 1 << 20
+
+#: shm segment name prefix for every ring created by this module
+RING_NAME_PREFIX = "jetring_"
+_SHM_DIR = "/dev/shm"
+
+
+def _unlink_guarded(name: str, creator_pid: int) -> None:
+    """Finalizer body: unlink ``name`` only in the process that created
+    it.  Children inherit the creator's ShmRing (and its finalizer) via
+    fork; a child exiting mid-job must not yank the segment out from
+    under the coordinator."""
+    if os.getpid() != creator_pid:
+        return
+    try:
+        seg = shared_memory.SharedMemory(name=name)
+    except (FileNotFoundError, OSError):
+        return      # already unlinked by normal teardown
+    try:
+        seg.close()
+        seg.unlink()
+    except (FileNotFoundError, OSError):  # pragma: no cover - racing exit
+        pass
+
+
+def sweep_leaked_rings() -> List[str]:
+    """Remove ``jetring_*`` segments left behind by previous crashed runs
+    (a SIGKILL'd process gets neither atexit nor finalizers).  Returns
+    the names removed.  Call this up front in long-running harnesses —
+    never mid-job, when live rings with the prefix exist."""
+    swept: List[str] = []
+    try:
+        names = os.listdir(_SHM_DIR)
+    except OSError:  # pragma: no cover - non-Linux / no shm mount
+        return swept
+    for fn in names:
+        if fn.startswith(RING_NAME_PREFIX):
+            try:
+                os.unlink(os.path.join(_SHM_DIR, fn))
+                swept.append(fn)
+            except OSError:  # pragma: no cover - racing teardown
+                pass
+    return swept
 
 
 def _encode(item) -> Tuple[int, bytes]:
@@ -114,14 +176,22 @@ class ShmRing:
     """Fixed-capacity shared-memory SPSC ring with the SPSCQueue surface."""
 
     __slots__ = ("_shm", "_cap", "_mv", "_data", "_created", "_staged",
-                 "_peeked", "name")
+                 "_peeked", "_finalizer", "name", "__weakref__")
 
     def __init__(self, capacity_bytes: int = DEFAULT_RING_BYTES,
                  name: Optional[str] = None, create: bool = True):
+        self._finalizer = None
         if create:
+            if name is None:
+                name = (f"{RING_NAME_PREFIX}{os.getpid()}_"
+                        f"{secrets.token_hex(4)}")
             self._shm = shared_memory.SharedMemory(
                 name=name, create=True, size=_HDR_BYTES + capacity_bytes)
             self._shm.buf[:_HDR_BYTES] = b"\x00" * _HDR_BYTES
+            # leak guard: runs at GC or interpreter exit if stop_execution
+            # never unlinked this ring; pid-guarded against forked children
+            self._finalizer = weakref.finalize(
+                self, _unlink_guarded, self._shm.name, os.getpid())
         else:
             self._shm = shared_memory.SharedMemory(name=name)
         self.name = self._shm.name
@@ -329,6 +399,8 @@ class ShmRing:
             pass
 
     def unlink(self) -> None:
+        if self._finalizer is not None:
+            self._finalizer.detach()    # normal teardown; guard not needed
         try:
             self._shm.unlink()
         except FileNotFoundError:  # pragma: no cover - already unlinked

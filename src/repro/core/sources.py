@@ -287,17 +287,25 @@ class PacedGeneratorSource(Processor):
             return True
         return False
 
-    # replay support: offsets ride on the owned state partitions (like
-    # JournalSource) so any post-restart topology finds them.  Each entry
-    # additionally records which residue class (old global index / old
-    # total parallelism) the frontier belongs to: after a restart that
-    # CHANGED parallelism, the new instances skip exactly the seqs the old
-    # topology already emitted — exact replay, not the at-least-once
-    # residue-gap duplication the seed accepted.  (An old class whose
-    # frontier entry landed entirely on other instances falls back to
-    # emit-everything for that class, i.e. at-least-once, never loss.)
+    # replay support: each instance's frontier entry is replicated to
+    # EVERY state partition (the snapshot store keys entries by
+    # (vertex, instance, key), so replicas from different instances
+    # coexist on one partition).  Each entry records which residue class
+    # (old global index / old total parallelism) the frontier belongs
+    # to: after a restart that CHANGED parallelism, the new instances
+    # skip exactly the seqs the old topology already emitted — exact
+    # replay, not at-least-once residue-gap duplication.  Replicating to
+    # all partitions (instead of only the owned ones) is what makes the
+    # skip rule sound: a new instance owns only a slice of the
+    # partitions, and under owned-only placement it could miss some old
+    # instances' entries entirely — its ``base`` then started above an
+    # unseen class's frontier and the seqs in between were silently
+    # LOST.  With full replication every restored instance reconstructs
+    # the complete frontier vector from any single partition it owns.
     def save_to_snapshot(self) -> bool:
-        for p in self.ctx.partition_ids:
+        n = self.ctx.partition_count
+        pids = range(n) if n else self.ctx.partition_ids
+        for p in pids:
             self.outbox.offer_to_snapshot(
                 ("gen", p),
                 (self._seq, self._start, self.ctx.global_index,

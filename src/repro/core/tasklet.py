@@ -50,6 +50,20 @@ GUARANTEE_AT_LEAST_ONCE = "at_least_once"
 GUARANTEE_EXACTLY_ONCE = "exactly_once"
 
 
+class TaskletFailureError(Exception):
+    """A processor raised out of its cooperative slice.
+
+    The scheduler wraps the original exception so the execution substrate
+    can tell *which* tasklet failed and route the event into failure
+    detection (restart policy) instead of crashing the driver.  The
+    original exception is chained as ``__cause__``."""
+
+    def __init__(self, tasklet, cause: BaseException):
+        super().__init__(f"tasklet {tasklet.name} failed: {cause!r}")
+        self.tasklet = tasklet
+        self.cause = cause
+
+
 class InQueue:
     """One inbound queue (SPSC ring or the receiver side of a NetworkLink)
     plus its stream-protocol state."""
@@ -298,7 +312,8 @@ class SnapshotContext:
     barrier; its state is final and empty of in-flight work)."""
 
     __slots__ = ("guarantee", "requested_id", "writer", "tasklets", "_acked",
-                 "completed_id", "on_complete", "terminal_requested")
+                 "completed_id", "on_complete", "terminal_requested",
+                 "aborted_count")
 
     def __init__(self, guarantee: str, writer=None):
         self.guarantee = guarantee
@@ -309,6 +324,19 @@ class SnapshotContext:
         self.completed_id = 0
         self.on_complete: Optional[Callable[[int], None]] = None
         self.terminal_requested = False
+        #: snapshots abandoned without commit (barrier ack timeout, worker
+        #: death mid-barrier); the last *committed* snapshot stays
+        #: authoritative for recovery
+        self.aborted_count = 0
+
+    def check_timeout(self) -> bool:
+        """Abort the in-flight snapshot if its barrier acks are overdue;
+        returns True when an abort happened.  The in-process context acks
+        via direct calls on this thread — a barrier here cannot be lost,
+        only slow — so the base implementation never aborts.  Contexts
+        whose acks cross a process boundary (``MpSnapshotContext``)
+        override this with a real deadline."""
+        return False
 
     def begin(self, snapshot_id: int) -> None:
         self.requested_id = snapshot_id
@@ -395,6 +423,11 @@ class ProcessorTasklet:
         self._snapshot_pid_fn = snapshot_pid_fn
         self._queue_cursor = 0
         self._barrier_to_emit: Optional[Barrier] = None
+        #: fault injection (runtime/chaos.py): an exception planted here is
+        #: raised at the top of the next slice, indistinguishable from the
+        #: processor itself failing — the seam every chaos "raise" fault
+        #: uses on both substrates
+        self._chaos_exc: Optional[BaseException] = None
         # stats
         self.items_in = 0
         self.items_out = 0
@@ -404,6 +437,9 @@ class ProcessorTasklet:
     # ------------------------------------------------------------------ call --
     def call(self) -> bool:
         """One execution slice; returns True when progress was made."""
+        if self._chaos_exc is not None:
+            exc, self._chaos_exc = self._chaos_exc, None
+            raise exc
         self.calls += 1
         progress = False
 
@@ -849,7 +885,10 @@ class CooperativeWorker:
         progress = False
         for t in self.tasklets:
             if not t.is_done:
-                progress |= t.call()
+                try:
+                    progress |= t.call()
+                except Exception as e:
+                    raise TaskletFailureError(t, e) from e
         return progress
 
     def _run_iteration_timed(self, weight: int) -> bool:
@@ -860,7 +899,10 @@ class CooperativeWorker:
         for t in self.tasklets:
             if not t.is_done:
                 t0 = perf()
-                progress |= t.call()
+                try:
+                    progress |= t.call()
+                except Exception as e:
+                    raise TaskletFailureError(t, e) from e
                 dt = perf() - t0
                 time_in[t.name] = time_in.get(t.name, 0.0) + dt * weight
                 if dt > budget:

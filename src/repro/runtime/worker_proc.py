@@ -34,23 +34,72 @@ data plane:
 
 Workers inherit the built execution via ``fork`` (no pickling of the DAG
 or closures); only items crossing rings and control messages serialize.
+
+Failure semantics: cooperative vs detected
+==========================================
+
+``kill_node`` / ``add_node`` above are *cooperative* failures — the
+engine initiates them, tears the attempt down in order, and restarts
+unconditionally.  Everything below is about failures the engine did NOT
+schedule:
+
+* children heartbeat (``("hb",)`` every :data:`_HEARTBEAT_S` seconds) on
+  their control pipe; the coordinator-side
+  :class:`~repro.runtime.supervisor.WorkerSupervisor` classifies a worker
+  as **crashed** (exitcode < 0 without DONE — e.g. SIGKILL'd by the OS),
+  **hung** (live process, heartbeat older than the deadline — wedged,
+  SIGSTOP'd, deadlocked; the supervisor SIGKILLs it), or **error-exited**
+  (the child shipped ``("error", traceback)`` and re-raised).
+* ``step``/``_drain_handle`` route ``EOFError``/``BrokenPipeError`` from
+  a dead worker's pipe into this detection instead of crashing the
+  coordinator or silently dropping the worker: the handle is marked dead,
+  the snapshot context is told (see below), and the supervisor's next
+  check turns the exitcode into a :class:`~repro.core.backend
+  .WorkerFailure` surfaced via ``take_failures`` — the engine's
+  :class:`~repro.core.engine.RestartPolicy` then drives the same
+  teardown -> restore-from-committed-snapshot -> re-fork path as
+  ``kill_node``, with bounded attempts and exponential backoff.
+
+Abort vs commit rules for the barrier protocol:
+
+* a snapshot COMMITS only when every worker that received its barrier
+  broadcast acked with its buffered state entries (workers that finished
+  their data plane beforehand are exempt — they hold no in-flight state);
+* a snapshot is ABORTED — buffered entries discarded, ``aborted_count``
+  bumped, the previous *committed* snapshot left authoritative, the job
+  free to schedule a new snapshot — whenever its barrier protocol can no
+  longer complete: the ack deadline (``JobConfig.barrier_timeout_s``)
+  lapses, a worker dies holding an un-acked barrier, or the barrier
+  broadcast itself hits a dead pipe.  An abort never stalls the job and
+  never completes with partial state.
+* children **serialize barrier generations**: an abort lets the
+  coordinator begin snapshot *n+1* while a loaded worker still has the
+  ``("snapshot", n)`` command queued, so a child begins each queued id
+  only after its previous local snapshot completed — every barrier id is
+  emitted into the rings, in order, and downstream alignment can never
+  park on a generation that nobody will ever forward (the coordinator
+  simply ignores late acks for aborted ids).
 """
 
 from __future__ import annotations
 
 import multiprocessing
+import os
+import signal
 import time as _time
 import traceback
 from multiprocessing import connection as _mpc
 from typing import Any, Dict, List, Optional, Tuple
 
-from ..core.backend import ExecutionBackend, Location
+from ..core.backend import (ExecutionBackend, FAILURE_ERROR, Location,
+                            WorkerFailure)
 from ..core.clock import Clock, VirtualClock
 from ..core.queues import SPSCQueue
 from ..core.shm_ring import DEFAULT_RING_BYTES, ShmRing
 from ..core.tasklet import (CooperativeWorker, GUARANTEE_NONE,
                             SnapshotContext)
 from ..state.snapshot_store import own_snapshot_value
+from .supervisor import DEFAULT_HEARTBEAT_TIMEOUT_S, WorkerSupervisor
 
 _MP = multiprocessing.get_context("fork")
 
@@ -63,6 +112,8 @@ _IDLE_PARK_MAX_S = 0.0005
 _RESULT_SHIP_S = 0.02
 #: command-pipe poll cadence (iterations) while the child is busy
 _CMD_POLL_ITERS = 32
+#: child liveness heartbeat cadence (supervisor deadline is several x this)
+_HEARTBEAT_S = 0.25
 
 
 class _BufferWriter:
@@ -166,7 +217,8 @@ def _worker_main(execution, key: Location, conn) -> None:
 
         idle_streak = 0
         done_sent = False
-        last_ship = _time.monotonic()
+        pending_snapshots: List[int] = []
+        last_ship = last_hb = _time.monotonic()
         iters = 0
         while True:
             iters += 1
@@ -175,18 +227,48 @@ def _worker_main(execution, key: Location, conn) -> None:
                     cmd = conn.recv()
                     op = cmd[0]
                     if op == "snapshot":
-                        local_ctx.begin(cmd[1])
+                        # Serialize barrier generations.  Two snapshot
+                        # commands can be queued back-to-back when the
+                        # coordinator ABORTS snapshot n (ack deadline) and
+                        # begins n+1 before this (descheduled, loaded)
+                        # worker drained its pipe.  Calling begin(n+1)
+                        # straight over begin(n) would mean no tasklet
+                        # slice ever observes requested_id == n, so this
+                        # worker's sources would never emit barrier n into
+                        # the rings — while a faster sibling worker DID
+                        # forward n, leaving downstream tasklets parked on
+                        # a mix of generations that can never align (a
+                        # permanent, heartbeat-alive wedge).  Begin each
+                        # id only after the previous local snapshot
+                        # completed, so every barrier id is emitted, in
+                        # order; the coordinator ignores late acks for
+                        # aborted ids.
+                        pending_snapshots.append(cmd[1])
                     elif op == "committed":
                         for t in tasklets:
                             hook = getattr(t.processor,
                                            "on_snapshot_committed", None)
                             if hook is not None:
                                 hook(cmd[1])
+                    elif op == "chaos_raise":
+                        # parent-triggered fault: plant an exception in the
+                        # named (or first live) tasklet's next slice
+                        live = [t for t in tasklets if not t.is_done]
+                        target = next((t for t in live if t.name == cmd[1]),
+                                      live[0] if live else None)
+                        if target is not None:
+                            target._chaos_exc = RuntimeError(cmd[2])
                     elif op == "stop":
                         _ship_results(conn, sinks)
                         return
+            if (pending_snapshots
+                    and local_ctx.completed_id == local_ctx.requested_id):
+                local_ctx.begin(pending_snapshots.pop(0))
             progress = worker.run_iteration()
             now = _time.monotonic()
+            if now - last_hb >= _HEARTBEAT_S:
+                conn.send(("hb",))
+                last_hb = now
             if sinks and now - last_ship >= _RESULT_SHIP_S:
                 _ship_results(conn, sinks)
                 last_ship = now
@@ -211,11 +293,16 @@ def _worker_main(execution, key: Location, conn) -> None:
     except (EOFError, BrokenPipeError, KeyboardInterrupt):
         pass
     except BaseException:
+        # ship the full traceback to the coordinator (it becomes the
+        # WorkerFailure detail) and exit nonzero WITHOUT re-raising:
+        # multiprocessing's bootstrap would print a duplicate traceback
+        # for a failure the parent is about to handle and heal
         try:
             conn.send(("error", traceback.format_exc()))
+            conn.close()
         except Exception:
             pass
-        raise
+        os._exit(1)
     finally:
         try:
             conn.close()
@@ -230,40 +317,89 @@ def _worker_main(execution, key: Location, conn) -> None:
 class MpSnapshotContext(SnapshotContext):
     """Coordinator-side snapshot state: ``begin`` broadcasts to workers,
     completion needs an ack (with state entries) from every live worker;
-    entries land in the snapshot store in one bulk write before commit."""
+    entries land in the snapshot store in one bulk write before commit.
 
-    __slots__ = ("backend", "execution", "store_writer", "_await",
-                 "_entries")
+    Unlike the in-process context, acks here CAN be lost (a worker dies
+    holding an un-acked barrier, or the barrier broadcast itself hits a
+    dead pipe), so an in-flight snapshot may be **aborted**: buffered
+    entries are discarded, ``aborted_count`` is bumped and the last
+    *committed* snapshot stays authoritative — ``on_complete`` (which
+    commits) is never called for an aborted snapshot, and late acks for
+    it are ignored.  ``ack_timeout_s`` (wired from
+    ``JobConfig.barrier_timeout_s``) bounds how long a snapshot may wait
+    for its acks before the engine's ``check_timeout`` poll aborts it."""
+
+    __slots__ = ("backend", "execution", "store_writer", "ack_timeout_s",
+                 "_await", "_entries", "_deadline")
 
     def __init__(self, guarantee: str, store_writer):
         super().__init__(guarantee, writer=None)
         self.backend: Optional["MultiprocessBackend"] = None
         self.execution = None
         self.store_writer = store_writer
+        self.ack_timeout_s: Optional[float] = None
         self._await: set = set()
         self._entries: List[Tuple] = []
+        self._deadline: Optional[float] = None
 
     def begin(self, snapshot_id: int) -> None:
         self.requested_id = snapshot_id
         self._entries = []
-        self._await = self.backend.broadcast(self.execution,
-                                             ("snapshot", snapshot_id))
+        if self.ack_timeout_s is not None:
+            self._deadline = _time.monotonic() + self.ack_timeout_s
+        reached, failed = self.backend.broadcast(self.execution,
+                                                 ("snapshot", snapshot_id))
+        self._await = reached
+        if failed:
+            # a not-yet-done worker never received its barrier: it will
+            # never align, so this snapshot cannot be consistent
+            self.abort(f"barrier broadcast failed for workers {failed}")
+            return
         self._maybe_complete()
 
     def worker_ack(self, key: Location, snapshot_id: int,
                    entries: List[Tuple]) -> None:
-        if snapshot_id != self.requested_id:
-            return
+        if (snapshot_id != self.requested_id
+                or self.completed_id == self.requested_id):
+            return      # stale, or a late ack for an aborted snapshot
         self._entries.extend(entries)
         self._await.discard(key)
         self._maybe_complete()
 
-    def worker_gone(self, key: Location) -> None:
-        """A worker finished (or died) without acking; it can no longer
-        contribute in-flight state — same as the in-process exempt rule."""
-        if key in self._await:
-            self._await.discard(key)
-            self._maybe_complete()
+    def worker_gone(self, key: Location, crashed: bool = False) -> None:
+        """A worker left the data plane.  ``crashed=False`` means it
+        finished cleanly (reported DONE): it holds no in-flight state, so
+        it is exempt from the barrier — same as the in-process rule.
+        ``crashed=True`` means it died; if it still owed us an ack, its
+        state is lost and the snapshot must be aborted, never completed
+        without it."""
+        if key not in self._await:
+            return
+        if crashed:
+            self.abort(f"worker {key} died holding an un-acked barrier")
+            return
+        self._await.discard(key)
+        self._maybe_complete()
+
+    def abort(self, reason: str = "") -> None:
+        """Abort the in-flight snapshot: discard buffered entries, leave
+        the last committed snapshot authoritative, and free the job to
+        schedule a new snapshot.  No commit, no ``on_complete``."""
+        if self.completed_id == self.requested_id:
+            return      # nothing in flight
+        self._entries = []
+        self._await = set()
+        self._deadline = None
+        self.completed_id = self.requested_id
+        self.aborted_count += 1
+
+    def check_timeout(self) -> bool:
+        if (self.completed_id != self.requested_id
+                and self._deadline is not None
+                and _time.monotonic() > self._deadline):
+            self.abort(f"barrier acks overdue after {self.ack_timeout_s}s")
+            return True
+        return False
 
     def _maybe_complete(self) -> None:
         if self.completed_id == self.requested_id or self._await:
@@ -271,6 +407,7 @@ class MpSnapshotContext(SnapshotContext):
         if self.store_writer is not None and self._entries:
             self.store_writer.put_many(self._entries)
         self._entries = []
+        self._deadline = None
         self.completed_id = self.requested_id
         if self.on_complete is not None:
             self.on_complete(self.completed_id)
@@ -287,15 +424,28 @@ class _WorkerHandle:
         self.done = False
 
 
+def _kill_handle_hard(proc) -> None:
+    """Last-resort teardown for a worker that survived ``terminate()``:
+    SIGTERM stays *pending* on a SIGSTOPped process, so escalate to
+    SIGKILL (which cannot be blocked or stopped) and reap."""
+    try:
+        os.kill(proc.pid, signal.SIGKILL)
+    except (ProcessLookupError, OSError):  # pragma: no cover
+        pass
+    proc.join(timeout=5.0)
+
+
 class MultiprocessBackend(ExecutionBackend):
     """Execution substrate running cooperative workers as OS processes
     over shared-memory rings (module docstring has the full protocol)."""
 
     name = "mp"
 
-    def __init__(self, ring_bytes: int = DEFAULT_RING_BYTES):
+    def __init__(self, ring_bytes: int = DEFAULT_RING_BYTES,
+                 heartbeat_timeout_s: float = DEFAULT_HEARTBEAT_TIMEOUT_S):
         super().__init__()
         self.ring_bytes = ring_bytes
+        self.heartbeat_timeout_s = heartbeat_timeout_s
 
     def clock_supported(self, clock: Clock) -> bool:
         return not isinstance(clock, VirtualClock)
@@ -305,7 +455,9 @@ class MultiprocessBackend(ExecutionBackend):
         writer = (self.cluster.snapshot_store.writer(job.id)
                   if job.config.processing_guarantee != GUARANTEE_NONE
                   else None)
-        return MpSnapshotContext(job.config.processing_guarantee, writer)
+        ctx = MpSnapshotContext(job.config.processing_guarantee, writer)
+        ctx.ack_timeout_s = job.config.barrier_timeout_s
+        return ctx
 
     def make_transport(self, execution, edge, src: Location, dst: Location):
         if src == dst:
@@ -334,6 +486,7 @@ class MultiprocessBackend(ExecutionBackend):
         ssctx = execution.ssctx
         ssctx.backend = self
         ssctx.execution = execution
+        supervisor = WorkerSupervisor(self.heartbeat_timeout_s)
         workers: Dict[Location, _WorkerHandle] = {}
         for key in sorted(data.get("by_worker", {})):
             parent_conn, child_conn = _MP.Pipe(duplex=True)
@@ -343,8 +496,11 @@ class MultiprocessBackend(ExecutionBackend):
             proc.start()
             child_conn.close()
             workers[key] = _WorkerHandle(key, proc, parent_conn)
+            supervisor.worker_started(key)
         data["workers"] = workers
+        data["supervisor"] = supervisor
         data["done"] = set()
+        data["failures"] = []
         data["by_name"] = {t.name: t for t in execution.tasklets}
         data["started"] = True
         data["stopped"] = False
@@ -354,6 +510,14 @@ class MultiprocessBackend(ExecutionBackend):
         if not data.get("started") or data.get("stopped"):
             data["stopped"] = True
             return
+        # un-stall chaos-SIGSTOPped workers first: a stopped process can
+        # neither honor ("stop",) nor die from the pending SIGTERM
+        for pid in list(data.get("stalled", {})):
+            try:
+                os.kill(pid, signal.SIGCONT)
+            except (ProcessLookupError, OSError):
+                pass
+        data.pop("stalled", None)
         workers = data["workers"]
         for h in workers.values():
             if h.alive:
@@ -366,14 +530,16 @@ class MultiprocessBackend(ExecutionBackend):
         while pending and _time.monotonic() < deadline:
             still = []
             for h in pending:
-                self._drain_handle(execution, h, raise_errors=False)
+                self._drain_handle(execution, h, detect=False)
                 h.proc.join(timeout=0.05)
                 if h.proc.exitcode is None:
                     still.append(h)
             pending = still
-        for h in pending:  # pragma: no cover - stuck worker safety net
+        for h in pending:  # stuck worker: escalate SIGTERM -> SIGKILL
             h.proc.terminate()
             h.proc.join(timeout=1.0)
+            if h.proc.exitcode is None:  # pragma: no cover - hard path
+                _kill_handle_hard(h.proc)
         for h in workers.values():
             h.alive = False
             try:
@@ -392,6 +558,7 @@ class MultiprocessBackend(ExecutionBackend):
     def step(self, jobs) -> bool:
         progress = False
         waitable = []
+        now = _time.monotonic()
         for job in jobs:
             execution = job.execution
             if execution is None:
@@ -402,9 +569,23 @@ class MultiprocessBackend(ExecutionBackend):
             for h in data["workers"].values():
                 if h.alive:
                     progress |= self._drain_handle(execution, h,
-                                                   raise_errors=True)
+                                                   detect=True)
                     if h.alive:
                         waitable.append(h.conn)
+            progress |= self._deliver_due_acks(execution, now)
+            self._resume_due_stalls(data, now)
+            supervisor = data["supervisor"]
+            failures = supervisor.check(data["workers"].values(), now=now)
+            if failures:
+                progress = True
+                for f in failures:
+                    h = data["workers"].get(f.key)
+                    if h is not None:
+                        h.alive = False
+                    # a dead worker can never ack: abort any snapshot
+                    # still awaiting it rather than stalling
+                    execution.ssctx.worker_gone(f.key, crashed=True)
+                data["failures"].extend(failures)
         if not progress and waitable:
             # nothing pending: block briefly on the control pipes instead
             # of burning the coordinator's core (the data plane lives in
@@ -412,15 +593,54 @@ class MultiprocessBackend(ExecutionBackend):
             _mpc.wait(waitable, timeout=0.002)
         return progress
 
+    @staticmethod
+    def _deliver_due_acks(execution, now: float) -> bool:
+        """Release chaos-delayed barrier acks whose hold expired."""
+        delayed = execution.backend_data.get("delayed_acks")
+        if not delayed:
+            return False
+        due = [d for d in delayed if d[0] <= now]
+        if not due:
+            return False
+        execution.backend_data["delayed_acks"] = [
+            d for d in delayed if d[0] > now]
+        for _, key, snapshot_id, entries in due:
+            execution.ssctx.worker_ack(key, snapshot_id, entries)
+        return True
+
+    @staticmethod
+    def _resume_due_stalls(data, now: float) -> None:
+        """SIGCONT chaos-stalled workers whose stall duration elapsed."""
+        stalled = data.get("stalled")
+        if not stalled:
+            return
+        for pid, resume_at in list(stalled.items()):
+            if resume_at is not None and now >= resume_at:
+                try:
+                    os.kill(pid, signal.SIGCONT)
+                except (ProcessLookupError, OSError):
+                    pass
+                del stalled[pid]
+
     def _drain_handle(self, execution, h: _WorkerHandle,
-                      raise_errors: bool) -> bool:
+                      detect: bool) -> bool:
+        """Pump one worker's control pipe.  In ``detect`` mode (the live
+        driving loop) a dead pipe or an ``("error", tb)`` message becomes
+        a recorded failure for the restart policy; in teardown mode
+        (``detect=False``, from ``stop_execution``) the worker is simply
+        marked finished."""
         data = execution.backend_data
+        supervisor = data.get("supervisor")
         progress = False
         try:
             while h.conn.poll(0):
                 msg = h.conn.recv()
-                progress = True
                 op = msg[0]
+                if op == "hb":
+                    if supervisor is not None:
+                        supervisor.heartbeat(h.key)
+                    continue
+                progress = True
                 if op == "results":
                     by_name = data["by_name"]
                     for name, items in msg[1]:
@@ -428,6 +648,9 @@ class MultiprocessBackend(ExecutionBackend):
                         if sink is not None:
                             sink.extend(items)
                 elif op == "ack":
+                    if self._chaos_intercept_ack(execution, h.key,
+                                                 msg[1], msg[2]):
+                        continue
                     execution.ssctx.worker_ack(h.key, msg[1], msg[2])
                 elif op == "done":
                     for name, stats in msg[1]:
@@ -439,22 +662,43 @@ class MultiprocessBackend(ExecutionBackend):
                     data["done"].add(h.key)
                     execution.ssctx.worker_gone(h.key)
                 elif op == "error":
+                    # the child re-raises after shipping the traceback, so
+                    # its exit is imminent; record the failure here (with
+                    # the full traceback) instead of crashing the driver
                     h.alive = False
-                    self.stop_execution(execution)
-                    raise RuntimeError(
-                        f"worker {h.key} failed:\n{msg[1]}")
+                    if detect:
+                        if supervisor is not None:
+                            supervisor.mark_reported(h.key)
+                        data["failures"].append(WorkerFailure(
+                            FAILURE_ERROR, key=h.key, pid=h.proc.pid,
+                            detail=f"worker {h.key} raised:\n{msg[1]}"))
+                    execution.ssctx.worker_gone(h.key, crashed=True)
         except (EOFError, OSError):
+            # dead pipe: never raise — mark the handle dead and leave
+            # classification to the supervisor's exitcode check (detect
+            # mode) or mark the worker finished (teardown mode)
             h.alive = False
-            if not h.done:
-                if raise_errors and not data.get("stopped"):
-                    self.stop_execution(execution)
-                    raise RuntimeError(
-                        f"worker {h.key} (pid {h.proc.pid}) exited "
-                        f"unexpectedly (exitcode {h.proc.exitcode})")
+            if not h.done and not detect:
                 h.done = True
                 data["done"].add(h.key)
-            execution.ssctx.worker_gone(h.key)
+            execution.ssctx.worker_gone(h.key, crashed=not h.done)
         return progress
+
+    def _chaos_intercept_ack(self, execution, key: Location,
+                             snapshot_id: int, entries) -> bool:
+        """Chaos seam for barrier acks: drop one ack on the floor (the
+        snapshot must then abort via its deadline) or hold it for a
+        while.  One-shot per injected fault; returns True if the ack was
+        intercepted."""
+        chaos = execution.backend_data.get("chaos_acks")
+        if not chaos or key not in chaos:
+            return False
+        action, delay_s = chaos.pop(key)
+        if action == "drop":
+            return True
+        execution.backend_data.setdefault("delayed_acks", []).append(
+            (_time.monotonic() + delay_s, key, snapshot_id, entries))
+        return True
 
     def execution_done(self, execution) -> bool:
         data = execution.backend_data
@@ -463,24 +707,94 @@ class MultiprocessBackend(ExecutionBackend):
         return len(data["done"]) >= len(data["workers"])
 
     # -- snapshot fan-out ----------------------------------------------------
-    def broadcast(self, execution, message) -> set:
-        """Send ``message`` to every live, not-yet-done worker; returns the
-        set of worker keys the message reached."""
-        reached = set()
+    def broadcast(self, execution, message) -> Tuple[set, set]:
+        """Send ``message`` to every live, not-yet-done worker.  Returns
+        ``(reached, failed)``: keys the message reached, and keys of
+        workers still owing work (not done) that could NOT be reached —
+        dead pipe mid-send, or already marked dead.  A barrier broadcast
+        with a non-empty ``failed`` set can never form a consistent
+        snapshot (the unreached worker will never align) and must be
+        aborted by the caller."""
+        reached: set = set()
+        failed: set = set()
         data = execution.backend_data
         if not data.get("started") or data.get("stopped"):
-            return reached
+            return reached, failed
         for h in data["workers"].values():
-            if h.alive and not h.done:
-                try:
-                    h.conn.send(message)
-                    reached.add(h.key)
-                except (BrokenPipeError, OSError):
-                    h.alive = False
-        return reached
+            if h.done:
+                continue
+            if not h.alive:
+                failed.add(h.key)
+                continue
+            try:
+                h.conn.send(message)
+                reached.add(h.key)
+            except (BrokenPipeError, OSError):
+                h.alive = False
+                failed.add(h.key)
+        return reached, failed
 
     def notify_snapshot_committed(self, execution, snapshot_id: int) -> None:
+        # phase-2 fan-out: a worker that died between commit and this
+        # notification is already handled by the failure path; nothing
+        # to do about it here
         self.broadcast(execution, ("committed", snapshot_id))
+
+    # -- chaos ---------------------------------------------------------------
+    def inject_fault(self, execution, kind: str, worker_index: int = 0,
+                     **params) -> bool:
+        """Translate an abstract chaos fault into the realest failure this
+        substrate can produce:
+
+        * ``kill`` — SIGKILL the worker process (crash detection path);
+        * ``stall`` — SIGSTOP it (hung detection path; ``duration_s``
+          resumes it with SIGCONT, else it stays stopped until the
+          supervisor SIGKILLs it or teardown resumes it);
+        * ``raise`` — command the child to plant an exception inside a
+          processor slice (error-exit path; ``tasklet``/``message``);
+        * ``drop_ack`` / ``delay_ack`` — intercept the worker's next
+          barrier ack in the coordinator (barrier timeout / late-ack
+          paths; ``delay_s`` for the hold).
+        """
+        data = execution.backend_data
+        if not data.get("started") or data.get("stopped"):
+            return False
+        live = [h for h in data["workers"].values()
+                if h.alive and not h.done and h.proc.exitcode is None]
+        if not live:
+            return False
+        h = sorted(live, key=lambda x: x.key)[worker_index % len(live)]
+        if kind == "kill":
+            try:
+                os.kill(h.proc.pid, signal.SIGKILL)
+            except (ProcessLookupError, OSError):  # pragma: no cover
+                return False
+            return True
+        if kind == "stall":
+            try:
+                os.kill(h.proc.pid, signal.SIGSTOP)
+            except (ProcessLookupError, OSError):  # pragma: no cover
+                return False
+            duration = params.get("duration_s")
+            resume_at = (None if duration is None
+                         else _time.monotonic() + duration)
+            data.setdefault("stalled", {})[h.proc.pid] = resume_at
+            return True
+        if kind == "raise":
+            try:
+                h.conn.send(("chaos_raise", params.get("tasklet"),
+                             params.get("message", "chaos[raise] injected")))
+            except (BrokenPipeError, OSError):  # pragma: no cover
+                return False
+            return True
+        if kind == "drop_ack":
+            data.setdefault("chaos_acks", {})[h.key] = ("drop", None)
+            return True
+        if kind == "delay_ack":
+            data.setdefault("chaos_acks", {})[h.key] = (
+                "delay", params.get("delay_s", 0.5))
+            return True
+        return False
 
     # -- telemetry -----------------------------------------------------------
     def source_start(self, execution) -> Optional[float]:

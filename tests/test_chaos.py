@@ -1,0 +1,252 @@
+"""Seeded chaos layer: schedule determinism, controller gating, chaos
+equivalence across substrates, and the shm-ring leak guards.
+
+The equivalence tests are the satellite acceptance: paced Q5 under a
+seeded mid-run worker kill must produce results and late-drop accounting
+identical to a clean run, on both substrates (``inproc`` expresses the
+kill as an injected exception, ``mp`` as a real SIGKILL), across >= 3
+seeds — the schedule, injection point and victim all derived from the
+seed alone.
+"""
+
+import gc
+import os
+import time
+
+import pytest
+
+from repro.core import (CollectorSink, JetCluster, JobConfig,
+                        PacedGeneratorSource, GUARANTEE_EXACTLY_ONCE)
+from repro.core.engine import JOB_COMPLETED, JOB_FAILED, JOB_RUNNING
+from repro.core.shm_ring import (RING_NAME_PREFIX, ShmRing,
+                                 sweep_leaked_rings)
+from repro.nexmark import NexmarkGenerator, queries
+from repro.runtime.chaos import (ALL_KINDS, KIND_KILL, ChaosController,
+                                 ChaosSchedule, Fault)
+
+RATE = 60_000
+TOTAL = 48_000
+SEEDS = (1, 2, 3)
+
+
+# ---------------------------------------------------------------- schedule --
+
+def _plan(s):
+    return [(f.kind, f.at_result, f.worker_index) for f in s.faults]
+
+
+def test_schedule_from_seed_is_deterministic():
+    a = ChaosSchedule.from_seed(42, n_faults=5, total_results=1000)
+    b = ChaosSchedule.from_seed(42, n_faults=5, total_results=1000)
+    assert _plan(a) == _plan(b) and len(a.faults) == 5
+    c = ChaosSchedule.from_seed(43, n_faults=5, total_results=1000)
+    assert _plan(a) != _plan(c)
+
+
+def test_schedule_covers_every_kind():
+    s = ChaosSchedule.from_seed(7, n_faults=len(ALL_KINDS),
+                                total_results=5000)
+    assert {f.kind for f in s.faults} == set(ALL_KINDS)
+    # injection points stay inside the quiet-tail window, ordered
+    ats = [f.at_result for f in s.faults]
+    assert ats == sorted(ats)
+    assert all(1 <= at <= 3500 for at in ats)
+
+
+class _SpyBackend:
+    def __init__(self, supported=True):
+        self.supported = supported
+        self.calls = []
+
+    def inject_fault(self, execution, kind, worker_index=0, **params):
+        self.calls.append((kind, worker_index, params))
+        return self.supported
+
+
+class _FakeJob:
+    def __init__(self):
+        self.status = JOB_RUNNING
+        self.execution = object()
+        self.snapshots_taken = 1
+
+
+def test_controller_fires_at_logical_trigger():
+    backend = _SpyBackend()
+    cluster = type("C", (), {"backend": backend})()
+    job = _FakeJob()
+    sink = []
+    ctl = ChaosController(cluster, job, sink,
+                          ChaosSchedule([Fault(KIND_KILL, at_result=5)]))
+    assert not ctl.tick()                   # sink below the trigger
+    sink.extend(range(5))
+    job.snapshots_taken = 0
+    assert not ctl.tick()                   # no committed snapshot yet
+    job.snapshots_taken = 1
+    job.status = JOB_COMPLETED
+    assert not ctl.tick()                   # only fires while RUNNING
+    job.status = JOB_RUNNING
+    assert ctl.tick()
+    f = ctl.schedule.faults[0]
+    assert f.fired and f.fired_at_result == 5 and f.fired_at is not None
+    assert backend.calls == [(KIND_KILL, f.worker_index, {})]
+    assert ctl.schedule.done and not ctl.tick()
+
+
+def test_controller_ack_fault_fires_on_inflight_barrier():
+    """drop/delay ack faults must not wait for a committed snapshot (the
+    commit is what they sabotage) — a barrier in flight is enough."""
+    from repro.runtime.chaos import KIND_DROP_ACK
+    backend = _SpyBackend()
+    cluster = type("C", (), {"backend": backend})()
+    job = _FakeJob()
+    job.snapshots_taken = 0
+    job.execution = type("E", (), {"ssctx": None})()
+    sink = list(range(10))
+    ctl = ChaosController(cluster, job, sink,
+                          ChaosSchedule([Fault(KIND_DROP_ACK, at_result=1)]))
+    assert not ctl.tick()                   # no barrier requested yet
+    job.execution.ssctx = type("S", (), {"requested_id": 1})()
+    assert ctl.tick()
+    assert ctl.schedule.faults[0].fired
+
+
+def test_controller_records_unsupported_kind_as_skipped():
+    backend = _SpyBackend(supported=False)
+    cluster = type("C", (), {"backend": backend})()
+    sink = list(range(10))
+    ctl = ChaosController(cluster, _FakeJob(), sink,
+                          ChaosSchedule([Fault("stall", at_result=1)]))
+    assert not ctl.tick()
+    f = ctl.schedule.faults[0]
+    assert f.skipped and not f.fired and ctl.schedule.done
+
+
+# ------------------------------------------------------- chaos equivalence --
+
+def _chaos_q5(backend, seed=None):
+    """Paced exactly-once Q5; with a seed, one seeded mid-run kill is
+    injected through the chaos controller.  Returns (deduped results,
+    late-drop tally, fired fault count)."""
+    cluster = JetCluster(n_nodes=2, cooperative_threads=2, backend=backend)
+    out = []
+    p = queries.q5(
+        lambda: PacedGeneratorSource(NexmarkGenerator(rate=RATE, n_keys=40),
+                                     rate=RATE, max_events=TOTAL),
+        lambda: CollectorSink(out), window_ms=100, slide_ms=20)
+    job = cluster.submit(p.to_dag(), JobConfig(
+        processing_guarantee=GUARANTEE_EXACTLY_ONCE,
+        snapshot_interval_s=0.1))
+    ctl = None
+    if seed is not None:
+        # one kill, early in the run (results lag event progress on mp —
+        # a late logical trigger could find every worker already DONE)
+        schedule = ChaosSchedule.from_seed(seed, n_faults=1,
+                                           total_results=1000,
+                                           kinds=(KIND_KILL,),
+                                           lo_frac=0.05, hi_frac=0.3)
+        ctl = ChaosController(cluster, job, out, schedule)
+    deadline = time.monotonic() + 120.0
+    try:
+        for _ in range(4_000_000):
+            if job.status in (JOB_COMPLETED, JOB_FAILED):
+                break
+            if time.monotonic() > deadline:
+                raise TimeoutError(f"job stuck in status {job.status}")
+            cluster.step()
+            if ctl is not None:
+                ctl.tick()
+        assert job.status == JOB_COMPLETED
+        drops = sum(getattr(t.processor, "late_dropped", 0)
+                    for t in job.execution.tasklets)
+        if ctl is not None:
+            assert len(ctl.schedule.fired()) == 1, \
+                f"seeded fault did not fire: {ctl.schedule.faults}"
+            assert job.auto_restarts >= 1
+    finally:
+        cluster.shutdown()
+    results = sorted(set((ev.ts, ev.key, ev.value.window_end, ev.value.value)
+                         for ev in out))
+    return results, drops
+
+
+@pytest.fixture(scope="module")
+def clean_inproc():
+    return _chaos_q5("inproc")
+
+
+@pytest.fixture(scope="module")
+def clean_mp():
+    return _chaos_q5("mp")
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_seeded_kill_equivalence_inproc(clean_inproc, seed):
+    results, drops = _chaos_q5("inproc", seed=seed)
+    clean_results, clean_drops = clean_inproc
+    assert results == clean_results and len(results) > 0
+    assert drops == clean_drops == 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", SEEDS)
+def test_seeded_kill_equivalence_mp(clean_mp, seed):
+    results, drops = _chaos_q5("mp", seed=seed)
+    clean_results, clean_drops = clean_mp
+    assert results == clean_results and len(results) > 0
+    assert drops == clean_drops == 0
+
+
+@pytest.mark.slow
+def test_substrates_agree_under_chaos(clean_inproc, clean_mp):
+    """The chaos-surviving result set is ALSO identical across
+    substrates (same exactly-once contract, different failure physics)."""
+    assert clean_inproc[0] == clean_mp[0]
+
+
+# ------------------------------------------------------------- ring leaks --
+
+def _shm_names():
+    try:
+        return {fn for fn in os.listdir("/dev/shm")
+                if fn.startswith(RING_NAME_PREFIX)}
+    except OSError:  # pragma: no cover - non-Linux
+        return set()
+
+
+def test_ring_finalizer_unlinks_on_gc():
+    ring = ShmRing(capacity_bytes=4096)
+    name = ring.name
+    assert name in _shm_names()
+    del ring
+    gc.collect()
+    assert name not in _shm_names()
+
+
+def test_ring_unlink_is_idempotent_with_finalizer():
+    ring = ShmRing(capacity_bytes=4096)
+    name = ring.name
+    ring.unlink()
+    assert name not in _shm_names()
+    del ring
+    gc.collect()                # finalizer was detached: no double unlink
+
+
+def test_sweep_removes_leaked_rings():
+    """A SIGKILL'd coordinator gets no finalizers: simulate the leak by
+    detaching the guard, then assert the prefix sweep reclaims it."""
+    ring = ShmRing(capacity_bytes=4096)
+    name = ring.name
+    ring._finalizer.detach()
+    del ring
+    gc.collect()
+    assert name in _shm_names()     # leaked, as a crashed run would
+    swept = sweep_leaked_rings()
+    assert name in swept
+    assert name not in _shm_names()
+
+
+@pytest.mark.slow
+def test_mp_teardown_leaves_no_rings(clean_mp):
+    """Satellite acceptance: after mp executions tear down (including the
+    module's chaos/clean runs), no ring segments remain in /dev/shm."""
+    assert _shm_names() == set()

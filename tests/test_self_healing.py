@@ -1,0 +1,410 @@
+"""Self-healing execution: failures the engine did NOT schedule.
+
+``kill_node`` (tests/test_mp_backend.py) is a cooperative failure — an
+API call the test makes.  This file covers the *detected* path: a worker
+SIGKILL'd / hung / raising mid-run with no API call must be classified
+by the supervisor, routed through the bounded RestartPolicy, healed from
+the last committed snapshot, and the exactly-once results must equal an
+unfailed run.  Barrier robustness rides along: a snapshot whose acks are
+lost (dead worker, dropped or late ack, broken pipe mid-broadcast) is
+ABORTED — never stalls the job, never commits partial state.
+"""
+
+import multiprocessing as mp
+import signal
+import time
+from types import SimpleNamespace
+
+import pytest
+
+from repro.core import (CollectorSink, JetCluster, JobConfig,
+                        PacedGeneratorSource, GUARANTEE_EXACTLY_ONCE,
+                        GUARANTEE_NONE)
+from repro.core.backend import (FAILURE_CRASHED, FAILURE_ERROR,
+                                FAILURE_HUNG)
+from repro.core.engine import (JOB_COMPLETED, JOB_FAILED, JobFailedError,
+                               RestartPolicy)
+from repro.nexmark import NexmarkGenerator, queries
+from repro.runtime.supervisor import WorkerSupervisor
+from repro.runtime.worker_proc import (MpSnapshotContext,
+                                       MultiprocessBackend,
+                                       _kill_handle_hard)
+
+RATE = 60_000
+# 0.8s of paced event time: wide enough that a fault injected once the
+# first snapshot committed (~0.15s in) always finds live mid-run workers,
+# and a 0.4s barrier-ack deadline expires while the job is still running
+TOTAL = 48_000
+
+
+def _dedup(out):
+    return sorted(set((ev.ts, ev.key, ev.value.window_end, ev.value.value)
+                      for ev in out))
+
+
+def _run_q5_fault(backend, fault=None, fault_at=200, guarantee="none",
+                  n_nodes=2, threads=2, restart_policy=None,
+                  barrier_timeout_s=5.0, expect_completed=True,
+                  fault_params=None, gate="commit",
+                  snapshot_interval_s=0.1):
+    """Paced Q5; inject one fault via the backend's chaos seam once the
+    sink holds ``fault_at`` results and a snapshot has committed
+    (``gate="commit"``) or merely been requested (``gate="barrier"`` —
+    for ack faults, which must land while barriers are still in flight
+    and must not depend on a commit having beaten the ack deadline).
+    Returns (deduped results, job, late-drop tally)."""
+    cluster = JetCluster(n_nodes=n_nodes, cooperative_threads=threads,
+                         backend=backend)
+    out = []
+    p = queries.q5(
+        lambda: PacedGeneratorSource(NexmarkGenerator(rate=RATE, n_keys=40),
+                                     rate=RATE, max_events=TOTAL),
+        lambda: CollectorSink(out), window_ms=100, slide_ms=20)
+    cfg = JobConfig(processing_guarantee=guarantee,
+                    snapshot_interval_s=snapshot_interval_s,
+                    restart_policy=restart_policy,
+                    barrier_timeout_s=barrier_timeout_s)
+    job = cluster.submit(p.to_dag(), cfg)
+    injected = False
+    deadline = time.monotonic() + 120.0
+    try:
+        for _ in range(4_000_000):
+            if job.status in (JOB_COMPLETED, JOB_FAILED):
+                break
+            if time.monotonic() > deadline:
+                ssctx = (job.execution.ssctx
+                         if job.execution is not None else None)
+                workers = {}
+                if job.execution is not None:
+                    workers = {
+                        h.key: (h.alive, h.done, h.proc.exitcode)
+                        for h in job.execution.backend_data.get(
+                            "workers", {}).values()}
+                raise TimeoutError(
+                    f"job stuck in status {job.status}: results={len(out)} "
+                    f"snapshots={job.snapshots_taken} "
+                    f"aborted={job.snapshots_aborted} "
+                    f"auto_restarts={job.auto_restarts} "
+                    f"failures={job.failures} "
+                    f"ssctx=({getattr(ssctx, 'requested_id', None)},"
+                    f"{getattr(ssctx, 'completed_id', None)}) "
+                    f"workers={workers}")
+            cluster.step()
+            if (fault is not None and not injected
+                    and job.execution is not None
+                    and len(out) >= fault_at
+                    and (job.snapshots_taken > 0
+                         or (gate == "barrier"
+                             and job.execution.ssctx is not None
+                             and job.execution.ssctx.requested_id >= 1)
+                         or guarantee == GUARANTEE_NONE)):
+                injected = cluster.backend.inject_fault(
+                    job.execution, fault, 0, **(fault_params or {}))
+        if fault is not None:
+            assert injected, "fault was never injected — test setup broken"
+        if expect_completed:
+            assert job.status == JOB_COMPLETED
+        drops = 0
+        if job.execution is not None:
+            drops = sum(getattr(t.processor, "late_dropped", 0)
+                        for t in job.execution.tasklets)
+    finally:
+        cluster.shutdown()
+    return _dedup(out), job, drops
+
+
+@pytest.fixture(scope="module")
+def clean_q5():
+    """One unfailed exactly-once run all healing tests compare against."""
+    results, job, drops = _run_q5_fault("mp",
+                                        guarantee=GUARANTEE_EXACTLY_ONCE)
+    assert len(results) > 0 and drops == 0
+    return results
+
+
+# --------------------------------------------------------------- detection --
+
+@pytest.mark.slow
+def test_mp_sigkill_detected_and_healed(clean_q5):
+    """Acceptance: a worker SIGKILL'd mid-run (no API call) is detected,
+    the job auto-restores from the committed snapshot, and the deduped
+    sink output equals the unfailed run exactly."""
+    results, job, drops = _run_q5_fault(
+        "mp", fault="kill", guarantee=GUARANTEE_EXACTLY_ONCE)
+    assert results == clean_q5
+    assert drops == 0
+    assert job.auto_restarts >= 1
+    kinds = [f.kind for f in job.failures]
+    assert FAILURE_CRASHED in kinds
+    crashed = next(f for f in job.failures if f.kind == FAILURE_CRASHED)
+    assert crashed.exitcode is not None and crashed.exitcode < 0
+
+
+@pytest.mark.slow
+def test_mp_error_exit_detected_with_traceback(clean_q5):
+    """A processor raising inside a worker ships its traceback to the
+    coordinator, is classified as an error exit, and heals."""
+    results, job, _ = _run_q5_fault(
+        "mp", fault="raise", guarantee=GUARANTEE_EXACTLY_ONCE,
+        fault_params={"message": "chaos-injected failure"})
+    assert results == clean_q5
+    assert job.auto_restarts >= 1
+    errors = [f for f in job.failures if f.kind == FAILURE_ERROR]
+    assert errors and "chaos-injected failure" in errors[0].detail
+
+
+@pytest.mark.slow
+def test_mp_hung_worker_detected_and_healed(clean_q5):
+    """A SIGSTOPped worker stops heartbeating; the supervisor SIGKILLs it
+    after the deadline and the job heals."""
+    backend = MultiprocessBackend(heartbeat_timeout_s=1.0)
+    results, job, _ = _run_q5_fault(
+        backend, fault="stall", guarantee=GUARANTEE_EXACTLY_ONCE)
+    assert results == clean_q5
+    assert job.auto_restarts >= 1
+    assert FAILURE_HUNG in [f.kind for f in job.failures]
+
+
+def test_inproc_injected_exception_healed():
+    """The in-process substrate's uncooperative failure (an exception out
+    of a cooperative slice) is detected and healed identically."""
+    clean, _, _ = _run_q5_fault("inproc", guarantee=GUARANTEE_EXACTLY_ONCE)
+    results, job, drops = _run_q5_fault(
+        "inproc", fault="raise", guarantee=GUARANTEE_EXACTLY_ONCE)
+    assert results == clean and len(clean) > 0
+    assert drops == 0
+    assert job.auto_restarts >= 1
+    assert FAILURE_ERROR in [f.kind for f in job.failures]
+
+
+# ------------------------------------------------------------ restart policy --
+
+def test_restart_budget_exhausted_is_terminal():
+    """With a zero restart budget one detected failure is terminal:
+    status FAILED, no healing loop, run_until_complete raises."""
+    _, job, _ = _run_q5_fault(
+        "inproc", fault="kill", guarantee=GUARANTEE_EXACTLY_ONCE,
+        restart_policy=RestartPolicy(max_restarts=0),
+        expect_completed=False)
+    assert job.status == JOB_FAILED
+    assert job.auto_restarts == 0
+    assert job.failures
+    with pytest.raises(JobFailedError, match="FAILED after 0 automatic"):
+        raise JobFailedError(job)
+
+
+def test_no_guarantee_detected_failure_fails_fast():
+    """Without a snapshot guarantee there is nothing to restore from — a
+    detected failure fails the job instead of replaying into sinks that
+    already saw the stream."""
+    _, job, _ = _run_q5_fault(
+        "inproc", fault="kill", guarantee=GUARANTEE_NONE,
+        expect_completed=False)
+    assert job.status == JOB_FAILED
+    assert job.auto_restarts == 0
+
+
+def test_restart_policy_backoff_schedule():
+    p = RestartPolicy(max_restarts=5, backoff_base_s=0.1, backoff_max_s=0.5)
+    assert p.delay_for(1) == pytest.approx(0.1)
+    assert p.delay_for(2) == pytest.approx(0.2)
+    assert p.delay_for(3) == pytest.approx(0.4)
+    assert p.delay_for(4) == pytest.approx(0.5)   # capped
+    assert p.delay_for(10) == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------- barrier aborts --
+
+class _FakeBackend:
+    """MpSnapshotContext collaborator double: scripted broadcast."""
+
+    def __init__(self, reached=(), failed=()):
+        self.reached = set(reached)
+        self.failed = set(failed)
+        self.sent = []
+
+    def broadcast(self, execution, message):
+        self.sent.append(message)
+        return set(self.reached), set(self.failed)
+
+
+def _mp_ctx(backend, timeout=None):
+    ctx = MpSnapshotContext(GUARANTEE_EXACTLY_ONCE, store_writer=None)
+    ctx.backend = backend
+    ctx.execution = None
+    ctx.ack_timeout_s = timeout
+    return ctx
+
+
+def test_broadcast_broken_pipe_aborts_inflight():
+    """Regression (satellite): a barrier broadcast that cannot reach a
+    not-yet-done worker must abort the snapshot, not wait for an ack that
+    will never come."""
+    committed = []
+    ctx = _mp_ctx(_FakeBackend(reached={(0, 0)}, failed={(0, 1)}))
+    ctx.on_complete = committed.append
+    ctx.begin(7)
+    assert ctx.aborted_count == 1
+    assert ctx.completed_id == 7          # freed, not stalled
+    assert committed == []                # but never committed
+    # a late ack for the aborted snapshot is ignored
+    ctx.worker_ack((0, 0), 7, [(7, "v", "k", 1, 0, 0)])
+    assert committed == [] and ctx._entries == []
+
+
+def test_worker_death_mid_barrier_aborts_then_next_commits():
+    backend = _FakeBackend(reached={(0, 0), (0, 1)})
+    committed = []
+    ctx = _mp_ctx(backend)
+    ctx.on_complete = committed.append
+    ctx.begin(1)
+    ctx.worker_ack((0, 0), 1, [(1, "v", "k", 1, 0, 0)])
+    ctx.worker_gone((0, 1), crashed=True)   # died holding its barrier
+    assert ctx.aborted_count == 1 and committed == []
+    # the next snapshot is unaffected and commits normally
+    ctx.begin(2)
+    ctx.worker_ack((0, 0), 2, [])
+    ctx.worker_ack((0, 1), 2, [])
+    assert committed == [2] and ctx.aborted_count == 1
+
+
+def test_done_worker_is_barrier_exempt():
+    ctx = _mp_ctx(_FakeBackend(reached={(0, 0), (0, 1)}))
+    committed = []
+    ctx.on_complete = committed.append
+    ctx.begin(1)
+    ctx.worker_ack((0, 0), 1, [])
+    ctx.worker_gone((0, 1), crashed=False)  # clean DONE: no state owed
+    assert committed == [1] and ctx.aborted_count == 0
+
+
+def test_barrier_ack_deadline_aborts():
+    ctx = _mp_ctx(_FakeBackend(reached={(0, 0)}), timeout=0.01)
+    committed = []
+    ctx.on_complete = committed.append
+    ctx.begin(3)
+    assert not ctx.check_timeout()          # not yet due
+    time.sleep(0.03)
+    assert ctx.check_timeout()
+    assert ctx.aborted_count == 1 and committed == []
+    assert not ctx.check_timeout()          # idempotent once aborted
+
+
+@pytest.mark.slow
+def test_mp_dropped_ack_aborts_snapshot_and_completes(clean_q5):
+    """A dropped barrier ack only costs that snapshot: it aborts at the
+    deadline, later snapshots commit, the job completes exactly-once."""
+    # inject right after the first commit: late in the run every worker
+    # may already be DONE (barrier-exempt), leaving no ack to intercept
+    results, job, _ = _run_q5_fault(
+        "mp", fault="drop_ack", guarantee=GUARANTEE_EXACTLY_ONCE,
+        barrier_timeout_s=0.4, fault_at=0, gate="barrier")
+    assert results == clean_q5
+    assert job.snapshots_aborted >= 1
+    assert job.auto_restarts == 0           # nobody died — no restart
+
+
+@pytest.mark.slow
+def test_mp_rapid_aborts_never_wedge_alignment(clean_q5):
+    """Regression: when the coordinator aborts barrier n on its deadline
+    and begins n+1 before a descheduled worker drained its command pipe,
+    that worker used to begin(n+1) straight over begin(n) — its sources
+    never emitted barrier n, siblings that DID forward n left downstream
+    queues parked on mixed generations, and the job wedged forever with
+    heartbeats still flowing.  Children now serialize barrier
+    generations (every id emitted, in order), so a run whose tiny
+    deadline and interval force many overlapping abort/begin pairs must
+    still complete, exactly-once."""
+    results, job, drops = _run_q5_fault(
+        "mp", guarantee=GUARANTEE_EXACTLY_ONCE,
+        barrier_timeout_s=0.05, snapshot_interval_s=0.02)
+    assert results == clean_q5
+    assert drops == 0
+
+
+@pytest.mark.slow
+def test_mp_late_ack_after_abort_is_ignored(clean_q5):
+    """An ack delayed past the deadline arrives for an already-aborted
+    snapshot and must be discarded, not half-commit stale state."""
+    results, job, _ = _run_q5_fault(
+        "mp", fault="delay_ack", guarantee=GUARANTEE_EXACTLY_ONCE,
+        barrier_timeout_s=0.3, fault_at=0, gate="barrier",
+        fault_params={"delay_s": 0.8})
+    assert results == clean_q5
+    assert job.snapshots_aborted >= 1
+
+
+# -------------------------------------------------------------- supervisor --
+
+def _handle(key, exitcode=None, pid=4_000_000, done=False):
+    return SimpleNamespace(key=key, done=done,
+                           proc=SimpleNamespace(exitcode=exitcode, pid=pid))
+
+
+def test_supervisor_classifies_exitcodes():
+    sup = WorkerSupervisor(heartbeat_timeout_s=5.0)
+    handles = [_handle((0, 0), exitcode=-9),
+               _handle((0, 1), exitcode=3),
+               _handle((1, 0), exitcode=-9, done=True),   # exempt: DONE
+               _handle((1, 1), exitcode=None)]            # alive, fine
+    for h in handles:
+        sup.worker_started(h.key, now=0.0)
+    fails = sup.check(handles, now=1.0)
+    assert {(f.kind, f.key) for f in fails} == {
+        (FAILURE_CRASHED, (0, 0)), (FAILURE_ERROR, (0, 1))}
+    # each failure reports exactly once
+    assert sup.check(handles, now=2.0) == []
+
+
+def test_supervisor_mark_reported_suppresses():
+    sup = WorkerSupervisor()
+    h = _handle((0, 0), exitcode=1)
+    sup.worker_started(h.key, now=0.0)
+    sup.mark_reported(h.key)    # drain loop already saw ("error", tb)
+    assert sup.check([h], now=1.0) == []
+
+
+def test_supervisor_kills_hung_worker():
+    """A live process with a stale heartbeat is classified HUNG and
+    SIGKILLed so it cannot hold rings/barriers hostage."""
+    proc = mp.get_context("fork").Process(target=time.sleep, args=(60,))
+    proc.start()
+    try:
+        sup = WorkerSupervisor(heartbeat_timeout_s=0.5)
+        h = SimpleNamespace(key=(0, 0), done=False, proc=proc)
+        sup.worker_started(h.key, now=0.0)
+        sup.heartbeat(h.key, now=1.0)
+        fails = sup.check([h], now=10.0)
+        assert [f.kind for f in fails] == [FAILURE_HUNG]
+        proc.join(timeout=5.0)
+        assert proc.exitcode == -signal.SIGKILL
+    finally:
+        if proc.is_alive():     # pragma: no cover - cleanup on failure
+            proc.kill()
+            proc.join()
+
+
+# ----------------------------------------------------- shutdown escalation --
+
+def _ignore_sigterm_and_sleep():
+    signal.signal(signal.SIGTERM, signal.SIG_IGN)
+    while True:
+        time.sleep(0.1)
+
+
+def test_stop_escalates_to_sigkill_on_stuck_worker():
+    """Satellite: shutdown can never hang on a wedged worker — after
+    terminate() fails, the backend escalates to SIGKILL."""
+    proc = mp.get_context("fork").Process(target=_ignore_sigterm_and_sleep)
+    proc.start()
+    try:
+        time.sleep(0.2)                 # let the child install its handler
+        proc.terminate()
+        proc.join(timeout=1.0)
+        assert proc.exitcode is None    # survived SIGTERM: truly stuck
+        _kill_handle_hard(proc)
+        assert proc.exitcode == -signal.SIGKILL
+    finally:
+        if proc.is_alive():     # pragma: no cover - cleanup on failure
+            proc.kill()
+            proc.join()
