@@ -1,0 +1,133 @@
+"""jetlint — AST contract checker for the Jet reproduction.
+
+Four passes enforce the engine's load-bearing conventions (see
+ROADMAP.md "Machine-checked contracts"):
+
+1. ``snapshot-missing-save`` / ``snapshot-missing-restore`` — every
+   hot-path mutation of processor state must survive the Chandy-Lamport
+   cycle or be declared ``EPHEMERAL_STATE`` / ``SNAPSHOT_STATE``;
+2. ``snapshot-aliasing`` — snapshot payloads must not alias live
+   mutable containers (the PR 6 bug shape);
+3. ``hot-path-blocking`` / ``hot-path-unbounded-growth`` — cooperative
+   hot paths never block a worker thread or grow without bound;
+4. ``block-form-impure`` / ``block-form-mismatch`` — block forms are
+   pure column expressions and ``accepts_blocks`` declarations match
+   the code.
+
+Suppression syntax (reason is mandatory)::
+
+    self.cache.append(x)  # jetlint: disable=hot-path-unbounded-growth -- bounded by drain in complete()
+
+A trailing comment covers its own line; a standalone comment line
+covers the next line.  Either form on (or directly above) a
+``def``/``class`` header covers the whole body.
+
+Usage::
+
+    python -m repro.analysis src/repro [--json] [--out report.json]
+
+Exit status is 1 when any unsuppressed finding remains, 0 otherwise.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from . import block_form, hot_path, snapshot_aliasing, snapshot_completeness
+from .model import AnalysisContext, Finding, ModuleInfo
+
+#: rule name -> one-line description (``--list-rules``)
+RULES: Dict[str, str] = {
+    "snapshot-missing-save":
+        "hot-path mutated self.* never referenced in save_to_snapshot",
+    "snapshot-missing-restore":
+        "saved self.* never referenced in restore hooks",
+    "snapshot-aliasing":
+        "snapshot payload aliases a live mutable container",
+    "hot-path-blocking":
+        "sleep/lock/IO/print reachable from a cooperative hot path",
+    "hot-path-unbounded-growth":
+        "hot-path container growth with no shrink anywhere in the class",
+    "block-form-impure":
+        "block form uses non-whitelisted ops (loops, mutation, calls)",
+    "block-form-mismatch":
+        "accepts_blocks declaration disagrees with the process path",
+    "bad-suppression":
+        "jetlint disable comment without a `-- reason` string",
+}
+
+PASSES = (snapshot_completeness.run, snapshot_aliasing.run,
+          hot_path.run, block_form.run)
+
+
+def iter_py_files(paths: Iterable[str]) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p) and p.endswith(".py"):
+            out.append(p)
+        elif os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if d not in ("__pycache__", ".git"))
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        out.append(os.path.join(root, f))
+    return out
+
+
+def _analyze_modules(modules: List[ModuleInfo]) -> List[Finding]:
+    ctx = AnalysisContext(modules)
+    findings: List[Finding] = []
+    for run_pass in PASSES:
+        findings.extend(run_pass(ctx))
+    for mod in modules:
+        for line in mod.bad_suppressions:
+            findings.append(Finding(
+                "bad-suppression", mod.path, line,
+                "jetlint suppression without a reason — write "
+                "`# jetlint: disable=<rule> -- <why this is safe>`"))
+    # match suppressions (bad-suppression itself cannot be suppressed)
+    by_path = {m.path: m for m in modules}
+    for f in findings:
+        if f.rule == "bad-suppression":
+            continue
+        mod = by_path.get(f.path)
+        if mod is None:
+            continue
+        s = mod.suppression_for(f.rule, f.line)
+        if s is not None:
+            f.suppressed = True
+            f.reason = s.reason
+            s.used = True
+    return findings
+
+
+def analyze_sources(sources: Dict[str, str],
+                    rules: Optional[Iterable[str]] = None
+                    ) -> List[Finding]:
+    """Run every pass over {path: source}.  The test-suite entry point."""
+    modules = [ModuleInfo(path, src) for path, src in sources.items()]
+    findings = _analyze_modules(modules)
+    if rules:
+        wanted = set(rules)
+        findings = [f for f in findings if f.rule in wanted]
+    return findings
+
+
+def run_paths(paths: Iterable[str],
+              rules: Optional[Iterable[str]] = None
+              ) -> Tuple[List[Finding], int, List[Tuple[str, int]]]:
+    """(findings, files_scanned, unused suppression sites)."""
+    files = iter_py_files(paths)
+    modules: List[ModuleInfo] = []
+    for path in files:
+        with open(path, "r", encoding="utf-8") as fh:
+            modules.append(ModuleInfo(path, fh.read()))
+    findings = _analyze_modules(modules)
+    if rules:
+        wanted = set(rules)
+        findings = [f for f in findings if f.rule in wanted]
+    unused = sorted((m.path, s.line) for m in modules
+                    for s in m.suppressions if not s.used)
+    return findings, len(files), unused

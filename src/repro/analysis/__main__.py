@@ -1,0 +1,72 @@
+"""CLI: ``python -m repro.analysis [paths...] [--json] [--out FILE]``.
+
+Exits 1 when any unsuppressed finding remains — the CI gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from . import RULES, run_paths
+from .report import render_console, render_json, split
+
+
+def _default_paths() -> list:
+    # prefer the repo layout (src/repro under cwd); fall back to the
+    # package's own source tree so the module runs from anywhere
+    cand = os.path.join("src", "repro")
+    if os.path.isdir(cand):
+        return [cand]
+    return [os.path.dirname(os.path.dirname(os.path.abspath(__file__)))]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jetlint: AST contract checker for the Jet repro "
+                    "(snapshot completeness/aliasing, hot-path "
+                    "non-blocking, block-form purity)")
+    ap.add_argument("paths", nargs="*", help="files or directories "
+                    "(default: src/repro)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit a JSON report instead of console lines")
+    ap.add_argument("--out", help="also write the report to this file")
+    ap.add_argument("--rules", help="comma-separated rule subset to run")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="list suppressed findings in console output")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule, desc in sorted(RULES.items()):
+            print(f"{rule:28s} {desc}")
+        return 0
+
+    rules = None
+    if args.rules:
+        rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+        unknown = [r for r in rules if r not in RULES]
+        if unknown:
+            print(f"unknown rule(s): {', '.join(unknown)}", file=sys.stderr)
+            return 2
+
+    paths = args.paths or _default_paths()
+    findings, files, unused = run_paths(paths, rules)
+    if args.as_json:
+        report = render_json(findings, files, unused)
+    else:
+        report = render_console(findings, files, unused,
+                                show_suppressed=args.show_suppressed)
+    print(report)
+    if args.out:
+        with open(args.out, "w", encoding="utf-8") as fh:
+            fh.write(render_json(findings, files, unused) + "\n")
+    active, _ = split(findings)
+    return 1 if active else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,178 @@
+"""Pass 4 — block-form purity and accepts_blocks agreement.
+
+The columnar fast path hangs off two declarations that must stay
+consistent with the code:
+
+* ``block_form(scalar_fn, block_fn)`` attaches a whole-block variant the
+  planner substitutes for the scalar function.  The block variant must
+  be a *pure column expression* — attribute/subscript reads off the
+  block (``blk.cols["kind"]``, ``blk.key``), comparisons, arithmetic,
+  and whitelisted vector ops (``np.*``, array methods like ``astype``,
+  safe builtins).  Python-level loops, mutation, or arbitrary calls
+  inside a block form defeat the point (it runs per *block*, not per
+  event, and may run on device buffers).
+
+* ``accepts_blocks`` tells the tasklet whether to hand a processor
+  whole :class:`EventBlock`\\ s or explode them into scalar events at
+  the queue boundary.  A class that declares ``accepts_blocks = True``
+  but never handles ``EventBlock`` drops data; one that handles
+  ``EventBlock`` but never declares will never receive one (dead code
+  that masks a perf regression).
+
+Rules: ``block-form-impure``, ``block-form-mismatch``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional
+
+from .model import AnalysisContext, ClassInfo, Finding, ModuleInfo, \
+    dotted_name, import_aliases
+
+SAFE_BUILTINS = frozenset({"len", "abs", "min", "max", "int", "float",
+                           "bool", "round"})
+#: ndarray / column methods a block form may call
+SAFE_METHODS = frozenset({"astype", "copy", "view", "reshape", "any", "all",
+                          "sum", "nonzero", "searchsorted", "get", "clip"})
+SAFE_MODULE_ROOTS = ("numpy", "math")
+
+PROCESS_ENTRIES = ("process", "process_block")
+
+
+def _check_block_fn(fn_node: ast.AST, mod: ModuleInfo,
+                    aliases: Dict[str, str], findings: List[Finding],
+                    where: str) -> None:
+    for node in ast.walk(fn_node):
+        if isinstance(node, (ast.For, ast.AsyncFor, ast.While)):
+            findings.append(Finding(
+                "block-form-impure", mod.path, node.lineno,
+                f"{where}: Python-level loop inside a block form — block "
+                f"forms must be whole-column expressions"))
+        elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                               ast.GeneratorExp)):
+            findings.append(Finding(
+                "block-form-impure", mod.path, node.lineno,
+                f"{where}: per-element comprehension inside a block form — "
+                f"use column ops (np.*) instead"))
+        elif isinstance(node, (ast.Assign, ast.AugAssign)):
+            tgts = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in tgts:
+                if isinstance(t, (ast.Subscript, ast.Attribute)):
+                    findings.append(Finding(
+                        "block-form-impure", mod.path, node.lineno,
+                        f"{where}: block form mutates its input "
+                        f"(`{ast.unparse(t)} = ...`); blocks are shared "
+                        f"downstream and must not be written in place"))
+        elif isinstance(node, ast.Call):
+            if _call_allowed(node, aliases):
+                continue
+            findings.append(Finding(
+                "block-form-impure", mod.path, node.lineno,
+                f"{where}: call `{ast.unparse(node.func)}` is not a "
+                f"whitelisted column op (np.*, array methods "
+                f"{sorted(SAFE_METHODS)[:4]}..., safe builtins)"))
+
+
+def _call_allowed(call: ast.Call, aliases: Dict[str, str]) -> bool:
+    fn = call.func
+    dotted = dotted_name(fn, aliases)
+    if dotted and dotted.split(".")[0] in SAFE_MODULE_ROOTS:
+        return True
+    if isinstance(fn, ast.Name):
+        return fn.id in SAFE_BUILTINS
+    if isinstance(fn, ast.Attribute):
+        return fn.attr in SAFE_METHODS
+    return False
+
+
+def _resolve_fn(expr: ast.expr, mod: ModuleInfo) -> Optional[ast.AST]:
+    if isinstance(expr, ast.Lambda):
+        return expr
+    if isinstance(expr, ast.Name):
+        return mod.functions.get(expr.id)
+    return None
+
+
+def _declares_accepts_blocks(ctx: AnalysisContext, ci: ClassInfo) -> bool:
+    """accepts_blocks declared anywhere in the chain EXCLUDING the base
+    Processor default (class attr or a self-write in any method)."""
+    for cur in ctx.mro_chain(ci):
+        if cur.name == "Processor":
+            continue
+        if "accepts_blocks" in cur.class_assigns:
+            return True
+        for m in cur.methods:
+            if "accepts_blocks" in cur.flow(m).writes:
+                return True
+    return False
+
+
+def _static_accepts_true(ctx: AnalysisContext, ci: ClassInfo) -> bool:
+    for cur in ctx.mro_chain(ci):
+        if cur.name == "Processor":
+            continue
+        expr = cur.class_assigns.get("accepts_blocks")
+        if isinstance(expr, ast.Constant):
+            return expr.value is True
+    return False
+
+
+def _handles_blocks(ctx: AnalysisContext, ci: ClassInfo) -> bool:
+    flows = ctx.reachable_flows(ci, PROCESS_ENTRIES)
+    for _name, (owner, flow) in flows.items():
+        if owner.name == "Processor":
+            continue
+        for node in ast.walk(flow.node):
+            if isinstance(node, ast.Name) and node.id == "EventBlock":
+                return True
+            if isinstance(node, ast.Attribute) and node.attr == "EventBlock":
+                return True
+    return "process_block" in {n for c in ctx.mro_chain(ci)
+                               if c.name != "Processor" for n in c.methods}
+
+
+def run(ctx: AnalysisContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in ctx.modules:
+        aliases = import_aliases(mod)
+        # (a) purity of every block_form registration in the module
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fname = node.func.id if isinstance(node.func, ast.Name) else (
+                node.func.attr if isinstance(node.func, ast.Attribute)
+                else None)
+            if fname != "block_form" or len(node.args) < 2:
+                continue
+            scalar_src = ast.unparse(node.args[0])
+            fn_node = _resolve_fn(node.args[1], mod)
+            where = f"block_form({scalar_src}, ...) at line {node.lineno}"
+            if fn_node is None:
+                findings.append(Finding(
+                    "block-form-impure", mod.path, node.lineno,
+                    f"{where}: block fn is not a lambda or same-module "
+                    f"function — the checker cannot prove it pure"))
+                continue
+            _check_block_fn(fn_node, mod, aliases, findings, where)
+
+        # (b) accepts_blocks declarations must agree with the code
+        for ci in mod.classes.values():
+            if ci.name == "Processor" or not ctx.is_processor(ci):
+                continue
+            handles = _handles_blocks(ctx, ci)
+            declares = _declares_accepts_blocks(ctx, ci)
+            if _static_accepts_true(ctx, ci) and not handles:
+                findings.append(Finding(
+                    "block-form-mismatch", mod.path, ci.node.lineno,
+                    f"{ci.name} declares accepts_blocks=True but its "
+                    f"process path never handles EventBlock — incoming "
+                    f"blocks would be treated as opaque events"))
+            elif handles and not declares:
+                findings.append(Finding(
+                    "block-form-mismatch", mod.path, ci.node.lineno,
+                    f"{ci.name} handles EventBlock in process but never "
+                    f"declares accepts_blocks — the tasklet explodes blocks "
+                    f"before they arrive, so the block path is dead code"))
+    return findings

@@ -1,0 +1,200 @@
+"""Pass 3 — hot-path non-blocking.
+
+Cooperative tasklets share one thread per core (paper §3): a single
+``time.sleep``, lock acquisition, file/socket/subprocess call or
+``print`` on the hot path stalls *every* vertex on that worker and blows
+the 99.99th-percentile budget.  This pass walks the call graph
+(interprocedural within a module) from
+
+* the hot methods of every cooperative ``Processor`` subclass
+  (``is_cooperative = False`` opts a class out — the engine gives those
+  a dedicated thread), and
+* ``call`` / ``run_iteration`` / ``step`` of every ``*Tasklet`` /
+  ``*Worker`` class,
+
+following ``self.*()`` calls (inheritance-aware) and calls to methods
+that resolve unambiguously to exactly one class in the same module.
+Known-safe calls (``time.perf_counter`` and friends) are allowlisted.
+
+It also flags unbounded-growth allocation: a hot-path ``append`` / ``add``
+/ ``extend`` / ``setdefault`` into a ``self.*`` container that no method
+of the class ever shrinks, clears, deletes from, or reassigns — state
+that can only grow has no place on a latency-bound path unless the
+bound is argued in a suppression reason.
+
+Rules: ``hot-path-blocking``, ``hot-path-unbounded-growth``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from .model import (AnalysisContext, ClassInfo, ENGINE_ATTRS, Finding,
+                    GROWTH_METHODS, ModuleInfo, MUTATOR_METHODS,
+                    SHRINK_METHODS, dotted_name, import_aliases)
+
+HOT_ENTRIES = ("process", "process_block", "on_watermark",
+               "try_process_watermark", "complete", "complete_edge",
+               "poll_async", "save_to_snapshot")
+DRIVER_ENTRIES = ("call", "run_iteration", "step")
+
+#: dotted-path prefixes that block (resolved through import aliases)
+BLOCKING_PREFIXES = (
+    "time.sleep", "subprocess.", "os.system", "os.popen", "os.wait",
+    "socket.", "select.", "requests.", "urllib.", "http.client.",
+)
+#: attribute names that block regardless of receiver
+BLOCKING_ATTRS = frozenset({"sleep", "acquire"})
+#: blocking builtins
+BLOCKING_BUILTINS = frozenset({"open", "input", "print"})
+#: known-safe dotted paths (clock reads look like time.* but never block)
+SAFE_CALLS = frozenset({
+    "time.perf_counter", "time.perf_counter_ns", "time.monotonic",
+    "time.monotonic_ns", "time.time", "time.time_ns",
+    "time.process_time",
+})
+
+
+def _blocking_reason(call: ast.Call, aliases: Dict[str, str]
+                     ) -> Optional[str]:
+    fn = call.func
+    dotted = dotted_name(fn, aliases)
+    if dotted:
+        if dotted in SAFE_CALLS:
+            return None
+        for pre in BLOCKING_PREFIXES:
+            if dotted == pre or dotted.startswith(pre):
+                return dotted
+        if dotted in ("builtins.open", "builtins.print"):
+            return dotted
+    if isinstance(fn, ast.Attribute) and fn.attr in BLOCKING_ATTRS:
+        return f".{fn.attr}()"
+    if isinstance(fn, ast.Name) and fn.id in BLOCKING_BUILTINS \
+            and fn.id not in aliases:
+        return f"{fn.id}()"
+    return None
+
+
+def _method_owners(mod: ModuleInfo) -> Dict[str, List[ClassInfo]]:
+    owners: Dict[str, List[ClassInfo]] = {}
+    for ci in mod.classes.values():
+        for m in ci.methods:
+            owners.setdefault(m, []).append(ci)
+    return owners
+
+
+def _is_cooperative(ctx: AnalysisContext, ci: ClassInfo) -> bool:
+    for cur in ctx.mro_chain(ci):
+        expr = cur.class_assigns.get("is_cooperative")
+        if isinstance(expr, ast.Constant):
+            return bool(expr.value)
+    return True
+
+
+def _class_shrunk_attrs(ci: ClassInfo) -> Set[str]:
+    out: Set[str] = set()
+    for m in ci.methods:
+        flow = ci.flow(m)
+        out |= flow.shrinks
+        if m not in ("__init__", "init"):
+            # a fresh-container assignment bounds growth — except the
+            # initial one in the constructor, which bounds nothing
+            out |= flow.container_resets
+        for attr, meth, _line in flow.mutator_calls:
+            if meth in SHRINK_METHODS:
+                out.add(attr)
+    return out
+
+
+def run(ctx: AnalysisContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in ctx.modules:
+        aliases = import_aliases(mod)
+        owners = _method_owners(mod)
+        roots: List[Tuple[ClassInfo, str, str]] = []   # (class, method, why)
+        for ci in mod.classes.values():
+            if ci.name == "Processor":
+                continue
+            if ctx.is_processor(ci):
+                if not _is_cooperative(ctx, ci):
+                    continue
+                for entry in HOT_ENTRIES:
+                    hit = ctx.find_method(ci, entry)
+                    if hit and hit[0].name != "Processor":
+                        roots.append((ci, entry,
+                                      f"cooperative {ci.name}.{entry}"))
+            elif ci.name.endswith("Tasklet") or ci.name.endswith("Worker"):
+                for entry in DRIVER_ENTRIES:
+                    if entry in ci.methods:
+                        roots.append((ci, entry, f"{ci.name}.{entry}"))
+
+        seen_block: Set[Tuple[str, int]] = set()
+        seen_growth: Set[Tuple[str, str]] = set()
+        for root_ci, root_entry, why in roots:
+            visited: Set[Tuple[str, str]] = set()
+            stack: List[Tuple[ClassInfo, str]] = [(root_ci, root_entry)]
+            while stack:
+                ci, mname = stack.pop()
+                hit = ctx.find_method(ci, mname)
+                if hit is None or hit[0].name == "Processor":
+                    continue
+                owner, _node = hit
+                key = (owner.name, mname)
+                if key in visited:
+                    continue
+                visited.add(key)
+                flow = owner.flow(mname)
+                if flow is None:
+                    continue
+                # 1) blocking calls anywhere in the method body
+                for call in ast.walk(flow.node):
+                    if not isinstance(call, ast.Call):
+                        continue
+                    reason = _blocking_reason(call, aliases)
+                    if reason is None:
+                        continue
+                    fkey = (owner.module.path, call.lineno)
+                    if fkey in seen_block:
+                        continue
+                    seen_block.add(fkey)
+                    findings.append(Finding(
+                        "hot-path-blocking", owner.module.path, call.lineno,
+                        f"blocking call `{reason}` reachable from {why} "
+                        f"(in {owner.name}.{mname}); cooperative hot paths "
+                        f"must never block the worker thread"))
+                # 2) unbounded growth — `self.*` in the flow refers to the
+                # owning class's instance, so shrink evidence and the
+                # report both belong to the owner, not the BFS root
+                if ctx.is_processor(owner):
+                    shrunk = _class_shrunk_attrs(owner)
+                    for attr, meth, line in flow.mutator_calls:
+                        if meth not in GROWTH_METHODS or attr in shrunk \
+                                or attr in ENGINE_ATTRS:
+                            continue
+                        gkey = (owner.name, attr)
+                        if gkey in seen_growth:
+                            continue
+                        seen_growth.add(gkey)
+                        findings.append(Finding(
+                            "hot-path-unbounded-growth", owner.module.path,
+                            line,
+                            f"{owner.name}: self.{attr} only ever grows "
+                            f"({meth} on the hot path, never shrunk or "
+                            f"reset anywhere in the class); bound it or "
+                            f"suppress with the reason it is bounded"))
+                # 3) recurse: self calls + unambiguous same-module methods
+                stack.extend((ci, c) for c in flow.self_calls)
+                for call in ast.walk(flow.node):
+                    if isinstance(call, ast.Call) \
+                            and isinstance(call.func, ast.Attribute):
+                        # container-op names (append/extend/add/...) are
+                        # almost always builtin list/dict calls, not the
+                        # same-named method of an unrelated class
+                        mname2 = call.func.attr
+                        if mname2 in MUTATOR_METHODS:
+                            continue
+                        cands = owners.get(mname2, [])
+                        if len(cands) == 1 and cands[0].name != ci.name:
+                            stack.append((cands[0], mname2))
+    return findings

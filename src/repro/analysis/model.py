@@ -1,0 +1,635 @@
+"""jetlint core model: parsed modules, the class registry, suppressions,
+findings, and the self-attribute dataflow used by every pass.
+
+The analyzer is a thin AST framework: each pass is a function
+``(AnalysisContext) -> Iterable[Finding]`` registered in
+:mod:`repro.analysis.passes`.  Everything passes share lives here:
+
+* **ModuleInfo / ClassInfo** — one parse per file, a cross-file registry
+  of classes keyed by name so inheritance (``EPHEMERAL_STATE`` unions,
+  Processor-subclass detection) resolves across modules;
+* **suppressions** — ``# jetlint: disable=<rule>[,<rule>] -- <reason>``
+  comments.  The reason is MANDATORY: a disable without one is itself a
+  finding (``bad-suppression``) and suppresses nothing.  A suppression on
+  a ``def``/``class`` header line covers the whole body; anywhere else it
+  covers its own line only;
+* **MethodFlow** — per-method self-attribute dataflow with local alias
+  tracking (``frames = self.frames; frames[k] = ...`` counts as a write
+  to ``self.frames``), the workhorse of the snapshot passes.
+
+The alias model is deliberately simple — a single forward walk, no
+fixpoint — and errs conservative: an alias carries the *set* of
+attributes it might refer to, and mutating through it marks them all.
+"""
+
+from __future__ import annotations
+
+import ast
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, Iterable, List, Optional, Set, Tuple
+
+#: comment syntax: "jetlint: disable=<rule>,<rule> -- reason text";
+#: trailing comments cover their own line, standalone comment lines
+#: cover the next line, and either form on/above a def/class header
+#: covers the whole body
+SUPPRESS_RE = re.compile(
+    r"#\s*jetlint:\s*disable=([A-Za-z0-9_,\-]+)(?:\s+--\s*(\S.*?))?\s*$")
+
+#: container-mutating method names: a call `x.append(...)` where `x`
+#: aliases `self.attr` is a write to that attribute
+MUTATOR_METHODS = frozenset({
+    "append", "appendleft", "extend", "extendleft", "add", "update",
+    "setdefault", "insert", "pop", "popitem", "popleft", "remove",
+    "discard", "clear", "sort", "reverse",
+})
+#: subset that *grows* a container (the unbounded-growth heuristic)
+GROWTH_METHODS = frozenset({
+    "append", "appendleft", "extend", "extendleft", "add", "insert",
+    "setdefault",
+})
+#: subset that shrinks/empties one (evidence of bounded growth)
+SHRINK_METHODS = frozenset({
+    "pop", "popitem", "popleft", "remove", "discard", "clear",
+})
+#: constructors whose result is a mutable container
+CONTAINER_CTORS = frozenset({
+    "dict", "list", "set", "deque", "defaultdict", "Counter",
+    "OrderedDict", "bytearray",
+})
+#: engine-owned attributes every Processor has; never processor state
+ENGINE_ATTRS = frozenset({"outbox", "ctx", "current_snapshot_id"})
+
+
+@dataclass
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+    suppressed: bool = False
+    reason: Optional[str] = None      # the suppression's reason, if any
+
+    def to_json(self) -> dict:
+        d = {"rule": self.rule, "path": self.path, "line": self.line,
+             "message": self.message, "suppressed": self.suppressed}
+        if self.reason:
+            d["reason"] = self.reason
+        return d
+
+
+@dataclass
+class Suppression:
+    rules: Tuple[str, ...]
+    reason: Optional[str]
+    line: int
+    #: inclusive line range this suppression covers
+    scope: Tuple[int, int]
+    used: bool = False
+
+
+class ClassInfo:
+    """One class definition plus the derived facts passes consume."""
+
+    def __init__(self, node: ast.ClassDef, module: "ModuleInfo"):
+        self.node = node
+        self.module = module
+        self.name = node.name
+        self.base_names: List[str] = []
+        for b in node.bases:
+            if isinstance(b, ast.Name):
+                self.base_names.append(b.id)
+            elif isinstance(b, ast.Attribute):
+                self.base_names.append(b.attr)
+        self.methods: Dict[str, ast.FunctionDef] = {}
+        #: class-level simple assignments: name -> value expression
+        self.class_assigns: Dict[str, ast.expr] = {}
+        for stmt in node.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.methods[stmt.name] = stmt
+            elif isinstance(stmt, ast.Assign):
+                for tgt in stmt.targets:
+                    if isinstance(tgt, ast.Name):
+                        self.class_assigns[tgt.id] = stmt.value
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                if isinstance(stmt.target, ast.Name):
+                    self.class_assigns[stmt.target.id] = stmt.value
+        self._flows: Dict[str, MethodFlow] = {}
+
+    def flow(self, method: str) -> Optional["MethodFlow"]:
+        """Dataflow summary of one of this class's own methods (cached)."""
+        if method not in self.methods:
+            return None
+        if method not in self._flows:
+            self._flows[method] = MethodFlow(self.methods[method])
+        return self._flows[method]
+
+
+class ModuleInfo:
+    """One parsed source file."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.tree = ast.parse(source, filename=path)
+        self.classes: Dict[str, ClassInfo] = {}
+        self.functions: Dict[str, ast.FunctionDef] = {}
+        for stmt in self.tree.body:
+            if isinstance(stmt, ast.ClassDef):
+                self.classes[stmt.name] = ClassInfo(stmt, self)
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.functions[stmt.name] = stmt
+        self.suppressions: List[Suppression] = []
+        self.bad_suppressions: List[int] = []      # lines lacking a reason
+        self._parse_suppressions()
+        #: attribute names assigned a container display/ctor ANYWHERE in
+        #: this module (`self.frames = {}`, `ks.ring = {}`): the
+        #: aliasing pass treats reads of these names as live containers
+        self.container_attr_names: Set[str] = set()
+        self._collect_container_attrs()
+
+    # -- suppressions -------------------------------------------------------
+    def _comment_lines(self) -> List[Tuple[int, str]]:
+        """(line, comment text) for every real COMMENT token — tokenizing
+        keeps jetlint directives quoted inside strings/docstrings inert."""
+        out: List[Tuple[int, str]] = []
+        try:
+            for tok in tokenize.generate_tokens(
+                    io.StringIO(self.source).readline):
+                if tok.type == tokenize.COMMENT:
+                    out.append((tok.start[0], tok.string))
+        except (tokenize.TokenError, IndentationError):
+            pass
+        return out
+
+    def _parse_suppressions(self) -> None:
+        header_scopes: List[Tuple[int, int, int]] = []   # (hdr_lo, hdr_hi, end)
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                body_start = node.body[0].lineno if node.body else node.lineno
+                header_scopes.append(
+                    (node.lineno, body_start, node.end_lineno or node.lineno))
+        src_lines = self.source.splitlines()
+        for i, text in self._comment_lines():
+            m = SUPPRESS_RE.search(text)
+            if not m:
+                continue
+            rules = tuple(r.strip() for r in m.group(1).split(",") if r.strip())
+            reason = m.group(2)
+            if not reason:
+                self.bad_suppressions.append(i)
+                continue
+            # a standalone comment line governs the NEXT line; a trailing
+            # comment governs its own line
+            standalone = (i <= len(src_lines)
+                          and src_lines[i - 1].lstrip().startswith("#"))
+            target = i + 1 if standalone else i
+            scope = (i, target)
+            for lo, body_start, end in header_scopes:
+                # a suppression governing a def/class header line
+                # (decorators through the signature) covers the whole body
+                if lo <= target < body_start:
+                    scope = (lo, end)
+                    break
+            self.suppressions.append(Suppression(rules, reason, i, scope))
+
+    def suppression_for(self, rule: str, line: int) -> Optional[Suppression]:
+        best = None
+        for s in self.suppressions:
+            if rule in s.rules and s.scope[0] <= line <= s.scope[1]:
+                # prefer the narrowest covering scope (line-level beats
+                # a whole-def suppression)
+                if best is None or (s.scope[1] - s.scope[0]
+                                    < best.scope[1] - best.scope[0]):
+                    best = s
+        return best
+
+    # -- container attribute registry ---------------------------------------
+    def _collect_container_attrs(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                targets = [node.target]
+            else:
+                continue
+            if not _is_container_expr(node.value):
+                continue
+            for tgt in targets:
+                if isinstance(tgt, ast.Attribute):
+                    self.container_attr_names.add(tgt.attr)
+
+
+def _is_container_expr(expr: ast.expr) -> bool:
+    if isinstance(expr, (ast.Dict, ast.List, ast.Set, ast.ListComp,
+                         ast.SetComp, ast.DictComp)):
+        return True
+    if isinstance(expr, ast.Call):
+        fn = expr.func
+        name = fn.id if isinstance(fn, ast.Name) else (
+            fn.attr if isinstance(fn, ast.Attribute) else None)
+        return name in CONTAINER_CTORS
+    return False
+
+
+# ---------------------------------------------------------------------------
+# Per-method self-attribute dataflow
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class MethodFlow:
+    """Reads/writes of ``self.*`` within one method, with alias tracking.
+
+    ``writes``/``reads`` are attribute names; ``self_calls`` the names of
+    methods invoked on ``self`` (directly or through a bound-method
+    alias); ``mutator_calls`` records (attr, method, line) for every
+    container-mutating call that resolved to a self attribute; ``writes``
+    includes those.  ``element_container_attrs`` holds attributes for
+    which this method shows evidence that the *elements* are mutable
+    containers (``self.x.setdefault(k, []).append(...)``,
+    ``self.x[k] = []``).
+    """
+
+    node: ast.FunctionDef = None  # type: ignore[assignment]
+    reads: Set[str] = field(default_factory=set)
+    writes: Set[str] = field(default_factory=set)
+    write_lines: Dict[str, int] = field(default_factory=dict)
+    self_calls: Set[str] = field(default_factory=set)
+    mutator_calls: List[Tuple[str, str, int]] = field(default_factory=list)
+    element_container_attrs: Set[str] = field(default_factory=set)
+    #: local name -> set of (attr, depth) this name may alias.  depth 0 =
+    #: the attribute's value itself, 1 = an element/derived view of it.
+    aliases: Dict[str, Set[Tuple[str, int]]] = field(default_factory=dict)
+    #: self attrs (re)assigned a fresh container in this method
+    container_resets: Set[str] = field(default_factory=set)
+    #: self attrs shrunk here via `del self.x[...]` / `del self.x`
+    shrinks: Set[str] = field(default_factory=set)
+
+    def __init__(self, node: ast.FunctionDef):
+        self.node = node
+        self.reads = set()
+        self.writes = set()
+        self.write_lines = {}
+        self.self_calls = set()
+        self.mutator_calls = []
+        self.element_container_attrs = set()
+        self.aliases = {}
+        self.container_resets = set()
+        self.shrinks = set()
+        self._self_name = None
+        args = node.args.posonlyargs + node.args.args
+        if args:
+            self._self_name = args[0].arg
+        self._walk_body(node.body)
+        # every mutator call through an alias is a write
+        for attr, _m, line in self.mutator_calls:
+            self.writes.add(attr)
+            self.write_lines.setdefault(attr, line)
+
+    # -- taint -------------------------------------------------------------
+    def taints(self, expr: ast.expr) -> Set[Tuple[str, int]]:
+        """(attr, depth) pairs ``expr`` may alias."""
+        if isinstance(expr, ast.Attribute):
+            base = expr.value
+            if isinstance(base, ast.Name) and base.id == self._self_name:
+                return {(expr.attr, 0)}
+            inner = self.taints(base)
+            # attribute-of-alias stays tainted by the same attrs (reading
+            # `ks.ring` off an element of self.key_state still aliases
+            # key_state's guts); depth saturates at 1
+            return {(a, max(d, 1) if not (isinstance(base, ast.Name)
+                                          and base.id == self._self_name)
+                     else d) for a, d in inner}
+        if isinstance(expr, ast.Name):
+            return set(self.aliases.get(expr.id, ()))
+        if isinstance(expr, ast.Subscript):
+            return {(a, 1) for a, _d in self.taints(expr.value)}
+        if isinstance(expr, ast.Call):
+            # `self.method(...)` / `self.factory(...)`: the callee is a
+            # callable attribute, the result is NOT derived from stored
+            # container state — do not taint
+            if isinstance(expr.func, ast.Attribute) \
+                    and isinstance(expr.func.value, ast.Name) \
+                    and expr.func.value.id == self._self_name:
+                return set()
+            # a call through a tainted callee (frames.get(k), or a bound
+            # method alias) returns something derived from the container
+            return {(a, 1) for a, _d in self.taints(expr.func)}
+        if isinstance(expr, ast.IfExp):
+            return self.taints(expr.body) | self.taints(expr.orelse)
+        if isinstance(expr, ast.BoolOp):
+            out: Set[Tuple[str, int]] = set()
+            for v in expr.values:
+                out |= self.taints(v)
+            return out
+        if isinstance(expr, (ast.Tuple, ast.List)):
+            out = set()
+            for e in expr.elts:
+                out |= self.taints(e)
+            return out
+        if isinstance(expr, ast.Starred):
+            return self.taints(expr.value)
+        return set()
+
+    def _attrs_of(self, expr: ast.expr) -> Set[str]:
+        return {a for a, _d in self.taints(expr)}
+
+    # -- statement walk ----------------------------------------------------
+    def _walk_body(self, body: List[ast.stmt]) -> None:
+        for stmt in body:
+            self._walk_stmt(stmt)
+
+    def _walk_stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, ast.Assign):
+            self._scan_expr(stmt.value)
+            for tgt in stmt.targets:
+                if isinstance(tgt, (ast.Subscript, ast.Attribute)):
+                    # calls can hide inside the target
+                    # (`self.x.setdefault(k, {})[j] = v`)
+                    self._scan_expr(tgt.value)
+                self._assign(tgt, stmt.value, stmt.lineno)
+        elif isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                self._scan_expr(stmt.value)
+                self._assign(stmt.target, stmt.value, stmt.lineno)
+        elif isinstance(stmt, ast.AugAssign):
+            self._scan_expr(stmt.value)
+            self._write_target(stmt.target, stmt.lineno)
+            self._scan_expr(stmt.target)
+        elif isinstance(stmt, ast.Delete):
+            for tgt in stmt.targets:
+                self._write_target(tgt, stmt.lineno)
+                inner = tgt.value if isinstance(
+                    tgt, (ast.Subscript, ast.Attribute)) else tgt
+                self.shrinks |= self._attrs_of(inner)
+        elif isinstance(stmt, ast.Expr):
+            self._scan_expr(stmt.value)
+        elif isinstance(stmt, (ast.If,)):
+            self._scan_expr(stmt.test)
+            self._walk_body(stmt.body)
+            self._walk_body(stmt.orelse)
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._scan_expr(stmt.iter)
+            self._bind_loop_target(stmt.target, stmt.iter)
+            self._walk_body(stmt.body)
+            self._walk_body(stmt.orelse)
+        elif isinstance(stmt, ast.While):
+            self._scan_expr(stmt.test)
+            self._walk_body(stmt.body)
+            self._walk_body(stmt.orelse)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._scan_expr(item.context_expr)
+            self._walk_body(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            self._walk_body(stmt.body)
+            for h in stmt.handlers:
+                self._walk_body(h.body)
+            self._walk_body(stmt.orelse)
+            self._walk_body(stmt.finalbody)
+        elif isinstance(stmt, ast.Return):
+            if stmt.value is not None:
+                self._scan_expr(stmt.value)
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # nested defs: scan for reads/mutator calls with the outer
+            # alias map (closures over self state)
+            self._walk_body(stmt.body)
+        elif isinstance(stmt, ast.Raise):
+            if stmt.exc is not None:
+                self._scan_expr(stmt.exc)
+        elif isinstance(stmt, ast.Assert):
+            self._scan_expr(stmt.test)
+
+    def _bind_loop_target(self, target: ast.expr, iter_expr: ast.expr) -> None:
+        """Loop variables over a tainted iterable alias its elements."""
+        taint = {(a, 1) for a, _d in self.taints(iter_expr)}
+        for name in _target_names(target):
+            self.aliases[name] = set(taint)
+
+    def _assign(self, tgt: ast.expr, value: ast.expr, line: int) -> None:
+        if isinstance(tgt, ast.Name):
+            self.aliases[tgt.id] = set(self.taints(value))
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            if isinstance(value, (ast.Tuple, ast.List)) \
+                    and len(value.elts) == len(tgt.elts):
+                for t, v in zip(tgt.elts, value.elts):
+                    self._assign(t, v, line)
+            else:
+                taint = {(a, 1) for a, _d in self.taints(value)}
+                for name in _target_names(tgt):
+                    self.aliases[name] = set(taint)
+        else:
+            self._write_target(tgt, line)
+            if isinstance(tgt, ast.Attribute) \
+                    and isinstance(tgt.value, ast.Name) \
+                    and tgt.value.id == self._self_name \
+                    and _is_container_expr(value):
+                self.container_resets.add(tgt.attr)
+            # `self.x[k] = []`: elements of x are mutable containers
+            if isinstance(tgt, ast.Subscript) and _is_container_expr(value):
+                self.element_container_attrs |= self._attrs_of(tgt.value)
+
+    def _write_target(self, tgt: ast.expr, line: int) -> None:
+        if isinstance(tgt, ast.Attribute):
+            for attr in self._attrs_of(tgt.value) or set():
+                self.writes.add(attr)
+                self.write_lines.setdefault(attr, line)
+            base = tgt.value
+            if isinstance(base, ast.Name) and base.id == self._self_name:
+                self.writes.add(tgt.attr)
+                self.write_lines.setdefault(tgt.attr, line)
+        elif isinstance(tgt, ast.Subscript):
+            for attr in self._attrs_of(tgt.value):
+                self.writes.add(attr)
+                self.write_lines.setdefault(attr, line)
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            for e in tgt.elts:
+                self._write_target(e, line)
+
+    # -- expression scan ---------------------------------------------------
+    def _scan_expr(self, expr: ast.expr) -> None:
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Attribute):
+                base = node.value
+                if isinstance(base, ast.Name) and base.id == self._self_name:
+                    self.reads.add(node.attr)
+            elif isinstance(node, ast.Call):
+                self._scan_call(node)
+
+    def _scan_call(self, call: ast.Call) -> None:
+        fn = call.func
+        if isinstance(fn, ast.Attribute):
+            base_taint = self.taints(fn.value)
+            if isinstance(fn.value, ast.Name) \
+                    and fn.value.id == self._self_name:
+                self.self_calls.add(fn.attr)
+            elif fn.attr in MUTATOR_METHODS:
+                for attr, _d in base_taint:
+                    self.mutator_calls.append((attr, fn.attr, call.lineno))
+            # `self.x.setdefault(k, []).append(...)`: elements of x are
+            # mutable containers
+            if fn.attr == "setdefault" and len(call.args) >= 2 \
+                    and _is_container_expr(call.args[1]):
+                for attr, _d in base_taint:
+                    self.element_container_attrs.add(attr)
+        elif isinstance(fn, ast.Name):
+            # a call through a bound-method alias (`flush = self._flush`)
+            for attr, depth in self.aliases.get(fn.id, ()):
+                if depth == 0:
+                    self.self_calls.add(attr)
+        # `self.x[k] = []` handled in _assign; here catch
+        # `self.x[k] = []`-style evidence inside expressions is N/A
+
+
+def _target_names(target: ast.expr) -> List[str]:
+    if isinstance(target, ast.Name):
+        return [target.id]
+    if isinstance(target, (ast.Tuple, ast.List)):
+        out: List[str] = []
+        for e in target.elts:
+            out.extend(_target_names(e))
+        return out
+    if isinstance(target, ast.Starred):
+        return _target_names(target.value)
+    return []
+
+
+# ---------------------------------------------------------------------------
+# Cross-module registry + analysis context
+# ---------------------------------------------------------------------------
+
+
+class AnalysisContext:
+    """All parsed modules plus the cross-file class registry."""
+
+    def __init__(self, modules: List[ModuleInfo]):
+        self.modules = modules
+        #: unqualified class name -> ClassInfo (last definition wins; the
+        #: analyzed tree has unique processor class names)
+        self.registry: Dict[str, ClassInfo] = {}
+        for mod in modules:
+            self.registry.update(mod.classes)
+
+    # -- inheritance helpers ------------------------------------------------
+    def mro_chain(self, ci: ClassInfo) -> List[ClassInfo]:
+        """The class plus every base resolvable by name, transitively."""
+        out: List[ClassInfo] = []
+        seen: Set[str] = set()
+        stack = [ci]
+        while stack:
+            cur = stack.pop(0)
+            if cur.name in seen:
+                continue
+            seen.add(cur.name)
+            out.append(cur)
+            for b in cur.base_names:
+                base = self.registry.get(b)
+                if base is not None:
+                    stack.append(base)
+        return out
+
+    def is_processor(self, ci: ClassInfo) -> bool:
+        """True when the class transitively subclasses ``Processor``.
+
+        Bases that do not resolve in the registry fall back to a name
+        heuristic (``...Processor`` / ``...Source`` / ``...Sink``) so a
+        subclass of an un-analyzed base is still checked.
+        """
+        for cur in self.mro_chain(ci):
+            for b in cur.base_names:
+                if b == "Processor":
+                    return True
+                if b not in self.registry and (
+                        b.endswith("Processor") or b.endswith("Source")
+                        or b.endswith("Sink")):
+                    return True
+        return False
+
+    def find_method(self, ci: ClassInfo, name: str
+                    ) -> Optional[Tuple[ClassInfo, ast.FunctionDef]]:
+        """Resolve a method along the registry-visible inheritance chain."""
+        for cur in self.mro_chain(ci):
+            if name in cur.methods:
+                return cur, cur.methods[name]
+        return None
+
+    def declared_state(self, ci: ClassInfo, decl: str) -> FrozenSet[str]:
+        """Union of ``EPHEMERAL_STATE`` / ``SNAPSHOT_STATE`` declarations
+        along the inheritance chain."""
+        out: Set[str] = set()
+        for cur in self.mro_chain(ci):
+            expr = cur.class_assigns.get(decl)
+            if expr is not None:
+                out |= _string_elements(expr)
+        return frozenset(out)
+
+    def reachable_flows(self, ci: ClassInfo, entries: Iterable[str]
+                        ) -> Dict[str, Tuple[ClassInfo, MethodFlow]]:
+        """Method name -> flow, for every method reachable from the entry
+        methods via ``self.*()`` calls (inheritance-aware)."""
+        out: Dict[str, Tuple[ClassInfo, MethodFlow]] = {}
+        stack = list(entries)
+        while stack:
+            name = stack.pop()
+            if name in out:
+                continue
+            hit = self.find_method(ci, name)
+            if hit is None:
+                continue
+            owner, node = hit
+            flow = owner.flow(node.name) if node.name in owner.methods else None
+            if flow is None:
+                continue
+            out[name] = (owner, flow)
+            stack.extend(flow.self_calls)
+        return out
+
+
+def import_aliases(mod: ModuleInfo) -> Dict[str, str]:
+    """Local name -> dotted origin for every import in the module
+    (``import time as _time`` -> ``{"_time": "time"}``; ``from time
+    import sleep`` -> ``{"sleep": "time.sleep"}``)."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = a.name
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+def dotted_name(expr: ast.expr, aliases: Dict[str, str]) -> Optional[str]:
+    """Resolve an attribute chain to a dotted path through the module's
+    import aliases; None when the root is not an imported name."""
+    parts: List[str] = []
+    cur = expr
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if not isinstance(cur, ast.Name):
+        return None
+    root = aliases.get(cur.id)
+    if root is None:
+        return None
+    parts.append(root)
+    return ".".join(reversed(parts))
+
+
+def _string_elements(expr: ast.expr) -> Set[str]:
+    """String members of a set/tuple/list literal, possibly wrapped in a
+    ``frozenset(...)`` / ``set(...)`` call."""
+    if isinstance(expr, ast.Call) and expr.args:
+        return _string_elements(expr.args[0])
+    if isinstance(expr, (ast.Set, ast.Tuple, ast.List)):
+        out: Set[str] = set()
+        for e in expr.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                out.add(e.value)
+        return out
+    return set()

@@ -1,0 +1,54 @@
+"""Console and JSON reporters for jetlint findings."""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Tuple
+
+from .model import Finding
+
+
+def split(findings: List[Finding]) -> Tuple[List[Finding], List[Finding]]:
+    active = [f for f in findings if not f.suppressed]
+    suppressed = [f for f in findings if f.suppressed]
+    return active, suppressed
+
+
+def render_console(findings: List[Finding], files: int,
+                   unused_suppressions: List[Tuple[str, int]],
+                   show_suppressed: bool = False) -> str:
+    active, suppressed = split(findings)
+    lines: List[str] = []
+    for f in sorted(active, key=lambda f: (f.path, f.line, f.rule)):
+        lines.append(f"{f.path}:{f.line}: [{f.rule}] {f.message}")
+    if show_suppressed:
+        for f in sorted(suppressed, key=lambda f: (f.path, f.line)):
+            lines.append(f"{f.path}:{f.line}: [suppressed:{f.rule}] "
+                         f"{f.message} (reason: {f.reason})")
+    for path, line in unused_suppressions:
+        lines.append(f"{path}:{line}: note: unused jetlint suppression")
+    lines.append(
+        f"jetlint: {len(active)} finding(s), {len(suppressed)} suppressed, "
+        f"{files} file(s) scanned")
+    return "\n".join(lines)
+
+
+def render_json(findings: List[Finding], files: int,
+                unused_suppressions: List[Tuple[str, int]]) -> str:
+    active, suppressed = split(findings)
+    counts: Dict[str, int] = {}
+    for f in active:
+        counts[f.rule] = counts.get(f.rule, 0) + 1
+    doc = {
+        "tool": "jetlint",
+        "version": 1,
+        "files_scanned": files,
+        "unsuppressed": len(active),
+        "suppressed": len(suppressed),
+        "counts_by_rule": counts,
+        "findings": [f.to_json() for f in sorted(
+            findings, key=lambda f: (f.path, f.line, f.rule))],
+        "unused_suppressions": [
+            {"path": p, "line": ln} for p, ln in unused_suppressions],
+    }
+    return json.dumps(doc, indent=2, sort_keys=True)

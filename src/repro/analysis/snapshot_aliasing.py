@@ -1,0 +1,144 @@
+"""Pass 2 — snapshot-aliasing.
+
+Flags mutable ``self.*`` containers (or their elements) passed to
+``offer_to_snapshot`` / a snapshot writer's ``put`` without a copy.  The
+snapshot protocol acks asynchronously: between a processor's barrier and
+the job-wide commit the processor keeps running and keeps mutating its
+live containers, so a payload that aliases live state is corrupted by
+the time it is committed — the exact PR 6 bug shape (fixed back then by
+deep-copying at the writer; this pass keeps processor code honest at the
+source too, since ad-hoc writers and ack payloads do not all copy).
+
+Hazards, through the method's alias map:
+
+* ``self.frames`` itself (any attribute the class ever assigns a
+  container literal/constructor);
+* a loop/element alias of such an attribute, when the class shows
+  evidence that its *elements* are containers
+  (``self.x.setdefault(k, []).append(...)``, ``self.x[k] = {}``);
+* an attribute read off such an element (``ks.ring``) whose name is
+  assigned a container anywhere in the module (``self.ring = {}``).
+
+Copy wrappers (``dict()/list()/set()/tuple()/sorted()/copy()/
+deepcopy()/x.copy()``) and comprehensions build fresh containers and
+stop the scan.
+
+Rule: ``snapshot-aliasing``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Set, Tuple
+
+from .model import AnalysisContext, ClassInfo, Finding, MethodFlow
+
+COPY_CALLS = frozenset({"list", "dict", "set", "tuple", "sorted",
+                        "frozenset", "bytes", "copy", "deepcopy"})
+
+#: snapshot payload sinks: call-name -> index of the value argument
+SINK_ARG = {"offer_to_snapshot": 1, "put": 3, "put_many": 1}
+
+
+def _is_copy_call(call: ast.Call) -> bool:
+    fn = call.func
+    if isinstance(fn, ast.Name):
+        return fn.id in COPY_CALLS
+    if isinstance(fn, ast.Attribute):
+        return fn.attr in COPY_CALLS
+    return False
+
+
+def _class_container_attrs(ci: ClassInfo) -> Tuple[Set[str], Set[str]]:
+    """(attrs assigned a fresh container anywhere in the class,
+    attrs whose elements are known to be containers)."""
+    containers: Set[str] = set()
+    elements: Set[str] = set()
+    for m in ci.methods:
+        flow = ci.flow(m)
+        containers |= flow.container_resets
+        elements |= flow.element_container_attrs
+    return containers, elements
+
+
+def _hazards(expr: ast.expr, flow: MethodFlow, containers: Set[str],
+             elements: Set[str], module_container_names: Set[str]
+             ) -> Iterator[Tuple[ast.expr, str]]:
+    """Yield (node, description) for live-container references inside a
+    snapshot payload expression."""
+    if isinstance(expr, ast.Call):
+        if _is_copy_call(expr):
+            return                       # fresh container: scan stops here
+        for a in expr.args:
+            yield from _hazards(a, flow, containers, elements,
+                                module_container_names)
+        return
+    if isinstance(expr, (ast.ListComp, ast.SetComp, ast.DictComp,
+                         ast.GeneratorExp)):
+        return                           # comprehension builds fresh
+    if isinstance(expr, ast.Compare):
+        return                           # comparison result is a bool
+    if isinstance(expr, ast.IfExp):
+        # only the branches can flow into the payload, not the test
+        yield from _hazards(expr.body, flow, containers, elements,
+                            module_container_names)
+        yield from _hazards(expr.orelse, flow, containers, elements,
+                            module_container_names)
+        return
+    if isinstance(expr, ast.Attribute):
+        taint = flow.taints(expr)
+        for attr, depth in taint:
+            if depth == 0 and attr in containers:
+                yield expr, f"self.{attr}"
+                return
+            if depth >= 1 and expr.attr in module_container_names:
+                yield expr, f"live `{expr.attr}` container of self.{attr}"
+                return
+        return
+    if isinstance(expr, ast.Name):
+        for attr, depth in flow.taints(expr):
+            if depth == 0 and attr in containers:
+                yield expr, f"self.{attr} (via local `{expr.id}`)"
+                return
+            if depth >= 1 and attr in elements:
+                yield expr, (f"mutable element of self.{attr} "
+                             f"(via local `{expr.id}`)")
+                return
+        return
+    for child in ast.iter_child_nodes(expr):
+        if isinstance(child, ast.expr):
+            yield from _hazards(child, flow, containers, elements,
+                                module_container_names)
+
+
+def run(ctx: AnalysisContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in ctx.modules:
+        for ci in mod.classes.values():
+            containers, elements = _class_container_attrs(ci)
+            for mname in ci.methods:
+                flow = ci.flow(mname)
+                for call in ast.walk(flow.node):
+                    if not isinstance(call, ast.Call) \
+                            or not isinstance(call.func, ast.Attribute):
+                        continue
+                    arg_ix = SINK_ARG.get(call.func.attr)
+                    if arg_ix is None or len(call.args) <= arg_ix:
+                        continue
+                    if call.func.attr != "offer_to_snapshot":
+                        # bare `.put` is common; only treat it as a
+                        # snapshot sink on a writer-named receiver
+                        recv = ast.unparse(call.func.value)
+                        if "writer" not in recv.lower():
+                            continue
+                    value = call.args[arg_ix]
+                    for _node, desc in _hazards(
+                            value, flow, containers, elements,
+                            mod.container_attr_names):
+                        findings.append(Finding(
+                            "snapshot-aliasing", mod.path, call.lineno,
+                            f"{ci.name}.{mname}: snapshot payload aliases "
+                            f"{desc}; the processor keeps mutating it before "
+                            f"the snapshot commits — wrap it in a copy "
+                            f"(dict()/list()/deepcopy)"))
+    return findings

@@ -1,0 +1,100 @@
+"""Pass 1 — snapshot-completeness.
+
+Every ``self.*`` attribute a :class:`Processor` subclass mutates on the
+hot path (``process`` / ``process_block`` / ``on_watermark`` /
+``try_process_watermark`` / ``complete`` / ``complete_edge`` /
+``poll_async``, plus everything those reach via ``self.*()`` calls) must
+either
+
+* be referenced in ``save_to_snapshot`` **and** in
+  ``restore_from_snapshot`` / ``finish_snapshot_restore``, or
+* appear in the class's ``EPHEMERAL_STATE`` declaration (state that is
+  legitimately rebuilt after a restart), or
+* appear in ``SNAPSHOT_STATE`` (state the author asserts is snapshotted
+  under a transformed name the reference scan cannot see).
+
+This is the PR 4 / PR 7 bug class: state that silently fails to survive
+the Chandy-Lamport cycle degrades exactly-once to at-least-once.
+
+Rules: ``snapshot-missing-save``, ``snapshot-missing-restore``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Set, Tuple
+
+from .model import AnalysisContext, ClassInfo, ENGINE_ATTRS, Finding
+
+HOT_ENTRIES = ("process", "process_block", "on_watermark",
+               "try_process_watermark", "complete", "complete_edge",
+               "poll_async")
+SAVE_ENTRIES = ("save_to_snapshot",)
+RESTORE_ENTRIES = ("restore_from_snapshot", "finish_snapshot_restore")
+
+
+def _entry_refs(ctx: AnalysisContext, ci: ClassInfo,
+                entries: Iterable[str], skip_root: bool) -> Set[str]:
+    """Attribute names referenced (read or written) anywhere reachable
+    from the given entry methods.  ``skip_root`` ignores methods that
+    resolve to the base ``Processor`` no-op defaults."""
+    refs: Set[str] = set()
+    for _name, (owner, flow) in ctx.reachable_flows(ci, entries).items():
+        if skip_root and owner.name == "Processor":
+            continue
+        refs |= flow.reads | flow.writes
+    return refs
+
+
+def _has_hook(ctx: AnalysisContext, ci: ClassInfo, name: str) -> bool:
+    hit = ctx.find_method(ci, name)
+    return hit is not None and hit[0].name != "Processor"
+
+
+def run(ctx: AnalysisContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in ctx.modules:
+        for ci in mod.classes.values():
+            if ci.name == "Processor" or not ctx.is_processor(ci):
+                continue
+            # hot-path mutations: attr -> (module_path, line) of first write
+            mutated: Dict[str, Tuple[str, int]] = {}
+            for _name, (owner, flow) in ctx.reachable_flows(
+                    ci, HOT_ENTRIES).items():
+                for attr in flow.writes:
+                    if attr in ENGINE_ATTRS or attr.startswith("__"):
+                        continue
+                    line = flow.write_lines.get(attr, flow.node.lineno)
+                    mutated.setdefault(attr, (owner.module.path, line))
+            if not mutated:
+                continue
+
+            ephemeral = ctx.declared_state(ci, "EPHEMERAL_STATE")
+            external = ctx.declared_state(ci, "SNAPSHOT_STATE")
+            has_save = _has_hook(ctx, ci, "save_to_snapshot")
+            has_restore = any(_has_hook(ctx, ci, m) for m in RESTORE_ENTRIES)
+            saved = _entry_refs(ctx, ci, SAVE_ENTRIES, skip_root=True)
+            restored = _entry_refs(ctx, ci, RESTORE_ENTRIES, skip_root=True)
+
+            for attr, (path, line) in sorted(mutated.items()):
+                if attr in ephemeral or attr in external:
+                    continue
+                if attr not in saved:
+                    hint = ("the class defines no save_to_snapshot"
+                            if not has_save else
+                            "save_to_snapshot never references it")
+                    findings.append(Finding(
+                        "snapshot-missing-save", path, line,
+                        f"{ci.name}: self.{attr} is mutated on the hot path "
+                        f"but {hint}; snapshot it or declare it in "
+                        f"EPHEMERAL_STATE with a reason"))
+                    continue
+                if attr not in restored:
+                    hint = ("the class defines no restore hook"
+                            if not has_restore else
+                            "restore_from_snapshot/finish_snapshot_restore "
+                            "never reference it")
+                    findings.append(Finding(
+                        "snapshot-missing-restore", path, line,
+                        f"{ci.name}: self.{attr} is saved to snapshots but "
+                        f"{hint}; restored jobs would silently lose it"))
+    return findings

@@ -80,6 +80,21 @@ class DeviceWindowProcessor(Processor):
     matters downstream.
     """
 
+    #: Host-side staging and flow state never survives a restart by
+    #: design: save_to_snapshot submits staged rows as a final pre-barrier
+    #: device step and drains every in-flight output, so the durable
+    #: window content lives entirely in the device state (saved as
+    #: ("k", key) shards + ("meta", idx) entries and rebuilt by
+    #: finish_snapshot_restore).  _emit_buf flushes before the barrier,
+    #: watermark cursors re-advance from replayed sources, executor/_spec
+    #: are rebuilt lazily by _ensure_executor, and _bucket_collisions is
+    #: telemetry.
+    EPHEMERAL_STATE = frozenset({
+        "_ts", "_key", "_val", "_n", "_pending", "_emit_buf", "_steps",
+        "_progress_hint", "_last_wm", "_wm_submitted", "_closed",
+        "_spec", "_bucket_collisions",
+    })
+
     def __init__(self, wdef: SlidingWindowDef, op: AggregateOperation,
                  n_key_buckets: int = 1024, batch_size: int = 1024,
                  max_windows_per_step: int = 8, ring_margin: int = 8,

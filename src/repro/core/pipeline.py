@@ -388,6 +388,11 @@ class LateSplitProcessor(Processor):
     the late edge, the combiner / a drop-filter on the main edge.
     """
 
+    #: _pending is pre-barrier input in flight: save_to_snapshot refuses
+    #: to finish until _drain_pending() emptied it into the inner sink,
+    #: so it is empty in every committed snapshot by construction
+    EPHEMERAL_STATE = frozenset({"_pending"})
+
     def __init__(self, inner: Processor):
         self.inner = inner
         self.is_cooperative = inner.is_cooperative
@@ -409,6 +414,7 @@ class LateSplitProcessor(Processor):
         pend = self._pending
         for ev in inbox:
             if isinstance(ev, LateEvent):
+                # jetlint: disable=hot-path-unbounded-growth -- the wrapped sink drains _pending on every process() call and before every barrier; it only holds one slice's deferred LateEvents
                 pend.add(ev)
         inbox.clear()
         if len(pend):
@@ -454,6 +460,10 @@ def _drop_late_chain(ev):
 
 class HashJoinProcessor(Processor):
     """Ordinal 1 = build (batch, priority 0), ordinal 0 = probe."""
+
+    #: edge-exhaustion flag; a restored job replays the (batch) build
+    #: edge from its source and re-derives it — only ``table`` is state
+    EPHEMERAL_STATE = frozenset({"build_done"})
 
     def __init__(self, probe_key_fn, build_key_fn, combine_fn, inner=True):
         self.probe_key_fn = probe_key_fn
@@ -501,6 +511,10 @@ class HashJoinProcessor(Processor):
 
 class GroupAggregateProcessor(Processor):
     """Batch keyed aggregation: accumulate everything, emit on complete."""
+
+    #: _emit is the complete()-phase emission stage, rebuilt from the
+    #: snapshotted ``accs`` on replay (complete() re-runs after restore)
+    EPHEMERAL_STATE = frozenset({"_emit"})
 
     def __init__(self, op: AggregateOperation):
         self.op = op

@@ -139,7 +139,38 @@ class ProcessorContext:
 
 
 class Processor:
-    """Base processor. Subclasses override the hooks they need."""
+    """Base processor. Subclasses override the hooks they need.
+
+    **State declarations** — the snapshot contract is machine-checked
+    (``python -m repro.analysis``, see ROADMAP "Machine-checked
+    contracts"): every ``self.*`` attribute a subclass mutates on the hot
+    path (``process`` / ``process_block`` / ``try_process_watermark`` /
+    ``complete`` / ``complete_edge`` / ``poll_async``) must be written in
+    :meth:`save_to_snapshot` and read back in
+    :meth:`restore_from_snapshot` / :meth:`finish_snapshot_restore`, or
+    be declared in one of two class-level sets:
+
+    * ``EPHEMERAL_STATE`` — attributes that legitimately do NOT survive a
+      restart (rebuilt lazily, drained before every barrier, re-derived
+      from replay, or pure telemetry).  Declare them with a comment
+      saying *why* losing them is correct;
+    * ``SNAPSHOT_STATE`` — attributes that ARE saved/restored but under a
+      transformed name or route the checker's reference scan cannot
+      follow (e.g. ``TransactionalSink.pending`` restores into
+      ``prepared``).
+
+    Declarations are unioned along the inheritance chain.  Everything
+    else unaccounted for is a ``snapshot-missing-save`` /
+    ``snapshot-missing-restore`` finding and fails CI.
+    """
+
+    #: hot-path mutable attributes that deliberately do not survive a
+    #: restart (see class docstring); checked by repro.analysis
+    EPHEMERAL_STATE: frozenset = frozenset()
+
+    #: hot-path mutable attributes saved/restored under a transformed
+    #: name the checker cannot trace (see class docstring)
+    SNAPSHOT_STATE: frozenset = frozenset()
 
     #: False for processors that make blocking calls; the engine then runs
     #: them on a dedicated non-cooperative thread (paper §3.2).

@@ -229,6 +229,12 @@ class AccumulateByFrameProcessor(Processor):
     :class:`~repro.core.events.LateEvent` for the late side output.
     """
 
+    #: _last_wm is deliberately NOT snapshotted (see save_to_snapshot:
+    #: a restored lateness horizon would drop replayed data); _emit_buf
+    #: is flushed before every barrier by construction; late_dropped is
+    #: telemetry, not replayable state
+    EPHEMERAL_STATE = frozenset({"_last_wm", "_emit_buf", "late_dropped"})
+
     def __init__(self, wdef: SlidingWindowDef, op: AggregateOperation,
                  ordinal_map: Optional[Dict[int, int]] = None,
                  allowed_lateness: int = 0, late_output: bool = False):
@@ -429,6 +435,11 @@ class CombineFramesProcessor(Processor):
     deducts the leaving ones — O(1) amortized per (key, slide) instead of
     recombining ``size/slide`` frames.
     """
+
+    #: next_win_end is re-derived by restore_from_snapshot from the
+    #: restored frames/rings (min open frame + slide); _emit_buf is
+    #: flushed before every barrier by construction
+    EPHEMERAL_STATE = frozenset({"next_win_end", "_emit_buf"})
 
     def __init__(self, wdef: SlidingWindowDef, op: AggregateOperation,
                  use_deduct: Optional[bool] = None,
@@ -639,8 +650,13 @@ class CombineFramesProcessor(Processor):
         for (key, fts), acc in self.frames.items():
             self.outbox.offer_to_snapshot(("f", key, fts), acc)
         for key, ks in self.key_state.items():
+            # the ring must be copied: the processor keeps accumulating
+            # into the live dict between this barrier and the job-wide
+            # commit, and an aliased payload would smuggle post-barrier
+            # events into the snapshot
+            ring = None if ks.ring is None else dict(ks.ring)
             self.outbox.offer_to_snapshot(
-                ("k", key), (ks.max_frame, ks.last_emitted, ks.ring))
+                ("k", key), (ks.max_frame, ks.last_emitted, ring))
         for key, w in self._refire:
             self.outbox.offer_to_snapshot(("r", key, w), True)
         return True
@@ -749,6 +765,12 @@ class SessionWindowProcessor(Processor):
       ``save_to_snapshot``/``restore_from_snapshot`` protocol, so sessions
       survive restarts and topology changes exactly-once.
     """
+
+    #: same contract as AccumulateByFrameProcessor: the lateness horizon
+    #: (_last_wm) rebuilds from the replayed stream's own watermarks, the
+    #: emit buffer is flushed before every barrier, late_dropped is
+    #: telemetry
+    EPHEMERAL_STATE = frozenset({"_last_wm", "_emit_buf", "late_dropped"})
 
     def __init__(self, sdef: SessionWindowDef, op: AggregateOperation,
                  allowed_lateness: int = 0, late_output: bool = False):

@@ -51,6 +51,11 @@ class TransactionalSink(Processor):
     restore is fenced by the external system exactly like a prepared XA
     transaction being re-committed."""
 
+    #: pending IS snapshotted (under its stable txn id) but restores into
+    #: ``prepared``: a restored buffer is by definition past its
+    #: commit-prepare, so it re-enters phase 2, not the open epoch
+    SNAPSHOT_STATE = frozenset({"pending"})
+
     def __init__(self, collector: ExternalCollector):
         self.collector = collector
         self.pending: List[Any] = []       # current (uncommitted) epoch

@@ -1,0 +1,437 @@
+"""jetlint (repro.analysis) — per-pass fixtures and the self-check gate.
+
+Each pass gets a known-bad fixture reproducing the historical bug shape
+it exists to catch (PR 4/7 missing save/restore, PR 6 snapshot aliasing,
+a sleeping tasklet, an impure block form) and a known-good twin that
+must stay clean.  The final test is the CI gate itself: the real
+codebase under ``src/repro`` analyzes to zero unsuppressed findings.
+"""
+
+import os
+import textwrap
+
+from repro.analysis import analyze_sources, run_paths
+
+SRC_REPRO = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+
+
+def lint(src, rules=None, path="fx.py"):
+    findings = analyze_sources({path: textwrap.dedent(src)}, rules=rules)
+    return [f for f in findings if not f.suppressed]
+
+
+def rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ---------------------------------------------------------------------------
+# pass 1: snapshot completeness
+# ---------------------------------------------------------------------------
+
+
+def test_missing_save_flagged():
+    # PR 4 bug shape: keyed state mutated on the hot path, never saved
+    bad = """
+        class CountProcessor(Processor):
+            def __init__(self):
+                self.counts = {}
+            def process(self, ordinal, inbox):
+                for ev in inbox:
+                    self.counts[ev.key] = self.counts.get(ev.key, 0) + 1
+        """
+    found = lint(bad)
+    assert "snapshot-missing-save" in rules_of(found)
+    assert any("counts" in f.message for f in found)
+
+
+def test_missing_restore_flagged():
+    # saved but the restore hook never reads it back: restored jobs
+    # silently lose the attribute (the keyed-overwrite regression)
+    bad = """
+        class CountProcessor(Processor):
+            def __init__(self):
+                self.counts = {}
+            def process(self, ordinal, inbox):
+                for ev in inbox:
+                    self.counts[ev.key] = 1
+            def save_to_snapshot(self):
+                for k, v in self.counts.items():
+                    self.outbox.offer_to_snapshot(k, v)
+                return True
+            def restore_from_snapshot(self, items):
+                pass
+        """
+    assert rules_of(lint(bad)) == ["snapshot-missing-restore"]
+
+
+def test_save_and_restore_clean():
+    good = """
+        class CountProcessor(Processor):
+            def __init__(self):
+                self.counts = {}
+            def process(self, ordinal, inbox):
+                for ev in inbox:
+                    self.counts[ev.key] = 1
+            def save_to_snapshot(self):
+                for k, v in self.counts.items():
+                    self.outbox.offer_to_snapshot(k, dict(v))
+                return True
+            def restore_from_snapshot(self, items):
+                for k, v in items:
+                    self.counts[k] = v
+        """
+    assert lint(good) == []
+
+
+def test_ephemeral_declaration_accepted():
+    good = """
+        class WmProcessor(Processor):
+            #: re-derived from the first post-restore watermark
+            EPHEMERAL_STATE = frozenset({"_last_wm"})
+            def __init__(self):
+                self._last_wm = -1
+            def process(self, ordinal, inbox):
+                self._last_wm = 7
+        """
+    assert lint(good) == []
+
+
+def test_snapshot_state_declaration_accepted():
+    # saved under a transformed name the reference scan cannot follow
+    good = """
+        class XaSink(Processor):
+            SNAPSHOT_STATE = frozenset({"pending"})
+            def __init__(self):
+                self.pending = []
+            def process(self, ordinal, inbox):
+                self.pending.append(1)
+            def save_to_snapshot(self):
+                self.outbox.offer_to_snapshot("txn", list(self.pending))
+                self.prepared = self.pending
+                self.pending = []
+                return True
+            def restore_from_snapshot(self, items):
+                self.prepared = dict(items)
+        """
+    assert "snapshot-missing-restore" not in rules_of(lint(good))
+
+
+def test_helper_mutation_reached_interprocedurally():
+    # the write happens in a helper the hot path calls via self.*()
+    bad = """
+        class P(Processor):
+            def process(self, ordinal, inbox):
+                self._bump()
+            def _bump(self):
+                self.total = 1
+        """
+    found = lint(bad, rules=["snapshot-missing-save"])
+    assert any("total" in f.message for f in found)
+
+
+# ---------------------------------------------------------------------------
+# pass 2: snapshot aliasing (the PR 6 bug shape)
+# ---------------------------------------------------------------------------
+
+
+def test_aliasing_direct_attr_flagged():
+    bad = """
+        class FrameProcessor(Processor):
+            EPHEMERAL_STATE = frozenset({"frames"})
+            def __init__(self):
+                self.frames = {}
+            def process(self, ordinal, inbox):
+                self.frames[1] = 2
+            def save_to_snapshot(self):
+                self.outbox.offer_to_snapshot("k", self.frames)
+                return True
+        """
+    found = lint(bad, rules=["snapshot-aliasing"])
+    assert len(found) == 1 and "frames" in found[0].message
+
+
+def test_aliasing_loop_element_flagged():
+    # the PR 6 shape verbatim: a per-key dict handed out by reference
+    # while the processor keeps mutating it before the commit
+    bad = """
+        class W(Processor):
+            EPHEMERAL_STATE = frozenset({"frames"})
+            def __init__(self):
+                self.frames = {}
+            def process(self, ordinal, inbox):
+                self.frames.setdefault(1, {})[2] = 3
+            def save_to_snapshot(self):
+                for key, acc in self.frames.items():
+                    self.outbox.offer_to_snapshot(key, acc)
+                return True
+        """
+    found = lint(bad, rules=["snapshot-aliasing"])
+    assert len(found) == 1
+
+
+def test_aliasing_copy_is_clean():
+    good = """
+        class W(Processor):
+            EPHEMERAL_STATE = frozenset({"frames"})
+            def __init__(self):
+                self.frames = {}
+            def process(self, ordinal, inbox):
+                self.frames.setdefault(1, {})[2] = 3
+            def save_to_snapshot(self):
+                for key, acc in self.frames.items():
+                    self.outbox.offer_to_snapshot(key, dict(acc))
+                self.outbox.offer_to_snapshot("all", list(self.frames))
+                return True
+        """
+    assert lint(good, rules=["snapshot-aliasing"]) == []
+
+
+def test_aliasing_tuple_payload_member_flagged():
+    # the hazard hides inside a tuple payload next to safe scalars
+    bad = """
+        class W(Processor):
+            EPHEMERAL_STATE = frozenset({"ring"})
+            def __init__(self):
+                self.ring = {}
+            def process(self, ordinal, inbox):
+                self.ring[1] = 2
+            def save_to_snapshot(self):
+                self.outbox.offer_to_snapshot("k", (42, self.ring))
+                return True
+        """
+    assert len(lint(bad, rules=["snapshot-aliasing"])) == 1
+
+
+# ---------------------------------------------------------------------------
+# pass 3: hot-path non-blocking + unbounded growth
+# ---------------------------------------------------------------------------
+
+
+def test_sleeping_tasklet_flagged():
+    bad = """
+        import time
+
+        class PollTasklet:
+            def call(self):
+                time.sleep(0.01)
+                return "made-progress"
+        """
+    found = lint(bad, rules=["hot-path-blocking"])
+    assert len(found) == 1 and "time.sleep" in found[0].message
+
+
+def test_blocking_via_helper_flagged():
+    # interprocedural: the sleep hides one self.*() call away
+    bad = """
+        import time
+
+        class SlowProcessor(Processor):
+            def process(self, ordinal, inbox):
+                self._wait()
+            def _wait(self):
+                time.sleep(0.5)
+        """
+    assert len(lint(bad, rules=["hot-path-blocking"])) == 1
+
+
+def test_noncooperative_processor_exempt():
+    # is_cooperative = False opts out: the engine gives it a thread
+    good = """
+        import time
+
+        class BlockingSource(Processor):
+            is_cooperative = False
+            def process(self, ordinal, inbox):
+                time.sleep(0.5)
+        """
+    assert lint(good, rules=["hot-path-blocking"]) == []
+
+
+def test_clock_reads_allowlisted():
+    good = """
+        import time
+
+        class T:
+            pass
+
+        class TimedTasklet:
+            def call(self):
+                t0 = time.perf_counter()
+                return time.monotonic() - t0
+        """
+    assert lint(good, rules=["hot-path-blocking"]) == []
+
+
+def test_unbounded_growth_flagged_and_shrink_clears_it():
+    bad = """
+        class BufProcessor(Processor):
+            EPHEMERAL_STATE = frozenset({"buf"})
+            def __init__(self):
+                self.buf = []
+            def process(self, ordinal, inbox):
+                self.buf.append(1)
+        """
+    found = lint(bad, rules=["hot-path-unbounded-growth"])
+    assert len(found) == 1 and "buf" in found[0].message
+    # any shrink/reset anywhere in the class is bounding evidence
+    good = bad + """
+            def complete(self):
+                self.buf.clear()
+                return True
+        """
+    assert lint(good, rules=["hot-path-unbounded-growth"]) == []
+
+
+# ---------------------------------------------------------------------------
+# pass 4: block-form purity + accepts_blocks agreement
+# ---------------------------------------------------------------------------
+
+
+def test_impure_block_form_flagged():
+    bad = """
+        def scale(ev):
+            return ev
+
+        def scale_block(blk):
+            out = []
+            for v in blk.values:
+                out.append(transform(v))
+            return out
+
+        fn = block_form(scale, scale_block)
+        """
+    found = lint(bad, rules=["block-form-impure"])
+    # the loop and the non-whitelisted transform() call are both impure
+    assert len(found) >= 2
+
+
+def test_pure_block_form_clean():
+    good = """
+        import numpy as np
+
+        def scale(ev):
+            return ev
+
+        fn = block_form(scale, lambda blk: np.clip(blk.values * 2, 0, 10))
+        """
+    assert lint(good, rules=["block-form-impure"]) == []
+
+
+def test_accepts_blocks_without_handling_flagged():
+    bad = """
+        class LazyProcessor(Processor):
+            accepts_blocks = True
+            def process(self, ordinal, inbox):
+                for ev in inbox:
+                    pass
+        """
+    found = lint(bad, rules=["block-form-mismatch"])
+    assert len(found) == 1 and "accepts_blocks=True" in found[0].message
+
+
+def test_handling_without_declaration_flagged():
+    bad = """
+        from .events import EventBlock
+
+        class QuietProcessor(Processor):
+            def process(self, ordinal, inbox):
+                for ev in inbox:
+                    if isinstance(ev, EventBlock):
+                        pass
+        """
+    found = lint(bad, rules=["block-form-mismatch"])
+    assert len(found) == 1 and "dead code" in found[0].message
+
+
+def test_matching_declaration_clean():
+    good = """
+        from .events import EventBlock
+
+        class BlockProcessor(Processor):
+            accepts_blocks = True
+            def process(self, ordinal, inbox):
+                for ev in inbox:
+                    if isinstance(ev, EventBlock):
+                        pass
+        """
+    assert lint(good, rules=["block-form-mismatch"]) == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+
+def test_suppression_with_reason_silences():
+    src = """
+        class BufProcessor(Processor):
+            EPHEMERAL_STATE = frozenset({"buf"})
+            def __init__(self):
+                self.buf = []
+            def process(self, ordinal, inbox):
+                self.buf.append(1)  # jetlint: disable=hot-path-unbounded-growth -- drained by the test harness
+        """
+    findings = analyze_sources({"fx.py": textwrap.dedent(src)})
+    assert [f for f in findings if not f.suppressed] == []
+    sup = [f for f in findings if f.suppressed]
+    assert len(sup) == 1 and "drained" in sup[0].reason
+
+
+def test_standalone_suppression_covers_next_line():
+    src = """
+        class BufProcessor(Processor):
+            EPHEMERAL_STATE = frozenset({"buf"})
+            def __init__(self):
+                self.buf = []
+            def process(self, ordinal, inbox):
+                # jetlint: disable=hot-path-unbounded-growth -- bounded by finite input
+                self.buf.append(1)
+        """
+    findings = analyze_sources({"fx.py": textwrap.dedent(src)})
+    assert [f for f in findings if not f.suppressed] == []
+
+
+def test_suppression_without_reason_is_a_finding():
+    src = """
+        class BufProcessor(Processor):
+            EPHEMERAL_STATE = frozenset({"buf"})
+            def __init__(self):
+                self.buf = []
+            def process(self, ordinal, inbox):
+                self.buf.append(1)  # jetlint: disable=hot-path-unbounded-growth
+        """
+    found = lint(src)
+    # the reasonless comment suppresses nothing AND is itself flagged
+    assert "bad-suppression" in rules_of(found)
+    assert "hot-path-unbounded-growth" in rules_of(found)
+
+
+def test_header_suppression_covers_whole_method():
+    src = """
+        import time
+
+        class S:
+            pass
+
+        class SpinTasklet:
+            def call(self):  # jetlint: disable=hot-path-blocking -- test-only tasklet, runs on its own thread
+                time.sleep(0.01)
+                time.sleep(0.02)
+        """
+    findings = analyze_sources({"fx.py": textwrap.dedent(src)})
+    assert [f for f in findings if not f.suppressed] == []
+    assert len([f for f in findings if f.suppressed]) == 2
+
+
+# ---------------------------------------------------------------------------
+# the CI gate: the real codebase is clean
+# ---------------------------------------------------------------------------
+
+
+def test_real_codebase_is_clean():
+    findings, nfiles, unused = run_paths([SRC_REPRO])
+    live = [f for f in findings if not f.suppressed]
+    assert nfiles > 50
+    assert live == [], "\n".join(
+        f"{f.path}:{f.line}: [{f.rule}] {f.message}" for f in live)
+    assert unused == [], f"unused suppressions: {unused}"
