@@ -114,16 +114,29 @@ class WorkerFailure:
     :data:`FAILURE_HUNG` / :data:`FAILURE_ERROR`; ``key`` locates the
     worker (``(node_id, worker_slot)``) where that is meaningful."""
 
-    __slots__ = ("kind", "key", "detail", "exitcode", "pid")
+    __slots__ = ("kind", "key", "detail", "exitcode", "pid", "vertex",
+                 "exc_type", "poison")
 
     def __init__(self, kind: str, key: Optional[Location] = None,
                  detail: str = "", exitcode: Optional[int] = None,
-                 pid: Optional[int] = None):
+                 pid: Optional[int] = None, vertex: Optional[str] = None,
+                 exc_type: Optional[str] = None,
+                 poison: Optional[dict] = None):
         self.kind = kind
         self.key = key
         self.detail = detail
         self.exitcode = exitcode
         self.pid = pid
+        #: DAG vertex whose processor raised, when attributable — feeds
+        #: failure fingerprinting (runtime/supervisor.py)
+        self.vertex = vertex
+        #: exception class name of the root cause, when attributable
+        self.exc_type = exc_type
+        #: exact offending record stamped by pinpoint replay
+        #: (``ProcessorTasklet._process_pinpoint``): dict with
+        #: vertex/identity/record/exact — the engine quarantines it to
+        #: the dead-letter queue on fingerprint recurrence
+        self.poison = poison
 
     def __repr__(self):
         return (f"WorkerFailure({self.kind}, key={self.key}, "
@@ -267,7 +280,11 @@ class InProcessBackend(ExecutionBackend):
                 execution.backend_data.setdefault("failures", []).append(
                     WorkerFailure(FAILURE_ERROR,
                                   detail=f"{tf.tasklet.name}: "
-                                         f"{tf.cause!r}"))
+                                         f"{tf.cause!r}",
+                                  vertex=tf.tasklet.vertex_name,
+                                  exc_type=type(tf.cause).__name__,
+                                  poison=getattr(tf.cause, "_jet_poison",
+                                                 None)))
                 return
         # no owning execution (already torn down): nothing to heal
         raise tf

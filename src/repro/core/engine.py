@@ -28,7 +28,7 @@ import itertools
 import time as _time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-from ..state import IMapService, SnapshotStore
+from ..state import DurableSnapshotStore, IMapService, SnapshotStore
 from .backend import ExecutionBackend, InProcessBackend, make_backend
 from .backpressure import NetworkLink
 from .clock import Clock, VirtualClock, WallClock
@@ -68,10 +68,16 @@ class RestartPolicy:
     operator asked for those."""
 
     def __init__(self, max_restarts: int = 5, backoff_base_s: float = 0.05,
-                 backoff_max_s: float = 2.0):
+                 backoff_max_s: float = 2.0,
+                 fingerprint_threshold: int = 2):
         self.max_restarts = max_restarts
         self.backoff_base_s = backoff_base_s
         self.backoff_max_s = backoff_max_s
+        #: a failure fingerprint (vertex, exception type, restored
+        #: snapshot id) recurring this many times marks the crash
+        #: deterministic and escalates (snapshot-chain fallback /
+        #: poison-record quarantine) instead of replaying it identically
+        self.fingerprint_threshold = max(1, fingerprint_threshold)
 
     def delay_for(self, attempt: int) -> float:
         """Backoff before restart ``attempt`` (1-based): base * 2^(n-1),
@@ -105,6 +111,47 @@ class JobConfig:
         #: stays authoritative) instead of stalling the job forever; only
         #: meaningful on substrates whose acks can actually be lost (mp)
         self.barrier_timeout_s = barrier_timeout_s
+
+
+class DeadLetterQueue:
+    """Coordinator-side dead-letter sink with exactly-once accounting.
+
+    A record lands here at most once (identity-deduplicated per vertex)
+    when the escalation ladder proves it poison: the same vertex raised
+    the same exception from the same restored snapshot
+    ``RestartPolicy.fingerprint_threshold`` times, and a pinpoint replay
+    stamped the exact in-flight record onto the failure.  After
+    quarantine, every execution attempt filters the record out before
+    the processor sees it (``ProcessorTasklet._drop_quarantined``), so
+    the surviving stream keeps its zero-dup/zero-loss guarantee while
+    the poison record is accounted for exactly once — here."""
+
+    def __init__(self):
+        #: chronological quarantine records
+        #: ({vertex, identity, record, reason})
+        self.records: List[Dict[str, Any]] = []
+        self._by_vertex: Dict[str, set] = {}
+
+    def quarantine(self, vertex: str, identity, record: str,
+                   reason: str = "") -> bool:
+        """Add one record; False when it was already quarantined."""
+        ids = self._by_vertex.setdefault(vertex, set())
+        if identity in ids:
+            return False
+        ids.add(identity)
+        self.records.append({"vertex": vertex, "identity": identity,
+                             "record": record, "reason": reason})
+        return True
+
+    def identities_for(self, vertex: str):
+        return self._by_vertex.get(vertex)
+
+    def __len__(self):
+        return len(self.records)
+
+    def summary(self) -> List[Dict[str, str]]:
+        return [{"vertex": r["vertex"], "record": r["record"],
+                 "reason": r["reason"]} for r in self.records]
 
 
 class _Instance:
@@ -198,7 +245,11 @@ class ExecutionContext:
                     ssctx=self.ssctx, vertex_name=name,
                     global_index=inst.global_index,
                     snapshot_pid_fn=spf,
-                    is_source=not in_edges)
+                    is_source=not in_edges,
+                    # dead-letter filtering + pinpoint replay for vertices
+                    # the escalation ladder flagged (see DeadLetterQueue)
+                    poison_ids=job.dead_letters.identities_for(name),
+                    pinpoint=name in job.suspect_vertices)
                 processor.init(tasklet.outbox, ctx)
                 inst.tasklet = tasklet
                 self.tasklets.append(tasklet)
@@ -319,11 +370,15 @@ class ExecutionContext:
 class Job:
     _ids = itertools.count()
 
-    def __init__(self, cluster: "JetCluster", dag: DAG, config: JobConfig):
+    def __init__(self, cluster: "JetCluster", dag: DAG, config: JobConfig,
+                 job_id: Optional[str] = None):
         self.cluster = cluster
         self.dag = dag
         self.config = config
-        self.id = f"{config.name}-{next(Job._ids)}"
+        # an explicit id is the cold-start adoption path
+        # (JetCluster.recover_job): the job must keep the identity under
+        # which its durable snapshot chain was written
+        self.id = job_id or f"{config.name}-{next(Job._ids)}"
         self.status = JOB_RUNNING
         self.execution: Optional[ExecutionContext] = None
         self._next_snapshot_id = 1
@@ -339,6 +394,24 @@ class Job:
         self._restart_due_at: Optional[float] = None
         #: aborted-snapshot tally of already-discarded executions
         self._aborted_before = 0
+        # -- crash-loop escalation state (see _note_failures) ------------
+        #: quarantined poison records, exactly-once accounting
+        self.dead_letters = DeadLetterQueue()
+        #: vertices with an attributed failure whose poison record is not
+        #: yet known; rebuilt executions run them in pinpoint mode
+        self.suspect_vertices: set = set()
+        #: failure fingerprint -> recurrence count
+        self._fp_counts: Dict[Any, int] = {}
+        #: chain entries to skip ahead of verification (bumped on
+        #: fingerprint recurrence: the newest snapshots replay a
+        #: deterministic crash); reset when a fresh snapshot commits
+        self._fallback_depth = 0
+        #: snapshot id the current execution was restored from (None for
+        #: a fresh build) — the epoch component of failure fingerprints
+        self._restored_sid: Optional[int] = None
+        #: chronological restore/escalation record, the recovery
+        #: diagnostic surfaced in job stats and bench_chaos reports
+        self.recovery_log: List[Dict[str, Any]] = []
 
     # -- snapshot coordination ----------------------------------------------------
     def tick(self, now: float) -> None:
@@ -375,10 +448,15 @@ class Job:
         if self.status in (JOB_COMPLETED, JOB_FAILED):
             return
         self.failures.extend(failures)
+        self._note_failures(failures)
         if self.execution is not None:
             # stop the attempt NOW: surviving workers must not keep
             # producing into a topology that is about to be discarded
             self.cluster.backend.stop_execution(self.execution)
+            if self.execution.ssctx is not None:
+                # retire the storage of any snapshot caught mid-barrier:
+                # it can never commit and would otherwise leak its IMap
+                self.execution.ssctx.retire_aborted()
         policy = self.config.restart_policy
         if self.config.processing_guarantee == GUARANTEE_NONE:
             # nothing committed to restore from — a restart would replay
@@ -393,6 +471,95 @@ class Job:
         self._restart_due_at = (self.cluster.clock.now()
                                 + policy.delay_for(self.auto_restarts))
 
+    def _note_failures(self, failures) -> None:
+        """Failure fingerprinting + crash-loop escalation ladder.
+
+        Rung 1 — any attributed failure marks its vertex *suspect*: the
+        next execution runs it in pinpoint mode (one record per
+        ``process`` call), so a deterministic raise identifies the exact
+        in-flight record.  Rung 2 — a fingerprint (vertex, exception
+        type, restored snapshot id) recurring ``fingerprint_threshold``
+        times is a deterministic crash: fall back one entry down the
+        snapshot chain, and when the recurrence carries a pinpointed
+        poison record, quarantine it to the dead-letter queue so the
+        next attempt drops it instead of dying on it."""
+        from ..runtime.supervisor import failure_fingerprint
+        policy = self.config.restart_policy
+        for f in failures:
+            vertex = getattr(f, "vertex", None)
+            if vertex:
+                self.suspect_vertices.add(vertex)
+            fp = failure_fingerprint(f, self._restored_sid)
+            count = self._fp_counts[fp] = self._fp_counts.get(fp, 0) + 1
+            if count < policy.fingerprint_threshold:
+                continue
+            self._fp_counts[fp] = 0
+            chain = self.cluster.snapshot_store.recovery_chain(self.id)
+            if len(chain) > 1:
+                self._fallback_depth = min(self._fallback_depth + 1,
+                                           len(chain) - 1)
+            quarantined = None
+            poison = getattr(f, "poison", None)
+            if poison is not None and poison.get("exact"):
+                if self.dead_letters.quarantine(
+                        poison["vertex"], poison["identity"],
+                        poison["record"],
+                        reason=(f"fingerprint {fp!r} recurred "
+                                f"{count}x")):
+                    quarantined = poison["record"]
+                # the culprit is known; no need to keep replaying the
+                # vertex one record at a time
+                self.suspect_vertices.discard(poison["vertex"])
+            self.recovery_log.append({
+                "event": "escalation", "fingerprint": repr(fp),
+                "recurrences": count,
+                "fallback_depth": self._fallback_depth,
+                "quarantined": quarantined})
+
+    def _select_restore_snapshot(self):
+        """Walk the store's recovery chain (newest first) to the newest
+        usable snapshot: entries within the current escalation fallback
+        depth are skipped outright, then each candidate must pass the
+        store's integrity verification and load.  Returns
+        ``(snapshot_id | None, skipped)`` where ``skipped`` records every
+        rejected id with its reason."""
+        store = self.cluster.snapshot_store
+        skipped: List[Dict[str, Any]] = []
+        for depth, sid in enumerate(store.recovery_chain(self.id)):
+            if depth < self._fallback_depth:
+                skipped.append({"snapshot_id": sid,
+                                "reason": "escalation fallback "
+                                          "(deterministic crash replayed "
+                                          "from this epoch)"})
+                continue
+            ok, reason = store.verify(self.id, sid)
+            if not ok:
+                skipped.append({"snapshot_id": sid,
+                                "reason": f"verification failed: {reason}"})
+                continue
+            ok, reason = store.prepare_restore(self.id, sid)
+            if not ok:
+                skipped.append({"snapshot_id": sid,
+                                "reason": f"restore load failed: {reason}"})
+                continue
+            return sid, skipped
+        return None, skipped
+
+    def recovery_diagnostics(self) -> Dict[str, Any]:
+        """Everything the recovery path decided, for job stats, the
+        chaos bench report and the CI artifact: restores with their
+        skipped snapshot ids + reasons, escalations with fingerprints
+        and fallback depths, and the dead-letter accounting."""
+        return {
+            "auto_restarts": self.auto_restarts,
+            "snapshots_aborted": self.snapshots_aborted,
+            "fallback_depth": self._fallback_depth,
+            "suspect_vertices": sorted(self.suspect_vertices),
+            "recovery_log": list(self.recovery_log),
+            "dead_letters": self.dead_letters.summary(),
+            "failures": [repr(f) for f in self.failures],
+        }
+
     def maybe_heal(self, now: float) -> None:
         """Run the pending self-heal restart once its backoff elapsed."""
         if (self.status == JOB_RESTARTING
@@ -402,8 +569,19 @@ class Job:
             self.restart()
 
     def _on_snapshot_complete(self, snapshot_id: int) -> None:
-        self.cluster.snapshot_store.commit(self.id, snapshot_id)
+        store = self.cluster.snapshot_store
+        # job-level replay meta rides the durable manifest so a cold
+        # start (recover_job) can adopt the job's config from disk alone
+        store.set_meta(self.id, snapshot_id, "job", {
+            "name": self.config.name,
+            "guarantee": self.config.processing_guarantee,
+            "snapshot_interval_s": self.config.snapshot_interval_s,
+        })
+        store.commit(self.id, snapshot_id)
         self.snapshots_taken += 1
+        # a freshly committed snapshot is a trusted chain head again: it
+        # includes the progress made after any escalated fallback
+        self._fallback_depth = 0
         # phase-2 release for transactional sinks (paper §4.5), delivered
         # wherever the processors actually live (this thread or a worker
         # process)
@@ -417,7 +595,9 @@ class Job:
 
     def restart(self) -> None:
         """Rebuild the execution on the current topology and restore the
-        latest committed snapshot (paper §4.4 recovery protocol)."""
+        newest *usable* snapshot (paper §4.4 recovery protocol, hardened:
+        the chain is walked with verification + escalation fallback, see
+        :meth:`_select_restore_snapshot`)."""
         self.restarts += 1
         self.status = JOB_RESTARTING
         # drop the old execution (its tasklets/queues/processes die with it)
@@ -426,10 +606,19 @@ class Job:
             self.cluster.backend.stop_execution(old)
             if old.ssctx is not None:
                 self._aborted_before += old.ssctx.aborted_count
+                old.ssctx.retire_aborted()
         self.execution = ExecutionContext(self, self.cluster)
-        committed = self.cluster.snapshot_store.latest_committed(self.id)
-        if committed is not None:
-            self.execution.restore_from_snapshot(committed)
+        sid, skipped = self._select_restore_snapshot()
+        restored_entries = 0
+        if sid is not None:
+            restored_entries = self.execution.restore_from_snapshot(sid)
+        self._restored_sid = sid
+        if skipped or sid is not None:
+            self.recovery_log.append({
+                "event": "restore", "restart": self.restarts,
+                "restored_snapshot": sid, "entries": restored_entries,
+                "skipped": skipped,
+                "fallback_depth": self._fallback_depth})
         self._last_snapshot_at = self.cluster.clock.now()
         # start AFTER the restore: a forking backend must hand workers the
         # restored state
@@ -456,7 +645,9 @@ class JetCluster:
                  backup_count: int = 1,
                  link_latency_s: float = 0.0005,
                  idle_backoff: bool = True,
-                 backend="inproc"):
+                 backend="inproc",
+                 snapshot_dir=None,
+                 snapshot_retain: int = 3):
         self.clock = clock or WallClock()
         self.backend: ExecutionBackend = make_backend(backend)
         if not self.backend.clock_supported(self.clock):
@@ -475,7 +666,16 @@ class JetCluster:
         self.imap_service = IMapService(self.node_ids,
                                         partition_count=partition_count,
                                         backup_count=backup_count)
-        self.snapshot_store = SnapshotStore(self.imap_service)
+        # ``snapshot_dir`` upgrades snapshot storage to the durable tier:
+        # committed snapshots spill to disk as a verified retention chain
+        # of the last ``snapshot_retain`` epochs (state/durable_store.py),
+        # surviving coordinator death (see recover_job) and detecting
+        # corrupt snapshots at restore time
+        if snapshot_dir is not None:
+            self.snapshot_store: SnapshotStore = DurableSnapshotStore(
+                self.imap_service, snapshot_dir, retain=snapshot_retain)
+        else:
+            self.snapshot_store = SnapshotStore(self.imap_service)
         self.jobs: List[Job] = []
         self._next_node_id = n_nodes
         self.backend.bind(self)
@@ -484,6 +684,59 @@ class JetCluster:
     def submit(self, dag: DAG, config: Optional[JobConfig] = None) -> Job:
         job = Job(self, dag, config or JobConfig())
         job.start()
+        self.jobs.append(job)
+        return job
+
+    def recover_job(self, dag: DAG, job_id: Optional[str] = None,
+                    config: Optional[JobConfig] = None) -> Job:
+        """Cold-start adoption: rebuild a job from the durable snapshot
+        chain alone — nothing from the coordinator that wrote it
+        survives.  ``dag`` must be the job's pipeline rebuilt by the
+        caller (processor code is not serialized, matching Jet's
+        resubmit-the-job model); ``job_id`` may be omitted when the
+        store holds exactly one job.  The job's processing guarantee and
+        snapshot cadence are adopted from the newest readable manifest
+        when ``config`` is not given, snapshot ids continue after the
+        chain head, and the usual verified chain walk picks the restore
+        point — so a corrupt head falls back exactly as it would in a
+        live restart."""
+        store = self.snapshot_store
+        jobs = [j for j in store.discover_jobs() if store.recovery_chain(j)]
+        if job_id is None:
+            if len(jobs) != 1:
+                raise ValueError(
+                    f"recover_job needs an explicit job_id: store holds "
+                    f"{jobs!r}")
+            job_id = jobs[0]
+        chain = store.recovery_chain(job_id)
+        if not chain:
+            raise ValueError(f"no durable snapshots for job {job_id!r}")
+        if config is None:
+            meta: Dict[str, Any] = {}
+            for sid in chain:       # newest readable manifest wins
+                manifest = getattr(store, "manifest", lambda *a: None)(
+                    job_id, sid)
+                if manifest and manifest.get("meta", {}).get("job"):
+                    meta = manifest["meta"]["job"]
+                    break
+            config = JobConfig(
+                name=meta.get("name", job_id),
+                processing_guarantee=meta.get("guarantee",
+                                              GUARANTEE_EXACTLY_ONCE),
+                snapshot_interval_s=meta.get("snapshot_interval_s", 1.0))
+        job = Job(self, dag, config, job_id=job_id)
+        job._next_snapshot_id = chain[0] + 1
+        job.execution = ExecutionContext(job, self)
+        sid, skipped = job._select_restore_snapshot()
+        restored_entries = 0
+        if sid is not None:
+            restored_entries = job.execution.restore_from_snapshot(sid)
+        job._restored_sid = sid
+        job.recovery_log.append({
+            "event": "cold_start", "restored_snapshot": sid,
+            "entries": restored_entries, "skipped": skipped,
+            "chain": chain})
+        self.backend.start_execution(job.execution)
         self.jobs.append(job)
         return job
 

@@ -20,6 +20,7 @@ engine-level, not processor-level:
 
 from __future__ import annotations
 
+import pickle as _pickle
 import time as _time
 from typing import Any, Callable, List, Optional, Sequence
 
@@ -62,6 +63,32 @@ class TaskletFailureError(Exception):
         super().__init__(f"tasklet {tasklet.name} failed: {cause!r}")
         self.tasklet = tasklet
         self.cause = cause
+
+
+#: value types whose == / hash are content-based and process-independent
+_ATOMIC_ID = (int, float, str, bytes, bool, type(None))
+
+
+def _stable_id(v):
+    """Content-based stand-in for one identity component.  Atomic values
+    represent themselves; anything else is reduced to its pickle bytes
+    (content-deterministic for the simple record types that flow through
+    pipelines) — never the object's default repr/hash, whose embedded
+    address would not survive a restart or a process boundary."""
+    if type(v) in _ATOMIC_ID:
+        return v
+    try:
+        return _pickle.dumps(v, protocol=4)
+    except Exception:
+        return repr(v)
+
+
+def poison_identity(ev):
+    """Stable, hashable identity of one event for poison-record
+    quarantine: the same record must produce the same identity on every
+    replay, in every process generation, so dead-letter filtering keyed
+    on it survives restarts and cold starts."""
+    return (ev.ts, _stable_id(ev.key), _stable_id(ev.value))
 
 
 class InQueue:
@@ -338,6 +365,17 @@ class SnapshotContext:
         override this with a real deadline."""
         return False
 
+    def retire_aborted(self) -> None:
+        """Destroy the IMap storage of a snapshot that began but will
+        never commit (execution torn down mid-barrier).  Without this the
+        partially-written ``__jet.snapshot.<job>.<id>`` map of every
+        abandoned epoch leaks for the life of the cluster.  Idempotent;
+        a no-op when nothing is in flight."""
+        if self.writer is None or self.completed_id == self.requested_id:
+            return
+        self.writer.store._map(self.writer.job_id,
+                               self.requested_id).destroy()
+
     def begin(self, snapshot_id: int) -> None:
         self.requested_id = snapshot_id
         self._acked = set()
@@ -373,7 +411,9 @@ class ProcessorTasklet:
                  vertex_name: str,
                  global_index: int,
                  snapshot_pid_fn: Optional[Callable[[Any], int]] = None,
-                 is_source: bool = False):
+                 is_source: bool = False,
+                 poison_ids: Optional[frozenset] = None,
+                 pinpoint: bool = False):
         self.name = name
         self.processor = processor
         self.in_queues = in_queues
@@ -388,6 +428,22 @@ class ProcessorTasklet:
         #: per-item type check already runs)
         self._explode_blocks = not getattr(processor, "accepts_blocks",
                                            False)
+        #: quarantined record identities for this vertex (the engine's
+        #: dead-letter escalation, see ``DeadLetterQueue``): events whose
+        #: :func:`poison_identity` matches are dropped before the
+        #: processor sees them
+        self._poison_ids = frozenset(poison_ids) if poison_ids else None
+        #: pinpoint mode: this vertex crashed before and the offending
+        #: record is not yet known — the processor is fed ONE item per
+        #: call so a recurrence is attributable to the exact in-flight
+        #: record (``_process_pinpoint``)
+        self._pinpoint = pinpoint
+        if self._poison_ids is not None or pinpoint:
+            # both modes need per-event granularity: a quarantined or
+            # suspect record inside an EventBlock must be addressable
+            self._explode_blocks = True
+        #: events dropped by quarantine (dead-letter accounting checks)
+        self.poison_dropped = 0
         #: optional non-blocking pump for processors driving asynchronous
         #: device work (core/device_window.py): called once per RUNNING
         #: slice even when no input is pending, so finished device futures
@@ -500,7 +556,14 @@ class ProcessorTasklet:
             for ordinal, inbox in enumerate(self.inboxes):
                 before = len(inbox)
                 if before:
-                    self.processor.process(ordinal, inbox)
+                    if self._poison_ids is not None:
+                        self._drop_quarantined(inbox)
+                    if not len(inbox):
+                        pass        # the whole batch was quarantined
+                    elif self._pinpoint:
+                        self._process_pinpoint(ordinal, inbox)
+                    else:
+                        self.processor.process(ordinal, inbox)
                     after = len(inbox)
                     if not after:
                         self._nonempty_inboxes -= 1
@@ -534,6 +597,53 @@ class ProcessorTasklet:
             self.ssctx.notify_exempt(self)
             progress = True
         return progress
+
+    def _drop_quarantined(self, inbox) -> None:
+        """Filter dead-lettered records out of the inbox before the
+        processor runs (exactly-once on the surviving stream: the
+        quarantined record is accounted for in the engine's dead-letter
+        queue, never processed, never lost twice)."""
+        ids = self._poison_ids
+        items = inbox._items
+        kept = [it for it in items
+                if not isinstance(it, Event) or poison_identity(it) not in ids]
+        dropped = len(items) - len(kept)
+        if dropped:
+            self.poison_dropped += dropped
+            items.clear()
+            items.extend(kept)
+
+    def _process_pinpoint(self, ordinal: int, inbox) -> None:
+        """Feed the processor one item per call.  Some processors pop
+        items only after a successful step, others pop first — so at a
+        raise the inbox head is not a reliable culprit.  With exactly one
+        item in the inbox there is no ambiguity: a raise stamps that
+        record onto the exception (``_jet_poison``), which rides the
+        failure report to the engine's escalation ladder."""
+        items = inbox._items
+        head = items[0]
+        rest = None
+        if len(items) > 1:
+            items.popleft()
+            rest = list(items)
+            items.clear()
+            items.append(head)
+        try:
+            self.processor.process(ordinal, inbox)
+        except BaseException as exc:
+            if (isinstance(head, Event)
+                    and getattr(exc, "_jet_poison", None) is None):
+                try:
+                    exc._jet_poison = {"vertex": self.vertex_name,
+                                       "identity": poison_identity(head),
+                                       "record": repr(head),
+                                       "exact": True}
+                except AttributeError:      # exception types with __slots__
+                    pass
+            raise
+        finally:
+            if rest:
+                items.extend(rest)
 
     def _drain_inputs(self) -> bool:
         """Drain input queues round-robin in batched slices.

@@ -46,6 +46,16 @@ KIND_DELAY_ACK = "delay_ack"
 ALL_KINDS = (KIND_KILL, KIND_STALL, KIND_RAISE, KIND_DROP_ACK,
              KIND_DELAY_ACK)
 
+#: snapshot-corruption kinds: these hit the durable snapshot store on
+#: disk (the chain head at fire time), not a worker — they are injected
+#: by the controller itself, so they work on every backend but need a
+#: :class:`~repro.state.durable_store.DurableSnapshotStore`
+KIND_CORRUPT_FLIP = "corrupt_flip"          # XOR one byte of a segment
+KIND_CORRUPT_TRUNCATE = "corrupt_truncate"  # cut a segment file short
+KIND_CORRUPT_MANIFEST = "corrupt_manifest"  # delete the manifest
+CORRUPTION_KINDS = (KIND_CORRUPT_FLIP, KIND_CORRUPT_TRUNCATE,
+                    KIND_CORRUPT_MANIFEST)
+
 
 class Fault:
     """One planned fault (see module docstring for trigger semantics)."""
@@ -113,6 +123,33 @@ class ChaosSchedule:
                                 params=params))
         return cls(faults, seed=seed)
 
+    @classmethod
+    def corruption_from_seed(cls, seed: int, n_faults: int,
+                             total_results: int,
+                             kinds: Sequence[str] = CORRUPTION_KINDS,
+                             lo_frac: float = 0.15,
+                             hi_frac: float = 0.7) -> "ChaosSchedule":
+        """Corruption plan: each corruption fault is immediately chased
+        by a ``kill`` at the same logical point, so the very next
+        recovery must restore *through* the snapshot that was just
+        corrupted — forcing the verified-fallback path rather than
+        letting a later commit quietly replace the damaged head.  The
+        controller fires both back-to-back within one tick (no commit
+        can slip between them)."""
+        rng = random.Random(seed)
+        lo = max(1, int(total_results * lo_frac))
+        hi = max(lo + 1, int(total_results * hi_frac))
+        points = sorted(rng.sample(range(lo, hi), min(n_faults, hi - lo)))
+        order = list(kinds)
+        rng.shuffle(order)
+        faults = []
+        for i, at in enumerate(points):
+            faults.append(Fault(order[i % len(order)], at,
+                                worker_index=rng.randrange(0, 1 << 16)))
+            faults.append(Fault(KIND_KILL, at,
+                                worker_index=rng.randrange(0, 1 << 16)))
+        return cls(faults, seed=seed)
+
     def pending(self) -> Optional[Fault]:
         for f in self.faults:
             if not f.fired and not f.skipped:
@@ -125,6 +162,43 @@ class ChaosSchedule:
 
     def fired(self) -> List[Fault]:
         return [f for f in self.faults if f.fired]
+
+
+def corrupt_snapshot(store, job_id: str, snapshot_id: int, kind: str,
+                     index: int = 0) -> bool:
+    """Damage one on-disk snapshot the way real storage does: flip a byte
+    mid-segment, truncate a segment, or lose the manifest.  ``store``
+    must expose the durable path helpers
+    (:class:`~repro.state.durable_store.DurableSnapshotStore`).  Returns
+    False when the damage could not be applied."""
+    if kind == KIND_CORRUPT_MANIFEST:
+        try:
+            store.manifest_path(job_id, snapshot_id).unlink()
+            return True
+        except OSError:
+            return False
+    segs = store.segment_paths(job_id, snapshot_id)
+    if not segs:
+        return False
+    path = segs[index % len(segs)]
+    try:
+        size = path.stat().st_size
+        if kind == KIND_CORRUPT_FLIP:
+            if size == 0:
+                return False
+            with open(path, "r+b") as f:
+                f.seek(size // 2)
+                byte = f.read(1)
+                f.seek(size // 2)
+                f.write(bytes([byte[0] ^ 0xFF]))
+            return True
+        if kind == KIND_CORRUPT_TRUNCATE:
+            with open(path, "r+b") as f:
+                f.truncate(max(0, size // 2))
+            return True
+    except OSError:
+        return False
+    return False
 
 
 class ChaosController:
@@ -156,30 +230,66 @@ class ChaosController:
 
     def tick(self) -> bool:
         """Fire the next due fault, if any.  Returns True when a fault
-        was injected this call."""
-        fault = self.schedule.pending()
-        if fault is None:
-            return False
-        job = self.job
-        if job.status != JOB_RUNNING or job.execution is None:
-            return False
-        if len(self.sink) < fault.at_result:
-            return False
-        if self.require_snapshot and job.snapshots_taken < 1:
-            ssctx = getattr(job.execution, "ssctx", None)
-            barrier_inflight = (
-                fault.kind in (KIND_DROP_ACK, KIND_DELAY_ACK)
-                and getattr(ssctx, "requested_id", 0) >= 1)
-            if not barrier_inflight:
-                return False
-        injected = self.cluster.backend.inject_fault(
-            job.execution, fault.kind, fault.worker_index, **fault.params)
-        if not injected:
-            fault.skipped = True
+        was injected this call.
+
+        A fired *corruption* fault keeps the loop going, so the fault
+        scheduled at the same logical point (its paired ``kill``) lands
+        in the same tick: no ``cluster.step()`` — and therefore no
+        commit that would replace the corrupted chain head — can run
+        between the damage and the failure that must recover through
+        it."""
+        fired_any = False
+        while True:
+            fault = self.schedule.pending()
+            if fault is None:
+                return fired_any
+            job = self.job
+            if job.status != JOB_RUNNING or job.execution is None:
+                return fired_any
+            if len(self.sink) < fault.at_result:
+                return fired_any
+            if fault.kind in CORRUPTION_KINDS:
+                injected = self._inject_store_fault(fault)
+                if injected is None:
+                    # no committed chain head yet: stay pending
+                    return fired_any
+            else:
+                if self.require_snapshot and job.snapshots_taken < 1:
+                    ssctx = getattr(job.execution, "ssctx", None)
+                    barrier_inflight = (
+                        fault.kind in (KIND_DROP_ACK, KIND_DELAY_ACK)
+                        and getattr(ssctx, "requested_id", 0) >= 1)
+                    if not barrier_inflight:
+                        return fired_any
+                injected = self.cluster.backend.inject_fault(
+                    job.execution, fault.kind, fault.worker_index,
+                    **fault.params)
+            if not injected:
+                fault.skipped = True
+                self.log.append(fault)
+                return fired_any
+            fault.fired = True
+            fault.fired_at = _time.monotonic()
+            fault.fired_at_result = len(self.sink)
             self.log.append(fault)
+            fired_any = True
+            if fault.kind not in CORRUPTION_KINDS:
+                return fired_any
+
+    def _inject_store_fault(self, fault: Fault):
+        """Corrupt the durable chain head on disk.  True = injected,
+        False = the store cannot express the kind (skipped), None = no
+        committed chain head yet (fault stays pending)."""
+        store = getattr(self.cluster, "snapshot_store", None)
+        if not hasattr(store, "segment_paths"):
             return False
-        fault.fired = True
-        fault.fired_at = _time.monotonic()
-        fault.fired_at_result = len(self.sink)
-        self.log.append(fault)
-        return True
+        chain = store.recovery_chain(self.job.id)
+        if not chain:
+            return None
+        sid = chain[0]
+        ok = corrupt_snapshot(store, self.job.id, sid, fault.kind,
+                              index=fault.worker_index)
+        if ok:
+            # record the victim epoch for recovery-gap attribution
+            fault.params["snapshot_id"] = sid
+        return ok

@@ -45,6 +45,22 @@ from ..core.backend import (FAILURE_CRASHED, FAILURE_ERROR, FAILURE_HUNG,
 DEFAULT_HEARTBEAT_TIMEOUT_S = 5.0
 
 
+def failure_fingerprint(failure: WorkerFailure, restored_snapshot_id):
+    """Identity of a detected failure for crash-loop escalation.
+
+    ``(vertex, exception type, restored snapshot id)`` when the failure
+    is attributable to a processor raise; the worker location and failure
+    kind otherwise.  Keying on the *restored* snapshot id is what makes
+    the fingerprint mean "deterministic": the same vertex raising the
+    same exception twice after restoring the same epoch is replaying an
+    identical crash, and the engine escalates (fall back a chain entry /
+    quarantine the stamped poison record) instead of burning the restart
+    budget on it.  See ``Job._note_failures`` in core/engine.py."""
+    return (failure.vertex or failure.key,
+            failure.exc_type or failure.kind,
+            restored_snapshot_id)
+
+
 class WorkerSupervisor:
     """Watches the worker processes of one execution attempt."""
 

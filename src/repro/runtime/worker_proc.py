@@ -292,13 +292,32 @@ def _worker_main(execution, key: Location, conn) -> None:
                     _time.sleep(0)
     except (EOFError, BrokenPipeError, KeyboardInterrupt):
         pass
-    except BaseException:
+    except BaseException as e:
         # ship the full traceback to the coordinator (it becomes the
         # WorkerFailure detail) and exit nonzero WITHOUT re-raising:
         # multiprocessing's bootstrap would print a duplicate traceback
-        # for a failure the parent is about to handle and heal
+        # for a failure the parent is about to handle and heal.  The
+        # attribution info (vertex, root exception type, any pinpointed
+        # poison record) rides along so the engine's failure
+        # fingerprinting works across the process boundary.
+        cause = getattr(e, "cause", e)
+        info = {
+            "vertex": getattr(getattr(e, "tasklet", None),
+                              "vertex_name", None),
+            "exc_type": type(cause).__name__,
+            "poison": getattr(cause, "_jet_poison", None),
+        }
         try:
-            conn.send(("error", traceback.format_exc()))
+            conn.send(("error", traceback.format_exc(), info))
+        except Exception:
+            try:
+                # a poison payload that does not pickle must not mask
+                # the failure report itself
+                info["poison"] = None
+                conn.send(("error", traceback.format_exc(), info))
+            except Exception:
+                pass
+        try:
             conn.close()
         except Exception:
             pass
@@ -382,16 +401,31 @@ class MpSnapshotContext(SnapshotContext):
         self._maybe_complete()
 
     def abort(self, reason: str = "") -> None:
-        """Abort the in-flight snapshot: discard buffered entries, leave
-        the last committed snapshot authoritative, and free the job to
-        schedule a new snapshot.  No commit, no ``on_complete``."""
+        """Abort the in-flight snapshot: discard buffered entries, retire
+        the ongoing snapshot's IMap storage, leave the last committed
+        snapshot authoritative, and free the job to schedule a new
+        snapshot.  No commit, no ``on_complete``."""
         if self.completed_id == self.requested_id:
             return      # nothing in flight
         self._entries = []
         self._await = set()
         self._deadline = None
+        # destroy the aborted epoch's IMap storage BEFORE marking it
+        # complete: entries may have landed there (e.g. a partial
+        # put_many, or a restore that reused the id) and nothing will
+        # ever commit or retire this id again — without the destroy the
+        # __jet.snapshot.<job>.<id> map leaks for the life of the cluster
+        self.retire_aborted()
         self.completed_id = self.requested_id
         self.aborted_count += 1
+
+    def retire_aborted(self) -> None:
+        # the mp context writes through store_writer, not the base
+        # class's writer slot
+        if (self.store_writer is not None
+                and self.completed_id != self.requested_id):
+            store = self.store_writer.store
+            store._map(self.store_writer.job_id, self.requested_id).destroy()
 
     def check_timeout(self) -> bool:
         if (self.completed_id != self.requested_id
@@ -666,12 +700,16 @@ class MultiprocessBackend(ExecutionBackend):
                     # its exit is imminent; record the failure here (with
                     # the full traceback) instead of crashing the driver
                     h.alive = False
+                    info = msg[2] if len(msg) > 2 else {}
                     if detect:
                         if supervisor is not None:
                             supervisor.mark_reported(h.key)
                         data["failures"].append(WorkerFailure(
                             FAILURE_ERROR, key=h.key, pid=h.proc.pid,
-                            detail=f"worker {h.key} raised:\n{msg[1]}"))
+                            detail=f"worker {h.key} raised:\n{msg[1]}",
+                            vertex=info.get("vertex"),
+                            exc_type=info.get("exc_type"),
+                            poison=info.get("poison")))
                     execution.ssctx.worker_gone(h.key, crashed=True)
         except (EOFError, OSError):
             # dead pipe: never raise — mark the handle dead and leave

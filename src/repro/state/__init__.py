@@ -4,5 +4,7 @@ in-memory maps, snapshot store, failover and rebalancing (paper §4)."""
 from .partition import PartitionTable
 from .imap import IMapService, IMap
 from .snapshot_store import SnapshotStore
+from .durable_store import DurableSnapshotStore
 
-__all__ = ["PartitionTable", "IMapService", "IMap", "SnapshotStore"]
+__all__ = ["PartitionTable", "IMapService", "IMap", "SnapshotStore",
+           "DurableSnapshotStore"]

@@ -5,6 +5,23 @@ computation's key partitioning, so a processor's state snapshot lives on
 the same member as the processor (primary) plus its backups.  Snapshots are
 two-phase: entries accumulate under an *ongoing* id and become visible to
 recovery only after :meth:`commit` (all tasklets acked the barrier).
+
+Recovery speaks to the store through three hooks that this in-memory
+base class implements trivially and the durable subclass
+(:class:`~repro.state.durable_store.DurableSnapshotStore`) makes real:
+
+* :meth:`recovery_chain` — candidate snapshot ids, newest first.  Here:
+  at most the single committed id.  Durable: the on-disk retention chain.
+* :meth:`verify` — integrity check before a restore is attempted.  Here:
+  always passes (process memory does not rot within one process
+  lifetime).  Durable: manifest + per-segment CRC32.
+* :meth:`prepare_restore` — materialize the chosen snapshot for
+  ``entries_for_partition``.  Here: a no-op (it is already the live
+  IMap).  Durable: rebuild the IMap from verified disk segments.
+
+The engine's ``Job._select_restore_snapshot`` walks the chain through
+these hooks, so every backend and both store flavours share one recovery
+path.
 """
 
 from __future__ import annotations
@@ -101,6 +118,26 @@ class SnapshotStore:
 
     def latest_committed(self, job_id: str) -> Optional[int]:
         return self.committed.get(job_id)
+
+    # -- recovery-chain hooks (see module docstring) ---------------------------
+    def recovery_chain(self, job_id: str) -> List[int]:
+        """Candidate snapshot ids for recovery, newest first."""
+        sid = self.committed.get(job_id)
+        return [] if sid is None else [sid]
+
+    def verify(self, job_id: str, snapshot_id: int) -> Tuple[bool, str]:
+        """(ok, reason) — in-memory snapshots have nothing to verify."""
+        return True, ""
+
+    def prepare_restore(self, job_id: str,
+                        snapshot_id: int) -> Tuple[bool, str]:
+        """Materialize ``snapshot_id`` for ``entries_for_partition``;
+        (ok, reason).  The in-memory store already holds it live."""
+        return True, ""
+
+    def discover_jobs(self) -> List[str]:
+        """Job ids with at least one committed snapshot."""
+        return sorted(self.committed)
 
     def set_meta(self, job_id: str, snapshot_id: int, key: str, value) -> None:
         self.meta.setdefault(job_id, {}).setdefault(snapshot_id, {})[key] = value
