@@ -1,6 +1,6 @@
 """jetlint — AST contract checker for the Jet reproduction.
 
-Four passes enforce the engine's load-bearing conventions (see
+Seven passes enforce the engine's load-bearing conventions (see
 ROADMAP.md "Machine-checked contracts"):
 
 1. ``snapshot-missing-save`` / ``snapshot-missing-restore`` — every
@@ -12,7 +12,15 @@ ROADMAP.md "Machine-checked contracts"):
    hot paths never block a worker thread or grow without bound;
 4. ``block-form-impure`` / ``block-form-mismatch`` — block forms are
    pure column expressions and ``accepts_blocks`` declarations match
-   the code.
+   the code;
+5. ``ring-role-violation`` — SPSC discipline on ring transports: one
+   writing side per attribute/cursor, one process role per ring end;
+6. ``protocol-unhandled-message`` / ``protocol-dead-arm`` — every
+   tagged-tuple control message sent has a handler arm on the other
+   side, and every arm has a sender;
+7. ``resource-leak`` — every ``SharedMemory``/``Process``/``Pipe``/
+   ``open`` acquisition has release evidence on all paths (try/finally,
+   ``with``, ``weakref.finalize``, or ownership transfer).
 
 Suppression syntax (reason is mandatory)::
 
@@ -34,7 +42,8 @@ from __future__ import annotations
 import os
 from typing import Dict, Iterable, List, Optional, Tuple
 
-from . import block_form, hot_path, snapshot_aliasing, snapshot_completeness
+from . import (block_form, hot_path, protocol, resource_leak, ring_roles,
+               snapshot_aliasing, snapshot_completeness)
 from .model import AnalysisContext, Finding, ModuleInfo
 
 #: rule name -> one-line description (``--list-rules``)
@@ -53,12 +62,21 @@ RULES: Dict[str, str] = {
         "block form uses non-whitelisted ops (loops, mutation, calls)",
     "block-form-mismatch":
         "accepts_blocks declaration disagrees with the process path",
+    "ring-role-violation":
+        "SPSC role discipline broken on a ring transport",
+    "protocol-unhandled-message":
+        "control-message tag sent with no handler arm on the other side",
+    "protocol-dead-arm":
+        "dispatch arm for a tag no sender ever produces",
+    "resource-leak":
+        "OS resource acquired without release evidence on all paths",
     "bad-suppression":
         "jetlint disable comment without a `-- reason` string",
 }
 
 PASSES = (snapshot_completeness.run, snapshot_aliasing.run,
-          hot_path.run, block_form.run)
+          hot_path.run, block_form.run, ring_roles.run, protocol.run,
+          resource_leak.run)
 
 
 def iter_py_files(paths: Iterable[str]) -> List[str]:
@@ -116,9 +134,18 @@ def analyze_sources(sources: Dict[str, str],
 
 
 def run_paths(paths: Iterable[str],
-              rules: Optional[Iterable[str]] = None
-              ) -> Tuple[List[Finding], int, List[Tuple[str, int]]]:
-    """(findings, files_scanned, unused suppression sites)."""
+              rules: Optional[Iterable[str]] = None,
+              only_files: Optional[Iterable[str]] = None
+              ) -> Tuple[List[Finding], int,
+                         List[Tuple[str, int, Tuple[str, ...]]]]:
+    """(findings, files_scanned, unused suppression sites).
+
+    ``only_files`` filters the *reported* findings and unused
+    suppressions to those paths while still building the analysis
+    context from the full tree — cross-module passes (protocol
+    conformance, reachability) need the whole registry even when only
+    one file changed (the ``--changed`` incremental mode).
+    """
     files = iter_py_files(paths)
     modules: List[ModuleInfo] = []
     for path in files:
@@ -128,6 +155,13 @@ def run_paths(paths: Iterable[str],
     if rules:
         wanted = set(rules)
         findings = [f for f in findings if f.rule in wanted]
-    unused = sorted((m.path, s.line) for m in modules
+    report_mods = modules
+    if only_files is not None:
+        keep = {os.path.normpath(p) for p in only_files}
+        findings = [f for f in findings
+                    if os.path.normpath(f.path) in keep]
+        report_mods = [m for m in modules
+                       if os.path.normpath(m.path) in keep]
+    unused = sorted((m.path, s.line, s.rules) for m in report_mods
                     for s in m.suppressions if not s.used)
     return findings, len(files), unused

@@ -1,13 +1,22 @@
 """CLI: ``python -m repro.analysis [paths...] [--json] [--out FILE]``.
 
 Exits 1 when any unsuppressed finding remains — the CI gate.
+
+``--changed`` is the incremental mode for pre-commit hooks: findings are
+reported only for files git considers modified (worktree diff against
+HEAD plus untracked files), but the analysis context is still built from
+the full tree — the cross-module passes (protocol conformance, hot-path
+reachability, ring role attribution) are only sound with the complete
+registry in view.
 """
 
 from __future__ import annotations
 
 import argparse
 import os
+import subprocess
 import sys
+from typing import List, Optional, Set
 
 from . import RULES, run_paths
 from .report import render_console, render_json, split
@@ -22,18 +31,48 @@ def _default_paths() -> list:
     return [os.path.dirname(os.path.dirname(os.path.abspath(__file__)))]
 
 
+def _changed_files() -> Optional[Set[str]]:
+    """Python files git sees as modified (vs HEAD) or untracked, as
+    paths relative to the current directory; None when git is absent."""
+    try:
+        top = subprocess.run(
+            ["git", "rev-parse", "--show-toplevel"],
+            capture_output=True, text=True, check=True).stdout.strip()
+        listings = [
+            subprocess.run(["git", "diff", "--name-only", "HEAD"],
+                           capture_output=True, text=True,
+                           check=True).stdout,
+            subprocess.run(
+                ["git", "ls-files", "--others", "--exclude-standard"],
+                capture_output=True, text=True, check=True).stdout,
+        ]
+    except (OSError, subprocess.CalledProcessError):
+        return None
+    changed: Set[str] = set()
+    for listing in listings:
+        for name in listing.splitlines():
+            name = name.strip()
+            if name.endswith(".py"):
+                changed.add(os.path.relpath(os.path.join(top, name)))
+    return changed
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="jetlint: AST contract checker for the Jet repro "
                     "(snapshot completeness/aliasing, hot-path "
-                    "non-blocking, block-form purity)")
+                    "non-blocking, block-form purity, SPSC ring roles, "
+                    "protocol conformance, resource leaks)")
     ap.add_argument("paths", nargs="*", help="files or directories "
                     "(default: src/repro)")
     ap.add_argument("--json", action="store_true", dest="as_json",
                     help="emit a JSON report instead of console lines")
     ap.add_argument("--out", help="also write the report to this file")
     ap.add_argument("--rules", help="comma-separated rule subset to run")
+    ap.add_argument("--changed", action="store_true",
+                    help="report findings only for git-modified files "
+                         "(the analysis still sees the full tree)")
     ap.add_argument("--show-suppressed", action="store_true",
                     help="list suppressed findings in console output")
     ap.add_argument("--list-rules", action="store_true",
@@ -53,8 +92,19 @@ def main(argv=None) -> int:
             print(f"unknown rule(s): {', '.join(unknown)}", file=sys.stderr)
             return 2
 
+    only_files: Optional[List[str]] = None
+    if args.changed:
+        changed = _changed_files()
+        if changed is None:
+            print("jetlint: --changed needs a git checkout",
+                  file=sys.stderr)
+            return 2
+        only_files = sorted(changed)
+        print(f"jetlint: --changed filter: {len(only_files)} "
+              f"modified python file(s)", file=sys.stderr)
+
     paths = args.paths or _default_paths()
-    findings, files, unused = run_paths(paths, rules)
+    findings, files, unused = run_paths(paths, rules, only_files=only_files)
     if args.as_json:
         report = render_json(findings, files, unused)
     else:

@@ -15,7 +15,16 @@ The analyzer is a thin AST framework: each pass is a function
   covers its own line only;
 * **MethodFlow** — per-method self-attribute dataflow with local alias
   tracking (``frames = self.frames; frames[k] = ...`` counts as a write
-  to ``self.frames``), the workhorse of the snapshot passes.
+  to ``self.frames``), the workhorse of the snapshot passes.  Besides
+  mutator calls it records *every* method call whose receiver taints to a
+  ``self`` attribute (``attr_calls``) — the ring-role pass reads queue
+  roles (offer vs poll) off that registry;
+* **process roles** — :func:`child_spans` computes which lines of a
+  module run inside a forked worker process: the body of the
+  ``_worker_main`` entry function (the multiprocess backend's child entry
+  convention) plus every module-level function transitively reachable
+  from it by plain-name calls.  The ring-role and protocol passes use it
+  to tell coordinator-side code from worker-side code.
 
 The alias model is deliberately simple — a single forward walk, no
 fixpoint — and errs conservative: an alias carries the *set* of
@@ -248,7 +257,11 @@ class MethodFlow:
     methods invoked on ``self`` (directly or through a bound-method
     alias); ``mutator_calls`` records (attr, method, line) for every
     container-mutating call that resolved to a self attribute; ``writes``
-    includes those.  ``element_container_attrs`` holds attributes for
+    includes those.  ``attr_calls`` is the superset registry: (attr,
+    method, line) for EVERY method call whose receiver taints to a self
+    attribute (``self.q.offer(x)``, ``iq.q.poll()`` with ``iq`` aliasing
+    an element of ``self.in_queues``) — role analyses read producer/
+    consumer usage off it without caring about mutation.  ``element_container_attrs`` holds attributes for
     which this method shows evidence that the *elements* are mutable
     containers (``self.x.setdefault(k, []).append(...)``,
     ``self.x[k] = []``).
@@ -260,6 +273,7 @@ class MethodFlow:
     write_lines: Dict[str, int] = field(default_factory=dict)
     self_calls: Set[str] = field(default_factory=set)
     mutator_calls: List[Tuple[str, str, int]] = field(default_factory=list)
+    attr_calls: List[Tuple[str, str, int]] = field(default_factory=list)
     element_container_attrs: Set[str] = field(default_factory=set)
     #: local name -> set of (attr, depth) this name may alias.  depth 0 =
     #: the attribute's value itself, 1 = an element/derived view of it.
@@ -276,6 +290,7 @@ class MethodFlow:
         self.write_lines = {}
         self.self_calls = set()
         self.mutator_calls = []
+        self.attr_calls = []
         self.element_container_attrs = set()
         self.aliases = {}
         self.container_resets = set()
@@ -467,9 +482,12 @@ class MethodFlow:
             if isinstance(fn.value, ast.Name) \
                     and fn.value.id == self._self_name:
                 self.self_calls.add(fn.attr)
-            elif fn.attr in MUTATOR_METHODS:
+            else:
                 for attr, _d in base_taint:
-                    self.mutator_calls.append((attr, fn.attr, call.lineno))
+                    self.attr_calls.append((attr, fn.attr, call.lineno))
+                if fn.attr in MUTATOR_METHODS:
+                    for attr, _d in base_taint:
+                        self.mutator_calls.append((attr, fn.attr, call.lineno))
             # `self.x.setdefault(k, []).append(...)`: elements of x are
             # mutable containers
             if fn.attr == "setdefault" and len(call.args) >= 2 \
@@ -619,6 +637,40 @@ def dotted_name(expr: ast.expr, aliases: Dict[str, str]) -> Optional[str]:
         return None
     parts.append(root)
     return ".".join(reversed(parts))
+
+
+WORKER_ENTRY = "_worker_main"
+
+
+def child_spans(mod: ModuleInfo) -> List[Tuple[int, int]]:
+    """(lineno, end_lineno) ranges of code that runs inside a forked worker
+    process: the body of the module's ``_worker_main`` entry function plus
+    every module-level function transitively reachable from it through
+    plain-name calls.  Empty when the module has no worker entry — the
+    ring-role pass then treats the whole module as single-role."""
+    if WORKER_ENTRY not in mod.functions:
+        return []
+    spans: List[Tuple[int, int]] = []
+    seen: Set[str] = set()
+    stack = [WORKER_ENTRY]
+    while stack:
+        name = stack.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        fn = mod.functions.get(name)
+        if fn is None:
+            continue
+        spans.append((fn.lineno, fn.end_lineno or fn.lineno))
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+                if node.func.id in mod.functions:
+                    stack.append(node.func.id)
+    return spans
+
+
+def in_spans(line: int, spans: List[Tuple[int, int]]) -> bool:
+    return any(lo <= line <= hi for lo, hi in spans)
 
 
 def _string_elements(expr: ast.expr) -> Set[str]:

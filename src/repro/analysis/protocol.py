@@ -1,0 +1,217 @@
+"""Pass 6 — worker control-protocol conformance.
+
+The coordinator and its worker processes speak tagged tuples over pipes:
+``("snapshot", n)``, ``("hb",)``, ``("ack", n, entries)``, ...  The PR 7
+wedge was a *protocol hole* — a legal message arriving in a state the
+receiver had no arm for — and nothing but convention keeps the two sides'
+vocabularies aligned as tags are added.
+
+This pass closes the loop inside every worker-entry module (one defining
+``_worker_main``; see :func:`model.child_spans`):
+
+* **senders** — every ``X.send((<tag literal>, ...))`` and every literal
+  tuple handed to a ``.broadcast(...)`` call, classified coordinator-side
+  or worker-side by whether the call site is worker-reachable;
+* **dispatches** — every receive loop: a scope that binds ``msg =
+  conn.recv()`` and compares ``msg[0]`` (directly or through ``op =
+  msg[0]``) against string tags.
+
+Checks, per direction (coordinator→worker and worker→coordinator):
+
+* ``protocol-unhandled-message`` — a sent tag missing from a receiving
+  dispatch's arms (only dispatches with >= 2 arms count as full
+  dispatches; a single-arm compare is a filter, not a receive loop), or
+  a tag sent when the other side has no dispatch at all;
+* ``protocol-dead-arm`` — a dispatch arm whose tag no sender on the
+  other side ever produces (dead protocol surface, or a tag someone
+  renamed on one side only).
+
+Tags must be string literals (or module-level string constants) —
+dynamic tags are invisible to this pass and should be avoided in
+protocol code.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from .model import (AnalysisContext, Finding, ModuleInfo, child_spans,
+                    in_spans)
+
+SEND_ATTRS = frozenset({"send"})
+BROADCAST_ATTRS = frozenset({"broadcast"})
+#: a scope needs this many distinct arms to count as a full dispatch
+MIN_DISPATCH_ARMS = 2
+
+
+@dataclass
+class _Send:
+    tag: str
+    line: int
+    role: str           # "worker" | "coordinator"
+
+
+@dataclass
+class _Dispatch:
+    role: str
+    recv_line: int
+    arms: Dict[str, int] = field(default_factory=dict)   # tag -> line
+
+
+def _module_consts(mod: ModuleInfo) -> Dict[str, str]:
+    out: Dict[str, str] = {}
+    for stmt in mod.tree.body:
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name) \
+                and isinstance(stmt.value, ast.Constant) \
+                and isinstance(stmt.value.value, str):
+            out[stmt.targets[0].id] = stmt.value.value
+    return out
+
+
+def _tuple_tag(expr: ast.expr, consts: Dict[str, str]) -> Optional[str]:
+    if not (isinstance(expr, ast.Tuple) and expr.elts):
+        return None
+    head = expr.elts[0]
+    if isinstance(head, ast.Constant) and isinstance(head.value, str):
+        return head.value
+    if isinstance(head, ast.Name):
+        return consts.get(head.id)
+    return None
+
+
+def _own_nodes(fn: ast.AST):
+    """Walk ``fn`` without descending into nested function/class scopes
+    (those are analyzed as their own scopes)."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _scan_scope(fn: ast.AST, role: str, consts: Dict[str, str],
+                sends: List[_Send], dispatches: List[_Dispatch]) -> None:
+    recv_vars: Set[str] = set()
+    tag_vars: Set[str] = set()
+    recv_line = 0
+    arms: Dict[str, int] = {}
+    nodes = list(_own_nodes(fn))
+    # visit order is not source order: resolve the recv-var and tag-var
+    # bindings first, then read compares/sends against the full sets
+    for node in nodes:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and isinstance(node.value, ast.Call) \
+                and isinstance(node.value.func, ast.Attribute) \
+                and node.value.func.attr == "recv":
+            recv_vars.add(node.targets[0].id)
+            if not recv_line or node.lineno < recv_line:
+                recv_line = node.lineno
+    for node in nodes:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and isinstance(node.value, ast.Subscript) \
+                and isinstance(node.value.value, ast.Name) \
+                and node.value.value.id in recv_vars \
+                and isinstance(node.value.slice, ast.Constant) \
+                and node.value.slice.value == 0:
+            tag_vars.add(node.targets[0].id)
+    for node in nodes:
+        if isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Attribute):
+            if node.func.attr in SEND_ATTRS and node.args:
+                tag = _tuple_tag(node.args[0], consts)
+                if tag is not None:
+                    sends.append(_Send(tag, node.lineno, role))
+            elif node.func.attr in BROADCAST_ATTRS:
+                for arg in node.args:
+                    tag = _tuple_tag(arg, consts)
+                    if tag is not None:
+                        sends.append(_Send(tag, node.lineno, role))
+                        break
+        elif isinstance(node, ast.Compare) and len(node.ops) == 1 \
+                and len(node.comparators) == 1:
+            left, cmp = node.left, node.comparators[0]
+            is_tag = ((isinstance(left, ast.Name) and left.id in tag_vars)
+                      or (isinstance(left, ast.Subscript)
+                          and isinstance(left.value, ast.Name)
+                          and left.value.id in recv_vars
+                          and isinstance(left.slice, ast.Constant)
+                          and left.slice.value == 0))
+            if not is_tag:
+                continue
+            if isinstance(node.ops[0], ast.Eq):
+                if isinstance(cmp, ast.Constant) \
+                        and isinstance(cmp.value, str):
+                    arms.setdefault(cmp.value, node.lineno)
+            elif isinstance(node.ops[0], ast.In):
+                if isinstance(cmp, (ast.Tuple, ast.List, ast.Set)):
+                    for e in cmp.elts:
+                        if isinstance(e, ast.Constant) \
+                                and isinstance(e.value, str):
+                            arms.setdefault(e.value, node.lineno)
+    if arms:
+        dispatches.append(_Dispatch(role, recv_line or fn.lineno, arms))
+
+
+def _analyze_module(mod: ModuleInfo, findings: List[Finding]) -> None:
+    spans = child_spans(mod)
+    if not spans:
+        return
+    consts = _module_consts(mod)
+    sends: List[_Send] = []
+    dispatches: List[_Dispatch] = []
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            role = "worker" if in_spans(node.lineno, spans) \
+                else "coordinator"
+            _scan_scope(node, role, consts, sends, dispatches)
+    for role, other in (("worker", "coordinator"),
+                        ("coordinator", "worker")):
+        sent: Dict[str, int] = {}
+        for s in sends:
+            if s.role == role and (s.tag not in sent
+                                   or s.line < sent[s.tag]):
+                sent[s.tag] = s.line
+        receivers = [d for d in dispatches if d.role == other]
+        full = [d for d in receivers if len(d.arms) >= MIN_DISPATCH_ARMS]
+        for tag in sorted(sent):
+            if not full:
+                findings.append(Finding(
+                    "protocol-unhandled-message", mod.path, sent[tag],
+                    f"{role} code sends (\"{tag}\", ...) but no "
+                    f"{other}-side dispatch (recv loop with >= "
+                    f"{MIN_DISPATCH_ARMS} arms) exists in this module "
+                    f"to handle it"))
+                continue
+            for d in full:
+                if tag not in d.arms:
+                    findings.append(Finding(
+                        "protocol-unhandled-message", mod.path,
+                        d.recv_line,
+                        f"{other}-side dispatch handles "
+                        f"{sorted(d.arms)} but not \"{tag}\" (sent by "
+                        f"{role} code at line {sent[tag]}); an unhandled "
+                        f"tag is the PR 7 wedge shape — every legal "
+                        f"message needs an arm"))
+        for d in receivers:
+            for tag in sorted(d.arms):
+                if tag not in sent:
+                    findings.append(Finding(
+                        "protocol-dead-arm", mod.path, d.arms[tag],
+                        f"{other}-side dispatch arm \"{tag}\" has no "
+                        f"{role}-side sender in this module; dead arms "
+                        f"hide renamed or removed tags"))
+
+
+def run(ctx: AnalysisContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in ctx.modules:
+        _analyze_module(mod, findings)
+    return findings

@@ -1,4 +1,12 @@
-"""Console and JSON reporters for jetlint findings."""
+"""Console and JSON reporters for jetlint findings.
+
+Besides the findings themselves, both reporters carry the *suppression
+inventory*: per rule, how many findings are currently argued-safe
+(suppressed with a reason) and how many suppression comments no longer
+match any finding.  The inventory is the early-warning channel for
+suppression rot — an unused suppression means either the bug shape was
+fixed (delete the comment) or the pass stopped seeing it (fix the pass).
+"""
 
 from __future__ import annotations
 
@@ -7,6 +15,9 @@ from typing import Dict, List, Tuple
 
 from .model import Finding
 
+#: an unused suppression site: (path, line, rules the comment names)
+UnusedSite = Tuple[str, int, Tuple[str, ...]]
+
 
 def split(findings: List[Finding]) -> Tuple[List[Finding], List[Finding]]:
     active = [f for f in findings if not f.suppressed]
@@ -14,8 +25,26 @@ def split(findings: List[Finding]) -> Tuple[List[Finding], List[Finding]]:
     return active, suppressed
 
 
+def suppression_inventory(findings: List[Finding],
+                          unused: List[UnusedSite]
+                          ) -> Dict[str, Dict[str, int]]:
+    """Per-rule counts of suppressed findings and unused suppressions."""
+    inv: Dict[str, Dict[str, int]] = {}
+
+    def slot(rule: str) -> Dict[str, int]:
+        return inv.setdefault(rule, {"suppressed": 0, "unused": 0})
+
+    for f in findings:
+        if f.suppressed:
+            slot(f.rule)["suppressed"] += 1
+    for _path, _line, rules in unused:
+        for rule in rules:
+            slot(rule)["unused"] += 1
+    return inv
+
+
 def render_console(findings: List[Finding], files: int,
-                   unused_suppressions: List[Tuple[str, int]],
+                   unused_suppressions: List[UnusedSite],
                    show_suppressed: bool = False) -> str:
     active, suppressed = split(findings)
     lines: List[str] = []
@@ -25,8 +54,9 @@ def render_console(findings: List[Finding], files: int,
         for f in sorted(suppressed, key=lambda f: (f.path, f.line)):
             lines.append(f"{f.path}:{f.line}: [suppressed:{f.rule}] "
                          f"{f.message} (reason: {f.reason})")
-    for path, line in unused_suppressions:
-        lines.append(f"{path}:{line}: note: unused jetlint suppression")
+    for path, line, rules in unused_suppressions:
+        lines.append(f"{path}:{line}: note: unused jetlint suppression "
+                     f"({', '.join(rules)})")
     lines.append(
         f"jetlint: {len(active)} finding(s), {len(suppressed)} suppressed, "
         f"{files} file(s) scanned")
@@ -34,21 +64,24 @@ def render_console(findings: List[Finding], files: int,
 
 
 def render_json(findings: List[Finding], files: int,
-                unused_suppressions: List[Tuple[str, int]]) -> str:
+                unused_suppressions: List[UnusedSite]) -> str:
     active, suppressed = split(findings)
     counts: Dict[str, int] = {}
     for f in active:
         counts[f.rule] = counts.get(f.rule, 0) + 1
     doc = {
         "tool": "jetlint",
-        "version": 1,
+        "version": 2,
         "files_scanned": files,
         "unsuppressed": len(active),
         "suppressed": len(suppressed),
         "counts_by_rule": counts,
+        "suppression_inventory": suppression_inventory(
+            findings, unused_suppressions),
         "findings": [f.to_json() for f in sorted(
             findings, key=lambda f: (f.path, f.line, f.rule))],
         "unused_suppressions": [
-            {"path": p, "line": ln} for p, ln in unused_suppressions],
+            {"path": p, "line": ln, "rules": list(rules)}
+            for p, ln, rules in unused_suppressions],
     }
     return json.dumps(doc, indent=2, sort_keys=True)

@@ -1,0 +1,401 @@
+"""Pass 7 — OS-resource lifecycle discipline.
+
+Shared-memory segments outlive the process that forgot to unlink them,
+worker processes outlive the job that forgot to join them, and pipe fds
+accumulate until the coordinator hits EMFILE — the PR 7 shm-leak guard
+exists because exactly this happened.  This pass demands *release
+evidence on every path* for each acquisition of ``SharedMemory`` /
+``Process`` / ``Pipe`` / ``open`` / ``os.open`` / ``socket`` /
+``tempfile.*``:
+
+* acquisition inside a ``with`` statement (or a later ``with x:``) —
+  safe by construction;
+* a release call (``close``/``unlink``/``terminate``/``join``/...)
+  inside a ``finally`` block, or ``weakref.finalize`` registration —
+  safe on exception paths;
+* a release only in straight-line code — flagged as *success-path
+  only*: the acquisition leaks when anything in between raises;
+* ownership transfer — returning the resource, storing it into an
+  attribute/container, passing it positionally to a constructor
+  (capitalized callee), or handing it to an ``append``/``register``/
+  ``finalize``-style call — moves the obligation to the new owner and
+  satisfies this pass.  Keyword arguments do NOT transfer ownership
+  (``Process(args=(conn, ...))`` ships a *copy* to the child; the
+  parent's fd still needs closing).
+
+For ``self.attr = SharedMemory(...)`` the evidence is interprocedural
+via the class's method flows: some method of the class (or a base) must
+call a release method on that attribute, or register it with
+``weakref.finalize``/``atexit`` (see ``ShmRing`` in core/shm_ring.py for
+the reference pattern — the fixture "leak hidden behind a ``self.*()``
+helper" is exactly an acquisition in a helper with no such method
+anywhere).
+
+Rule: ``resource-leak``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from .model import (AnalysisContext, ClassInfo, Finding, ModuleInfo,
+                    dotted_name, import_aliases)
+
+#: dotted acquisition targets (resolved through import aliases)
+ACQUIRE_DOTTED = frozenset({
+    "multiprocessing.Pipe", "multiprocessing.Process",
+    "multiprocessing.connection.Pipe",
+    "multiprocessing.shared_memory.SharedMemory",
+    "os.open", "os.fdopen", "os.pipe",
+    "io.open", "gzip.open", "builtins.open",
+    "socket.socket", "socket.create_connection",
+    "tempfile.mkstemp", "tempfile.mkdtemp", "tempfile.TemporaryFile",
+    "tempfile.NamedTemporaryFile",
+})
+#: bare-name fallbacks that acquire even when un-aliased
+ACQUIRE_BUILTINS = frozenset({"open"})
+#: attribute-call fallbacks: these constructor names acquire no matter
+#: how the receiver was obtained (``ctx = multiprocessing.get_context(
+#: "fork"); ctx.Pipe()`` defeats import-alias resolution)
+ACQUIRE_ATTRS = frozenset({
+    "Pipe", "Process", "SharedMemory", "Pool", "NamedTemporaryFile",
+    "TemporaryFile",
+})
+
+#: method names that release the receiver
+RELEASE_METHODS = frozenset({
+    "close", "unlink", "terminate", "kill", "join", "shutdown",
+    "release", "cancel", "detach", "stop", "cleanup",
+})
+#: module functions that release their first argument
+RELEASE_FUNCS = frozenset({
+    "os.close", "os.unlink", "os.remove", "os.replace", "os.rmdir",
+    "shutil.rmtree",
+})
+#: callee names that take ownership of argument resources
+TRANSFER_CALLEES = frozenset({
+    "append", "appendleft", "add", "put", "insert", "push", "extend",
+    "setdefault", "register", "finalize", "track", "adopt",
+})
+
+
+def _acquisition_kind(call: ast.Call,
+                      aliases: Dict[str, str]) -> Optional[str]:
+    dotted = dotted_name(call.func, aliases)
+    if dotted in ACQUIRE_DOTTED:
+        return dotted.rsplit(".", 1)[-1]
+    if isinstance(call.func, ast.Name) \
+            and call.func.id in ACQUIRE_BUILTINS \
+            and call.func.id not in aliases:
+        return call.func.id
+    if isinstance(call.func, ast.Attribute) \
+            and call.func.attr in ACQUIRE_ATTRS:
+        return call.func.attr
+    return None
+
+
+class _ScopeScan:
+    """Release/escape evidence for the local names of one function."""
+
+    def __init__(self, fn: ast.AST, aliases: Dict[str, str]):
+        self.aliases = aliases
+        self.released_finally: Set[str] = set()
+        self.released_except: Set[str] = set()
+        self.released_normal: Set[str] = set()
+        self.escaped: Set[str] = set()
+        self.with_managed: Set[str] = set()
+        self._walk(list(getattr(fn, "body", [])), in_finally=False,
+                   in_except=False)
+
+    # -- statement walk (tracks finally/except context) ---------------------
+    def _walk(self, body: List[ast.stmt], in_finally: bool,
+              in_except: bool) -> None:
+        for stmt in body:
+            if isinstance(stmt, ast.Try):
+                self._walk(stmt.body, in_finally, in_except)
+                for h in stmt.handlers:
+                    self._walk(h.body, in_finally, True)
+                self._walk(stmt.orelse, in_finally, in_except)
+                self._walk(stmt.finalbody, True, in_except)
+                continue
+            if isinstance(stmt, (ast.With, ast.AsyncWith)):
+                for item in stmt.items:
+                    if isinstance(item.context_expr, ast.Name):
+                        self.with_managed.add(item.context_expr.id)
+                    self._scan(item.context_expr, in_finally, in_except)
+                self._walk(stmt.body, in_finally, in_except)
+                continue
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                # a nested scope capturing the name keeps it alive and
+                # may release it later: treat as escape-by-closure
+                for node in ast.walk(stmt):
+                    if isinstance(node, ast.Name):
+                        self.escaped.add(node.id)
+                continue
+            if isinstance(stmt, ast.Return) and stmt.value is not None:
+                for node in ast.walk(stmt.value):
+                    if isinstance(node, ast.Name):
+                        self.escaped.add(node.id)
+            if isinstance(stmt, ast.Assign):
+                # storing into an attribute / container transfers
+                # ownership to the holder
+                if any(isinstance(t, (ast.Attribute, ast.Subscript))
+                       for t in stmt.targets):
+                    for node in ast.walk(stmt.value):
+                        if isinstance(node, ast.Name):
+                            self.escaped.add(node.id)
+            for node in ast.walk(stmt):
+                if isinstance(node, (ast.Yield, ast.YieldFrom)) \
+                        and node.value is not None:
+                    for sub in ast.walk(node.value):
+                        if isinstance(sub, ast.Name):
+                            self.escaped.add(sub.id)
+            self._scan(stmt, in_finally, in_except)
+            for attr in ("body", "orelse"):
+                inner = getattr(stmt, attr, None)
+                if isinstance(inner, list) and inner \
+                        and isinstance(inner[0], ast.stmt):
+                    self._walk(inner, in_finally, in_except)
+
+    # -- expression scan ----------------------------------------------------
+    def _scan(self, node: ast.AST, in_finally: bool,
+              in_except: bool) -> None:
+        for call in ast.walk(node):
+            if not isinstance(call, ast.Call):
+                continue
+            fn = call.func
+            if isinstance(fn, ast.Attribute) \
+                    and isinstance(fn.value, ast.Name) \
+                    and fn.attr in RELEASE_METHODS:
+                self._release(fn.value.id, in_finally, in_except)
+            dotted = dotted_name(fn, self.aliases)
+            if dotted in RELEASE_FUNCS and call.args \
+                    and isinstance(call.args[0], ast.Name):
+                self._release(call.args[0].id, in_finally, in_except)
+            if dotted is not None and dotted.endswith(".finalize"):
+                for arg in call.args:
+                    for sub in ast.walk(arg):
+                        if isinstance(sub, ast.Name):
+                            self.escaped.add(sub.id)
+            # ownership transfer through calls
+            callee = fn.attr if isinstance(fn, ast.Attribute) else (
+                fn.id if isinstance(fn, ast.Name) else None)
+            if callee is None:
+                continue
+            takes_all = callee in TRANSFER_CALLEES
+            is_ctor = callee[:1].isupper()
+            if takes_all or is_ctor:
+                for arg in call.args:        # positional args only
+                    for sub in ast.walk(arg):
+                        if isinstance(sub, ast.Name):
+                            self.escaped.add(sub.id)
+
+    def _release(self, name: str, in_finally: bool,
+                 in_except: bool) -> None:
+        if in_finally:
+            self.released_finally.add(name)
+        elif in_except:
+            self.released_except.add(name)
+        else:
+            self.released_normal.add(name)
+
+    # -- verdict ------------------------------------------------------------
+    def verdict(self, name: str) -> Optional[str]:
+        """None == safe; otherwise the finding flavor."""
+        if name in self.escaped or name in self.with_managed \
+                or name in self.released_finally:
+            return None
+        if name in self.released_except and name in self.released_normal:
+            return None
+        if name in self.released_normal or name in self.released_except:
+            return "success-path"
+        return "never"
+
+
+def _local_acquisitions(fn: ast.AST, aliases: Dict[str, str],
+                        self_name: Optional[str]
+                        ) -> Tuple[List[Tuple[str, int, str]],
+                                   List[Tuple[str, int, str]],
+                                   List[Tuple[int, str]]]:
+    """(locals, self_attrs, anonymous) acquired in this scope (not
+    descending into nested defs).  ``with ACQ(...)`` and acquisitions in
+    a Return (ownership moves to the caller) are skipped."""
+    local: List[Tuple[str, int, str]] = []
+    attrs: List[Tuple[str, int, str]] = []
+    anon: List[Tuple[int, str]] = []
+    with_ctx: Set[int] = set()
+    returned: Set[int] = set()
+    arg_of_call: Set[int] = set()
+    stack = list(ast.iter_child_nodes(fn))
+    nodes: List[ast.AST] = []
+    while stack:
+        node = stack.pop()
+        nodes.append(node)
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+    for node in nodes:
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                with_ctx.add(id(item.context_expr))
+        elif isinstance(node, ast.Return) and node.value is not None:
+            for sub in ast.walk(node.value):
+                returned.add(id(sub))
+        elif isinstance(node, ast.Call):
+            fn_ = node.func
+            callee = fn_.attr if isinstance(fn_, ast.Attribute) else (
+                fn_.id if isinstance(fn_, ast.Name) else None)
+            # only ownership-taking callees (constructors, container/
+            # registry adds) absorb an inline acquisition; an acquisition
+            # passed to a plain call still leaks after the call returns
+            if callee is not None and (callee[:1].isupper()
+                                       or callee in TRANSFER_CALLEES):
+                for arg in node.args:
+                    for sub in ast.walk(arg):
+                        if isinstance(sub, ast.Call):
+                            arg_of_call.add(id(sub))
+    assigned: Set[int] = set()
+    for node in nodes:
+        if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+            continue
+        kind = None
+        if isinstance(node.value, ast.Call):
+            kind = _acquisition_kind(node.value, aliases)
+        if kind is None:
+            continue
+        assigned.add(id(node.value))
+        tgt = node.targets[0]
+        if isinstance(tgt, ast.Name):
+            local.append((tgt.id, node.lineno, kind))
+        elif isinstance(tgt, ast.Attribute) \
+                and isinstance(tgt.value, ast.Name) \
+                and tgt.value.id == self_name:
+            attrs.append((tgt.attr, node.lineno, kind))
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            for e in tgt.elts:
+                if isinstance(e, ast.Name):
+                    local.append((e.id, node.lineno, kind))
+                elif isinstance(e, ast.Attribute) \
+                        and isinstance(e.value, ast.Name) \
+                        and e.value.id == self_name:
+                    attrs.append((e.attr, node.lineno, kind))
+    for node in nodes:
+        if isinstance(node, ast.Call) and id(node) not in assigned:
+            kind = _acquisition_kind(node, aliases)
+            if kind is None:
+                continue
+            if id(node) in with_ctx or id(node) in returned \
+                    or id(node) in arg_of_call:
+                continue
+            anon.append((node.lineno, kind))
+    return local, attrs, anon
+
+
+def _class_release_evidence(ctx: AnalysisContext,
+                            ci: ClassInfo) -> Set[str]:
+    """Attributes some method along the inheritance chain releases."""
+    out: Set[str] = set()
+    for cur in ctx.mro_chain(ci):
+        for mname in cur.methods:
+            flow = cur.flow(mname)
+            if flow is None:
+                continue
+            for attr, meth, _line in flow.attr_calls:
+                if meth in RELEASE_METHODS:
+                    out.add(attr)
+            for attr in flow.shrinks:
+                out.add(attr)
+            # weakref.finalize / atexit.register mentioning self.attr
+            for node in ast.walk(flow.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                dotted = dotted_name(node.func,
+                                     import_aliases(cur.module))
+                if dotted is None or not (
+                        dotted.endswith(".finalize")
+                        or dotted.startswith("atexit.")):
+                    continue
+                for arg in node.args:
+                    for sub in ast.walk(arg):
+                        if isinstance(sub, ast.Attribute):
+                            out.add(sub.attr)
+    return out
+
+
+def _self_name(fn: ast.AST) -> Optional[str]:
+    args = getattr(fn, "args", None)
+    if args is None:
+        return None
+    pos = args.posonlyargs + args.args
+    return pos[0].arg if pos else None
+
+
+def _scopes(mod: ModuleInfo):
+    """(function node, owning ClassInfo or None) for every def."""
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            owner = None
+            for ci in mod.classes.values():
+                if node.name in ci.methods \
+                        and ci.methods[node.name] is node:
+                    owner = ci
+                    break
+            yield node, owner
+
+
+def run(ctx: AnalysisContext) -> List[Finding]:
+    findings: List[Finding] = []
+    seen: Set[Tuple[str, int]] = set()
+    for mod in ctx.modules:
+        aliases = import_aliases(mod)
+        class_evidence: Dict[str, Set[str]] = {}
+        for fn, owner in _scopes(mod):
+            sname = _self_name(fn) if owner is not None else None
+            local, attrs, anon = _local_acquisitions(fn, aliases, sname)
+            if local:
+                scan = _ScopeScan(fn, aliases)
+                for name, line, kind in local:
+                    flavor = scan.verdict(name)
+                    if flavor is None or (mod.path, line) in seen:
+                        continue
+                    seen.add((mod.path, line))
+                    if flavor == "never":
+                        findings.append(Finding(
+                            "resource-leak", mod.path, line,
+                            f"`{name}` acquires {kind} but is never "
+                            f"released, returned, or stored; close it "
+                            f"(try/finally or with) or transfer "
+                            f"ownership"))
+                    else:
+                        findings.append(Finding(
+                            "resource-leak", mod.path, line,
+                            f"`{name}` ({kind}) is released only on the "
+                            f"success path; an exception in between "
+                            f"leaks it — use try/finally or with"))
+            for attr, line, kind in attrs:
+                if owner is None or (mod.path, line) in seen:
+                    continue
+                if owner.name not in class_evidence:
+                    class_evidence[owner.name] = \
+                        _class_release_evidence(ctx, owner)
+                if attr in class_evidence[owner.name]:
+                    continue
+                seen.add((mod.path, line))
+                findings.append(Finding(
+                    "resource-leak", mod.path, line,
+                    f"{owner.name}.{attr} acquires {kind} but no method "
+                    f"of the class (or its bases) releases it or "
+                    f"registers a finalizer for it"))
+            for line, kind in anon:
+                if (mod.path, line) in seen:
+                    continue
+                seen.add((mod.path, line))
+                findings.append(Finding(
+                    "resource-leak", mod.path, line,
+                    f"{kind} acquired without binding a name: the "
+                    f"resource can never be released; use `with` or "
+                    f"bind and close it"))
+    return findings

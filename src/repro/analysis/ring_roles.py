@@ -1,0 +1,277 @@
+"""Pass 5 — SPSC role discipline on ring transports.
+
+Every edge transport (``ShmRing``, ``SPSCQueue``, ``NetworkLink``) is
+*strictly* single-producer single-consumer: the producer side owns
+``tail`` and the slots it fills, the consumer side owns ``head`` and the
+slots it drains, and nothing else may touch either (shm_ring.py
+"Memory model").  The argument is entirely conventional — nothing in the
+code stops a consumer method from bumping ``tail`` or a coordinator from
+polling a ring the worker owns — so this pass machine-checks it:
+
+1. **Inside a transport class** (any class defining both a producer
+   entry and a consumer entry): the attribute sets written by the
+   producer-side methods and by the consumer-side methods must be
+   disjoint, cursor-named attributes (``head``/``tail``) must only be
+   written by their owning side, the ``_set_head``/``_set_tail`` helpers
+   must only be reachable from their owning side, and header writes via
+   ``struct.pack_into(self._buf, OFFSET, ...)`` must hit disjoint
+   offsets per side.
+
+2. **Across classes**: a single class whose methods call both producer
+   entries and consumer entries on the *same* ring-typed attribute holds
+   both ends of one ring — one descheduled slice away from corrupting
+   it.
+
+3. **Across process roles**: in a worker-entry module (one defining
+   ``_worker_main``), data-plane calls on ring-named receivers must stay
+   on one side of the fork — each ring name may be produced from one
+   process role and consumed from one process role, and never both ends
+   from the same role (see :func:`model.child_spans`).
+
+Receivers/attributes count as "ring-typed" by name (contains ``ring``/
+``queue``, or a ``q``/``_q``/``qs`` form) — a deliberate lint-grade
+heuristic: transports in this tree are always named that way, and a
+false name costs one suppression with a reason.
+
+Rule: ``ring-role-violation``.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from .model import (AnalysisContext, ClassInfo, Finding, MethodFlow,
+                    ModuleInfo, child_spans, in_spans)
+
+PRODUCER_ENTRIES = ("offer", "offer_many", "has_room_for")
+CONSUMER_ENTRIES = ("poll", "poll_prefix", "poll_many", "peek", "drain_to")
+
+#: cursor helper-method ownership: only the named side may reach these
+SIDE_OF_HELPER = {"_set_tail": "producer", "set_tail": "producer",
+                  "_set_head": "consumer", "set_head": "consumer"}
+
+_RINGISH_RE = re.compile(r"ring|queue|(^|_)qs?($|_)")
+
+
+def _ringish(name: str) -> bool:
+    return bool(_RINGISH_RE.search(name.lower()))
+
+
+def _cursor_owner(attr: str) -> Optional[str]:
+    """Which side owns a cursor-named attribute (``_tail`` -> producer,
+    ``head_pos`` -> consumer); None for non-cursor names."""
+    n = attr.strip("_").lower()
+    if n == "tail" or n.startswith("tail_") or n.endswith("_tail"):
+        return "producer"
+    if n == "head" or n.startswith("head_") or n.endswith("_head"):
+        return "consumer"
+    return None
+
+
+def _is_transport(ci: ClassInfo) -> bool:
+    return (any(m in ci.methods for m in PRODUCER_ENTRIES)
+            and any(m in ci.methods for m in CONSUMER_ENTRIES))
+
+
+def _side_writes(flows: Dict[str, Tuple[ClassInfo, MethodFlow]],
+                 exclude: Set[str]) -> Dict[str, Tuple[int, str]]:
+    """attr -> (line, via-method) for every self-attribute write performed
+    by the side's exclusive methods."""
+    out: Dict[str, Tuple[int, str]] = {}
+    for mname in sorted(flows):
+        if mname in exclude:
+            continue
+        _owner, flow = flows[mname]
+        for attr in flow.writes:
+            line = flow.write_lines.get(attr, flow.node.lineno)
+            if attr not in out or line < out[attr][0]:
+                out[attr] = (line, mname)
+    return out
+
+
+def _header_writes(flows: Dict[str, Tuple[ClassInfo, MethodFlow]],
+                   exclude: Set[str]) -> Dict[Tuple[str, int], int]:
+    """(buffer attr, constant offset) -> line for every
+    ``*.pack_into(self.buf, OFFSET, ...)`` performed by the side."""
+    out: Dict[Tuple[str, int], int] = {}
+    for mname in sorted(flows):
+        if mname in exclude:
+            continue
+        _owner, flow = flows[mname]
+        for node in ast.walk(flow.node):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "pack_into"
+                    and len(node.args) >= 2):
+                continue
+            off = node.args[1]
+            if not (isinstance(off, ast.Constant)
+                    and isinstance(off.value, int)):
+                continue
+            for attr, _d in flow.taints(node.args[0]):
+                key = (attr, off.value)
+                if key not in out or node.lineno < out[key]:
+                    out[key] = node.lineno
+    return out
+
+
+def _check_transport_class(ctx: AnalysisContext, ci: ClassInfo,
+                           findings: List[Finding]) -> None:
+    path = ci.module.path
+    pflows = ctx.reachable_flows(ci, [m for m in PRODUCER_ENTRIES
+                                      if m in ci.methods])
+    cflows = ctx.reachable_flows(ci, [m for m in CONSUMER_ENTRIES
+                                      if m in ci.methods])
+    # helpers reachable from both sides carry no side information; their
+    # writes (there should be none) cannot be attributed
+    shared = set(pflows) & set(cflows)
+    for helper, side in SIDE_OF_HELPER.items():
+        wrong = cflows if side == "producer" else pflows
+        if helper in wrong and helper not in shared:
+            _owner, flow = wrong[helper]
+            entries = (CONSUMER_ENTRIES if side == "producer"
+                       else PRODUCER_ENTRIES)
+            findings.append(Finding(
+                "ring-role-violation", path, flow.node.lineno,
+                f"{ci.name}.{helper} (a {side}-side cursor publisher) is "
+                f"reachable from the "
+                f"{'consumer' if side == 'producer' else 'producer'} "
+                f"entries {[m for m in entries if m in ci.methods]}; only "
+                f"the {side} may advance this cursor"))
+    pw = _side_writes(pflows, shared)
+    cw = _side_writes(cflows, shared)
+    for attr in sorted(set(pw) & set(cw)):
+        pline, pvia = pw[attr]
+        cline, cvia = cw[attr]
+        findings.append(Finding(
+            "ring-role-violation", path, min(pline, cline),
+            f"{ci.name}.{attr} is written by both the producer side "
+            f"({pvia}, line {pline}) and the consumer side ({cvia}, line "
+            f"{cline}); SPSC discipline gives each attribute exactly one "
+            f"writing side"))
+    for side_name, writes, other in (("producer", pw, "consumer"),
+                                     ("consumer", cw, "producer")):
+        for attr in sorted(writes):
+            owner_side = _cursor_owner(attr)
+            if owner_side is not None and owner_side != side_name \
+                    and attr not in (set(pw) & set(cw)):
+                line, via = writes[attr]
+                findings.append(Finding(
+                    "ring-role-violation", path, line,
+                    f"{ci.name}.{via} writes cursor `{attr}` from the "
+                    f"{side_name} side; `{attr}` is {owner_side}-owned "
+                    f"(the {other} must never see it move backwards or "
+                    f"early)"))
+    ph = _header_writes(pflows, shared)
+    ch = _header_writes(cflows, shared)
+    for (attr, off) in sorted(set(ph) & set(ch)):
+        findings.append(Finding(
+            "ring-role-violation", path, min(ph[(attr, off)],
+                                             ch[(attr, off)]),
+            f"{ci.name}: header offset {off} of self.{attr} is "
+            f"pack_into-written by both sides (producer line "
+            f"{ph[(attr, off)]}, consumer line {ch[(attr, off)]}); "
+            f"header words are single-writer"))
+
+
+def _check_both_ends(ci: ClassInfo, findings: List[Finding]) -> None:
+    """One class calling producer AND consumer entries on the same
+    ring-typed attribute holds both ends of the ring."""
+    per_attr: Dict[str, Dict[str, int]] = {}
+    for mname in sorted(ci.methods):
+        flow = ci.flow(mname)
+        if flow is None:
+            continue
+        for attr, meth, line in flow.attr_calls:
+            if meth not in PRODUCER_ENTRIES and meth not in CONSUMER_ENTRIES:
+                continue
+            if not _ringish(attr):
+                continue
+            calls = per_attr.setdefault(attr, {})
+            if meth not in calls or line < calls[meth]:
+                calls[meth] = line
+    for attr in sorted(per_attr):
+        calls = per_attr[attr]
+        p = sorted(m for m in calls if m in PRODUCER_ENTRIES)
+        c = sorted(m for m in calls if m in CONSUMER_ENTRIES)
+        if p and c:
+            line = min(calls.values())
+            findings.append(Finding(
+                "ring-role-violation", ci.module.path, line,
+                f"{ci.name} drives both ends of self.{attr}: producer "
+                f"calls {p} and consumer calls {c}; SPSC transports need "
+                f"the two ends in different owners"))
+
+
+def _receiver_name(expr: ast.expr) -> Optional[str]:
+    if isinstance(expr, ast.Name):
+        return expr.id
+    if isinstance(expr, ast.Attribute):
+        return expr.attr
+    if isinstance(expr, ast.Subscript):
+        return _receiver_name(expr.value)
+    return None
+
+
+def _check_process_roles(mod: ModuleInfo, findings: List[Finding]) -> None:
+    spans = child_spans(mod)
+    if not spans:
+        return
+    #: ring name -> side -> {role -> first line}
+    usage: Dict[str, Dict[str, Dict[str, int]]] = {}
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)):
+            continue
+        meth = node.func.attr
+        if meth in PRODUCER_ENTRIES:
+            side = "producer"
+        elif meth in CONSUMER_ENTRIES:
+            side = "consumer"
+        else:
+            continue
+        name = _receiver_name(node.func.value)
+        if name is None or not _ringish(name):
+            continue
+        role = ("worker" if in_spans(node.lineno, spans) else "coordinator")
+        roles = usage.setdefault(name, {}).setdefault(side, {})
+        if role not in roles or node.lineno < roles[role]:
+            roles[role] = node.lineno
+    for name in sorted(usage):
+        sides = usage[name]
+        for side, other in (("producer", "consumer"),
+                            ("consumer", "producer")):
+            roles = sides.get(side, {})
+            if len(roles) > 1:
+                findings.append(Finding(
+                    "ring-role-violation", mod.path, min(roles.values()),
+                    f"ring `{name}` has {side} calls from both coordinator "
+                    f"code (line {roles['coordinator']}) and worker code "
+                    f"(line {roles['worker']}); a ring has exactly one "
+                    f"{side} process"))
+        both = (set(sides.get("producer", {}))
+                & set(sides.get("consumer", {})))
+        for role in sorted(both):
+            pline = sides["producer"][role]
+            cline = sides["consumer"][role]
+            findings.append(Finding(
+                "ring-role-violation", mod.path, min(pline, cline),
+                f"{role} code holds both ends of ring `{name}` (produces "
+                f"at line {pline}, consumes at line {cline}); the data "
+                f"plane must keep producer and consumer in different "
+                f"process roles"))
+
+
+def run(ctx: AnalysisContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in ctx.modules:
+        for cname in sorted(mod.classes):
+            ci = mod.classes[cname]
+            if _is_transport(ci):
+                _check_transport_class(ctx, ci, findings)
+            else:
+                _check_both_ends(ci, findings)
+        _check_process_roles(mod, findings)
+    return findings

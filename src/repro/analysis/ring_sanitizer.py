@@ -1,0 +1,393 @@
+"""Deterministic ring sanitizer: exhaustive interleaving exploration of
+the ShmRing publication protocol.
+
+core/shm_ring.py argues its safety in prose: on TSO, the producer's
+payload stores land before the 8-byte ``tail`` store publishes them, so
+the consumer — which reads only ``[head, tail)`` — can never observe a
+torn record; crash-kill the producer mid-offer and the half-written
+record simply stays unpublished.  This module turns that argument into a
+machine-checked property.
+
+It models the ring at byte level with the *exact* record layout of
+``ShmRing`` (``[u32 total_len][u8 tag][payload]``, 255-tagged PAD
+records on wraparound, implicit < 5-byte tail gaps) and splits ``offer``
+into its individual mutation steps — pad header, record header, payload,
+``msgs_in``, ``tail`` — in the same order the real code performs them.
+A depth-first explorer then drives every interleaving of
+
+* one producer micro-step,
+* one consumer ``poll`` (atomic: the consumer only touches bytes the
+  producer published, which is the very property under test), and
+* a producer **crash** at every micro-step boundary — including
+  immediately before and after the cursor publication itself,
+
+memoizing visited states so the exploration is exhaustive and bounded.
+At every quiescent endpoint (producer finished or crashed, ring
+drained) it asserts:
+
+* **no torn record** — every polled record has a sane header and the
+  exact payload the producer staged for that sequence number;
+* **no lost record** — every offer whose ``tail`` store was applied is
+  eventually polled;
+* **no duplicated or reordered record** — polled sequence numbers are
+  exactly ``0..published-1`` in order;
+* **counter consistency** — without a crash, ``msgs_in == msgs_out ==
+  published`` at quiescence (with a crash the in-counter may lead: the
+  counters are advisory telemetry, not the publication protocol).
+
+The "teeth" of the sanitizer: :data:`BUGGY_ORDERS` re-runs the same
+exploration with deliberately broken publication orders (``tail`` store
+before the payload store; skipping the PAD record on wraparound) and the
+test suite asserts a violation IS found — proving the explorer can see
+the bug class it guards against.
+
+CLI (used by the chaos-smoke CI job)::
+
+    python -m repro.analysis.ring_sanitizer [--capacity N] [--sizes a,b,c]
+        [--buggy none|tail-first|skip-pad] [--json out.json]
+
+Exit status 1 when a violation is found; the JSON report carries the
+full interleaving trace for the artifact upload.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import struct
+import sys
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_REC = struct.Struct("<IB")     # [u32 total_len][u8 tag] — ShmRing._REC
+TAG_PAD = 255                   # ShmRing.TAG_PAD
+
+#: the real publication order of ShmRing.offer's mutation steps
+CORRECT_ORDER = ("pad", "header", "payload", "msgs_in", "tail")
+#: deliberately broken orders the teeth tests must catch
+BUGGY_ORDERS = {
+    # publish the cursor before the payload lands: a consumer slice
+    # between the two stores reads garbage
+    "tail-first": ("pad", "header", "tail", "payload", "msgs_in"),
+    # skip the PAD record on wraparound: the consumer walks into stale
+    # bytes at the physical tail
+    "skip-pad": ("header", "payload", "msgs_in", "tail"),
+}
+
+
+@dataclass
+class Config:
+    capacity: int = 32
+    #: payload sizes of the records the producer offers, in order;
+    #: defaults chosen to force a PAD record and an implicit tail gap
+    sizes: Tuple[int, ...] = (7, 12, 5, 9, 6)
+    order: Tuple[str, ...] = CORRECT_ORDER
+    crash: bool = True
+    #: initial byte value of the data region (0xEE surfaces reads of
+    #: never-written bytes; the real segment is zero-filled)
+    init_byte: int = 0xEE
+    max_states: int = 2_000_000
+
+
+def _payload(seq: int, size: int) -> bytes:
+    return bytes(((seq * 31 + i) & 0xFF) for i in range(size))
+
+
+@dataclass
+class Violation:
+    reason: str
+    trace: List[str]
+
+    def to_json(self) -> dict:
+        return {"reason": self.reason, "trace": self.trace}
+
+
+@dataclass
+class Result:
+    config_order: Tuple[str, ...]
+    states: int = 0
+    endpoints: int = 0
+    published_max: int = 0
+    violations: List[Violation] = field(default_factory=list)
+    truncated: bool = False
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations and not self.truncated
+
+    def to_json(self) -> dict:
+        return {
+            "order": list(self.config_order),
+            "states": self.states,
+            "endpoints": self.endpoints,
+            "published_max": self.published_max,
+            "truncated": self.truncated,
+            "ok": self.ok,
+            "violations": [v.to_json() for v in self.violations],
+        }
+
+
+class _State:
+    """One node of the interleaving graph: full ring bytes + cursors +
+    producer progress + what the consumer saw so far."""
+
+    __slots__ = ("data", "head", "tail", "msgs_in", "msgs_out",
+                 "p_idx", "plan", "crashed", "published", "consumed",
+                 "trace")
+
+    def __init__(self, cfg: Config):
+        self.data = bytearray([cfg.init_byte] * cfg.capacity)
+        self.head = 0
+        self.tail = 0
+        self.msgs_in = 0
+        self.msgs_out = 0
+        self.p_idx = 0                      # next script record
+        self.plan: Optional[Tuple] = None   # remaining micro-ops
+        self.crashed = False
+        self.published = 0
+        self.consumed: Tuple = ()           # ((seq, payload) | ("torn", why))
+        self.trace: Tuple[str, ...] = ()
+
+    def clone(self) -> "_State":
+        s = object.__new__(_State)
+        s.data = bytearray(self.data)
+        for name in ("head", "tail", "msgs_in", "msgs_out", "p_idx",
+                     "plan", "crashed", "published", "consumed", "trace"):
+            setattr(s, name, getattr(self, name))
+        return s
+
+    def key(self) -> Tuple:
+        # trace excluded: two paths reaching identical ring+progress
+        # state have identical futures
+        return (bytes(self.data), self.head, self.tail, self.msgs_in,
+                self.msgs_out, self.p_idx, self.plan, self.crashed,
+                self.published, self.consumed)
+
+
+def _plan_offer(st: _State, cfg: Config) -> Optional[Tuple]:
+    """The mutation steps of one ShmRing.offer, computed from the
+    cursors as the real code reads them up front.  None == ring full
+    (offer returns False; the producer retries after consumer progress)."""
+    seq = st.p_idx
+    payload = _payload(seq, cfg.sizes[seq])
+    rec = _REC.size + len(payload)
+    cap = cfg.capacity
+    if rec > cap:
+        raise ValueError("record exceeds ring capacity")
+    tail, head = st.tail, st.head
+    to_end = cap - (tail % cap)
+    needed = rec if rec <= to_end else to_end + rec
+    if needed > cap - (tail - head):
+        return None
+    ops: List[Tuple] = []
+    idx = tail % cap
+    if rec > to_end:
+        if to_end >= _REC.size and "pad" in cfg.order:
+            ops.append(("pad", idx, to_end))
+        tail += to_end
+        idx = 0
+    ops.append(("header", idx, rec, seq))
+    ops.append(("payload", idx + _REC.size, payload))
+    ops.append(("msgs_in",))
+    ops.append(("tail", tail + rec))
+    ops.sort(key=lambda op: cfg.order.index(op[0]))
+    return tuple(ops)
+
+
+def _apply(st: _State, op: Tuple) -> None:
+    kind = op[0]
+    if kind == "pad":
+        _, idx, length = op
+        _REC.pack_into(st.data, idx, length, TAG_PAD)
+    elif kind == "header":
+        _, idx, rec, seq = op
+        _REC.pack_into(st.data, idx, rec, seq)
+    elif kind == "payload":
+        _, idx, payload = op
+        st.data[idx:idx + len(payload)] = payload
+    elif kind == "msgs_in":
+        st.msgs_in += 1
+    elif kind == "tail":
+        st.tail = op[1]
+        st.published += 1
+
+
+def _poll(st: _State, cap: int) -> Optional[Tuple]:
+    """One atomic consumer poll against the published region; returns
+    (seq, payload), ("torn", why), or None when empty.  Mirrors
+    ShmRing._read_record including PAD skipping and implicit gaps."""
+    head = st.head
+    while True:
+        if head == st.tail:
+            return None
+        idx = head % cap
+        to_end = cap - idx
+        if to_end < _REC.size:
+            head += to_end          # implicit pad at the physical tail
+            continue
+        rec, tag = _REC.unpack_from(st.data, idx)
+        if rec < _REC.size or rec > to_end:
+            return ("torn",
+                    f"record header at byte {idx} has impossible length "
+                    f"{rec} (tag {tag}, {to_end} bytes to physical end)")
+        if tag == TAG_PAD:
+            if rec != to_end:
+                return ("torn",
+                        f"PAD record at byte {idx} has length {rec}, "
+                        f"expected {to_end}")
+            head += rec
+            continue
+        payload = bytes(st.data[idx + _REC.size:idx + rec])
+        st.msgs_out += 1
+        st.head = head + rec
+        return (tag, payload)
+
+
+def explore(cfg: Config) -> Result:
+    """Exhaustively explore producer/consumer interleavings (with crash
+    injection at every producer micro-step boundary when ``cfg.crash``)
+    and check the no-torn/no-lost/no-duplicate invariants at every
+    quiescent endpoint."""
+    res = Result(config_order=cfg.order)
+    root = _State(cfg)
+    seen = {root.key()}
+    stack = [root]
+    nrec = len(cfg.sizes)
+    while stack:
+        st = stack.pop()
+        res.states += 1
+        if res.states >= cfg.max_states:
+            res.truncated = True
+            break
+        succs: List[_State] = []
+        producer_done = st.crashed or (st.p_idx >= nrec
+                                       and st.plan is None)
+        # -- producer micro-step ------------------------------------------
+        if not producer_done:
+            if st.plan is None:
+                plan = _plan_offer(st, cfg)
+                if plan is not None:
+                    nxt = st.clone()
+                    nxt.plan = plan
+                    nxt.trace += (f"P:start-offer#{st.p_idx}",)
+                    succs.append(nxt)
+                # plan None == ring full: producer spins; consumer or
+                # crash branches below provide the progress
+            else:
+                nxt = st.clone()
+                op, rest = st.plan[0], st.plan[1:]
+                _apply(nxt, op)
+                nxt.plan = rest or None
+                if not rest:
+                    nxt.p_idx += 1
+                nxt.trace += (f"P:{op[0]}#{st.p_idx}",)
+                succs.append(nxt)
+            if cfg.crash:
+                nxt = st.clone()
+                nxt.crashed = True
+                at = ("idle" if st.plan is None
+                      else f"before-{st.plan[0][0]}#{st.p_idx}")
+                nxt.trace += (f"P:crash@{at}",)
+                succs.append(nxt)
+        # -- consumer poll -------------------------------------------------
+        probe = st.clone()
+        got = _poll(probe, cfg.capacity)
+        if got is not None:
+            if got[0] == "torn":
+                res.violations.append(Violation(
+                    f"torn record observed: {got[1]}",
+                    list(st.trace) + ["C:poll->torn"]))
+                continue
+            probe.consumed = st.consumed + (got,)
+            probe.trace += (f"C:poll->#{got[0]}",)
+            succs.append(probe)
+        elif producer_done or (st.plan is None and not succs):
+            # quiescent endpoint: drained, and the producer is finished,
+            # crashed, or blocked with no way to make progress
+            res.endpoints += 1
+            res.published_max = max(res.published_max, st.published)
+            err = _check_endpoint(st, cfg)
+            if err is not None:
+                res.violations.append(Violation(err, list(st.trace)))
+            continue
+        for nxt in succs:
+            k = nxt.key()
+            if k not in seen:
+                seen.add(k)
+                stack.append(nxt)
+    return res
+
+
+def _check_endpoint(st: _State, cfg: Config) -> Optional[str]:
+    if len(st.consumed) != st.published:
+        return (f"lost or duplicated records: {st.published} published "
+                f"but {len(st.consumed)} consumed at quiescence")
+    for i, (seq, payload) in enumerate(st.consumed):
+        if seq != i:
+            return (f"record order violated: position {i} polled "
+                    f"sequence {seq}")
+        want = _payload(i, cfg.sizes[i])
+        if payload != want:
+            return (f"torn record: sequence {i} polled "
+                    f"{payload.hex()} != staged {want.hex()}")
+    if not st.crashed and (st.msgs_in != st.published
+                           or st.msgs_out != st.published):
+        return (f"counter drift without a crash: msgs_in={st.msgs_in} "
+                f"msgs_out={st.msgs_out} published={st.published}")
+    return None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.ring_sanitizer",
+        description="exhaustive interleaving + crash-injection check of "
+                    "the ShmRing publication protocol")
+    ap.add_argument("--capacity", type=int, default=32)
+    ap.add_argument("--sizes", default="7,12,5,9,6",
+                    help="comma-separated payload sizes to offer")
+    ap.add_argument("--no-crash", action="store_true",
+                    help="skip crash injection (interleavings only)")
+    ap.add_argument("--buggy", choices=["none"] + sorted(BUGGY_ORDERS),
+                    default="none",
+                    help="run a deliberately broken publication order "
+                         "(expects to FIND a violation)")
+    ap.add_argument("--max-states", type=int, default=2_000_000)
+    ap.add_argument("--json", dest="out",
+                    help="write the JSON report (with any violation "
+                         "trace) to this file")
+    args = ap.parse_args(argv)
+    sizes = tuple(int(s) for s in args.sizes.split(",") if s.strip())
+    order = (CORRECT_ORDER if args.buggy == "none"
+             else BUGGY_ORDERS[args.buggy])
+    cfg = Config(capacity=args.capacity, sizes=sizes, order=order,
+                 crash=not args.no_crash, max_states=args.max_states)
+    res = explore(cfg)
+    doc = res.to_json()
+    if args.out:
+        with open(args.out, "w", encoding="utf-8") as fh:
+            fh.write(json.dumps(doc, indent=2) + "\n")
+    expect_violation = args.buggy != "none"
+    found = bool(res.violations)
+    print(f"ring-sanitizer: order={','.join(order)} states={res.states} "
+          f"endpoints={res.endpoints} published_max={res.published_max} "
+          f"violations={len(res.violations)}"
+          + (" (truncated)" if res.truncated else ""))
+    for v in res.violations[:3]:
+        print(f"  violation: {v.reason}")
+        print(f"  trace: {' '.join(v.trace[-12:])}")
+    if expect_violation:
+        if found:
+            print("ring-sanitizer: buggy order correctly caught")
+            return 0
+        print("ring-sanitizer: buggy order NOT caught — explorer has "
+              "no teeth", file=sys.stderr)
+        return 1
+    if res.truncated:
+        print("ring-sanitizer: state budget exhausted before full "
+              "exploration", file=sys.stderr)
+        return 1
+    return 1 if found else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -43,6 +43,7 @@ class SPSCQueue:
         """Enqueue ``item``; returns False (backpressure) when full."""
         if self._tail - self._head == self._cap:
             return False
+        # jetlint: disable=ring-role-violation -- _buf slot writes are disjoint by cursor ownership: the producer fills [tail % cap] (unreachable to the consumer until tail publishes) and the consumer None-clears [head % cap, tail % cap) it already owns
         self._buf[self._tail % self._cap] = item
         self._tail += 1
         return True

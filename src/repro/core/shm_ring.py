@@ -23,6 +23,18 @@ pattern every pure-Python shm ring uses.  ``offer``/``poll`` never block;
 ``offer`` returning ``False`` is the backpressure signal, exactly the
 :class:`~repro.core.queues.SPSCQueue` contract.
 
+This argument is machine-checked twice over (ROADMAP "Machine-checked
+contracts"): statically, jetlint's ``ring-role-violation`` pass
+(``repro.analysis.ring_roles``) verifies the SPSC role split — producer
+methods own ``tail`` and the bytes they stage, consumer methods own
+``head``, no attribute or header word has two writing sides, and no
+process role holds both ends of a ring; dynamically, the ring sanitizer
+(``python -m repro.analysis.ring_sanitizer``) exhaustively interleaves
+the exact ``offer`` mutation order modeled below (pad header, record
+header, payload, ``msgs_in``, ``tail``) against atomic polls with a
+producer crash injected at every step boundary, asserting no
+torn/lost/duplicated record ever becomes observable.
+
 Record layout
 =============
 
@@ -106,10 +118,11 @@ def _unlink_guarded(name: str, creator_pid: int) -> None:
     except (FileNotFoundError, OSError):
         return      # already unlinked by normal teardown
     try:
-        seg.close()
         seg.unlink()
     except (FileNotFoundError, OSError):  # pragma: no cover - racing exit
         pass
+    finally:
+        seg.close()
 
 
 def sweep_leaked_rings() -> List[str]:

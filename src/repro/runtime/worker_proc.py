@@ -35,6 +35,18 @@ data plane:
 Workers inherit the built execution via ``fork`` (no pickling of the DAG
 or closures); only items crossing rings and control messages serialize.
 
+The conventions above are jetlint-enforced (ROADMAP "Machine-checked
+contracts"): the control-pipe vocabulary is closed by the
+``protocol-unhandled-message`` / ``protocol-dead-arm`` pass — every tag
+sent on either side of the fork must have a dispatch arm on the other,
+and every arm a live sender (``repro.analysis.protocol`` classifies
+call sites coordinator vs worker by reachability from
+:func:`_worker_main`); the "coordinator never touches the data plane"
+rule is the process-role half of ``ring-role-violation``
+(``repro.analysis.ring_roles``); and pipe/process/shm acquisitions here
+carry ``resource-leak`` obligations — the pass caught the parent's copy
+of ``child_conn`` leaking on failed spawns in exactly this module.
+
 Failure semantics: cooperative vs detected
 ==========================================
 
@@ -524,11 +536,16 @@ class MultiprocessBackend(ExecutionBackend):
         workers: Dict[Location, _WorkerHandle] = {}
         for key in sorted(data.get("by_worker", {})):
             parent_conn, child_conn = _MP.Pipe(duplex=True)
-            proc = _MP.Process(target=_worker_main,
-                               args=(execution, key, child_conn),
-                               name=f"jet-n{key[0]}-w{key[1]}", daemon=True)
-            proc.start()
-            child_conn.close()
+            try:
+                proc = _MP.Process(
+                    target=_worker_main, args=(execution, key, child_conn),
+                    name=f"jet-n{key[0]}-w{key[1]}", daemon=True)
+                proc.start()
+            finally:
+                # the child inherited its end across the fork; the
+                # parent's copy of that fd must close even if the spawn
+                # itself blew up, or every failed start leaks a pipe
+                child_conn.close()
             workers[key] = _WorkerHandle(key, proc, parent_conn)
             supervisor.worker_started(key)
         data["workers"] = workers

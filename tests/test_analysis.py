@@ -7,6 +7,7 @@ must stay clean.  The final test is the CI gate itself: the real
 codebase under ``src/repro`` analyzes to zero unsuppressed findings.
 """
 
+import json
 import os
 import textwrap
 
@@ -421,6 +422,402 @@ def test_header_suppression_covers_whole_method():
     findings = analyze_sources({"fx.py": textwrap.dedent(src)})
     assert [f for f in findings if not f.suppressed] == []
     assert len([f for f in findings if f.suppressed]) == 2
+
+
+# ---------------------------------------------------------------------------
+# pass 5: SPSC ring role discipline
+# ---------------------------------------------------------------------------
+
+
+def test_wrong_side_cursor_write_flagged():
+    # the consumer "helpfully" resets the producer's cursor on empty:
+    # the producer's next read of tail goes backwards mid-publication
+    bad = """
+        class ResettingQueue:
+            def __init__(self):
+                self._items = []
+                self._head = 0
+                self._tail = 0
+            def offer(self, item):
+                self._items.append(item)
+                return True
+            def poll(self):
+                if self._head >= len(self._items):
+                    self._tail = 0
+                    return None
+                item = self._items[self._head]
+                self._head += 1
+                return item
+        """
+    found = lint(bad, rules=["ring-role-violation"])
+    assert len(found) == 1
+    assert "_tail" in found[0].message and "producer-owned" in found[0].message
+
+
+def test_both_sides_writing_one_attr_flagged():
+    bad = """
+        class SharedCountQueue:
+            def __init__(self):
+                self._items = []
+                self._count = 0
+            def offer(self, item):
+                self._items.append(item)
+                self._count += 1
+                return True
+            def poll(self):
+                if not self._items:
+                    return None
+                self._count -= 1
+                return self._items.pop(0)
+        """
+    found = lint(bad, rules=["ring-role-violation"])
+    assert any("_count" in f.message and "both" in f.message for f in found)
+
+
+def test_clean_transport_split_is_clean():
+    good = """
+        class CleanQueue:
+            def __init__(self):
+                self._buf = [None] * 8
+                self._head = 0
+                self._tail = 0
+            def offer(self, item):
+                if self._tail - self._head == 8:
+                    return False
+                self._buf[self._tail % 8] = item
+                self._tail += 1
+                return True
+            def poll(self):
+                if self._head == self._tail:
+                    return None
+                item = self._buf[self._head % 8]
+                self._head += 1
+                return item
+        """
+    assert lint(good, rules=["ring-role-violation"]) == []
+
+
+def test_one_class_holding_both_ring_ends_flagged():
+    bad = """
+        class Pump:
+            def __init__(self, ring):
+                self.ring = ring
+            def push(self, item):
+                self.ring.offer(item)
+            def drain(self):
+                return self.ring.poll()
+        """
+    found = lint(bad, rules=["ring-role-violation"])
+    assert len(found) == 1 and "both ends" in found[0].message
+
+
+def test_multi_producer_ring_across_roles_flagged():
+    # a ring offered from worker code AND coordinator code has two
+    # producer processes — the SPSC publication argument collapses
+    bad = """
+        def _worker_main(conn, out_ring):
+            out_ring.offer(("hb",))
+
+        class Coordinator:
+            def pump(self, out_ring):
+                out_ring.offer(("results", 1))
+        """
+    found = lint(bad, rules=["ring-role-violation"])
+    assert len(found) == 1
+    assert "both coordinator" in found[0].message
+
+
+def test_disjoint_process_roles_clean():
+    good = """
+        def _worker_main(conn, out_ring, in_ring):
+            out_ring.offer(("hb",))
+            cmd = in_ring.poll()
+
+        class Coordinator:
+            def pump(self, out_ring, in_ring):
+                msg = out_ring.poll()
+                in_ring.offer(("stop",))
+        """
+    assert lint(good, rules=["ring-role-violation"]) == []
+
+
+# ---------------------------------------------------------------------------
+# pass 6: control-protocol conformance
+# ---------------------------------------------------------------------------
+
+RING_PROTOCOL_RULES = ["protocol-unhandled-message", "protocol-dead-arm"]
+
+
+def test_sent_but_unhandled_tag_flagged():
+    # the PR 7 wedge shape: the coordinator grows a "commit" message but
+    # the worker dispatch never got the arm
+    bad = """
+        def _worker_main(conn):
+            while True:
+                cmd = conn.recv()
+                op = cmd[0]
+                if op == "stop":
+                    conn.send(("done",))
+                    break
+                elif op == "snapshot":
+                    conn.send(("ack",))
+
+        class Coordinator:
+            def pump(self, conn):
+                conn.send(("snapshot", 7))
+                conn.send(("commit", 7))
+                conn.send(("stop",))
+                msg = conn.recv()
+                if msg[0] == "ack":
+                    pass
+                elif msg[0] == "done":
+                    pass
+        """
+    found = lint(bad, rules=RING_PROTOCOL_RULES)
+    assert rules_of(found) == ["protocol-unhandled-message"]
+    assert len(found) == 1 and '"commit"' in found[0].message
+
+
+def test_dead_handler_arm_flagged():
+    # the coordinator still dispatches "hb" but no worker sends it —
+    # a renamed tag left a dead arm behind
+    bad = """
+        def _worker_main(conn):
+            while True:
+                cmd = conn.recv()
+                op = cmd[0]
+                if op == "stop":
+                    conn.send(("done",))
+                    break
+                elif op == "ping":
+                    conn.send(("ack",))
+
+        class Coordinator:
+            def pump(self, conn):
+                conn.send(("ping",))
+                conn.send(("stop",))
+                msg = conn.recv()
+                if msg[0] == "ack":
+                    pass
+                elif msg[0] == "done":
+                    pass
+                elif msg[0] == "hb":
+                    pass
+        """
+    found = lint(bad, rules=RING_PROTOCOL_RULES)
+    assert rules_of(found) == ["protocol-dead-arm"]
+    assert len(found) == 1 and '"hb"' in found[0].message
+
+
+def test_conformant_protocol_clean():
+    good = """
+        def _worker_main(conn):
+            while True:
+                cmd = conn.recv()
+                op = cmd[0]
+                if op == "stop":
+                    conn.send(("done",))
+                    break
+                elif op == "ping":
+                    conn.send(("ack",))
+
+        class Coordinator:
+            def pump(self, conn):
+                conn.send(("ping",))
+                conn.send(("stop",))
+                msg = conn.recv()
+                if msg[0] == "ack":
+                    pass
+                elif msg[0] == "done":
+                    pass
+        """
+    assert lint(good, rules=RING_PROTOCOL_RULES) == []
+
+
+def test_module_constant_tags_resolve():
+    bad = """
+        STOP = "stop"
+        FLUSH = "flush"
+
+        def _worker_main(conn):
+            while True:
+                cmd = conn.recv()
+                op = cmd[0]
+                if op == "stop":
+                    break
+                elif op == "ping":
+                    conn.send(("ack", 1))
+
+        class Coordinator:
+            def pump(self, conn):
+                conn.send((STOP,))
+                conn.send(("ping",))
+                conn.send((FLUSH,))
+                msg = conn.recv()
+                if msg[0] == "ack":
+                    pass
+                elif msg[0] == "done":
+                    pass
+        """
+    found = lint(bad, rules=RING_PROTOCOL_RULES)
+    # (FLUSH,) resolves to an unhandled "flush"; the coordinator "done"
+    # arm is dead ("ack" alone would make it a 1-arm filter otherwise)
+    assert "protocol-unhandled-message" in rules_of(found)
+    assert any('"flush"' in f.message for f in found)
+
+
+# ---------------------------------------------------------------------------
+# pass 7: resource-leak analysis
+# ---------------------------------------------------------------------------
+
+
+def test_shm_attr_without_release_flagged():
+    bad = """
+        from multiprocessing.shared_memory import SharedMemory
+
+        class SegmentHolder:
+            def __init__(self, name):
+                self.shm = SharedMemory(name=name, create=True)
+            def read(self):
+                return bytes(self.shm.buf[:8])
+        """
+    found = lint(bad, rules=["resource-leak"])
+    assert len(found) == 1
+    assert "SegmentHolder.shm" in found[0].message
+
+
+def test_leak_hidden_behind_self_helper_flagged():
+    # the acquisition hides inside a self.*() helper; the obligation is
+    # still on the class — no method anywhere releases the segment
+    bad = """
+        from multiprocessing.shared_memory import SharedMemory
+
+        class RingPool:
+            def __init__(self, name):
+                self._open_segment(name)
+            def _open_segment(self, name):
+                self.seg = SharedMemory(name=name, create=True)
+        """
+    found = lint(bad, rules=["resource-leak"])
+    assert len(found) == 1 and "RingPool.seg" in found[0].message
+
+
+def test_shm_attr_with_finalizer_clean():
+    good = """
+        import weakref
+        from multiprocessing.shared_memory import SharedMemory
+
+        def _unlink(name):
+            pass
+
+        class SegmentHolder:
+            def __init__(self, name):
+                self.shm = SharedMemory(name=name, create=True)
+                weakref.finalize(self, _unlink, self.shm.name)
+            def close(self):
+                self.shm.close()
+        """
+    assert lint(good, rules=["resource-leak"]) == []
+
+
+def test_success_path_only_release_flagged():
+    bad = """
+        def read_config(path):
+            fh = open(path)
+            data = fh.read()
+            fh.close()
+            return data
+        """
+    found = lint(bad, rules=["resource-leak"])
+    assert len(found) == 1 and "success path" in found[0].message
+
+
+def test_try_finally_release_clean():
+    good = """
+        def read_config(path):
+            fh = open(path)
+            try:
+                return fh.read()
+            finally:
+                fh.close()
+
+        def read_config2(path):
+            with open(path) as fh:
+                return fh.read()
+        """
+    assert lint(good, rules=["resource-leak"]) == []
+
+
+def test_keyword_arg_does_not_transfer_pipe_ownership():
+    # the worker_proc bug shape: args=(child,) ships a COPY of the fd
+    # to the forked child; the parent's copy still needs closing
+    bad = """
+        import multiprocessing
+
+        def spawn(target):
+            parent, child = multiprocessing.Pipe()
+            proc = multiprocessing.Process(target=target, args=(child,))
+            proc.start()
+            return parent, proc
+        """
+    found = lint(bad, rules=["resource-leak"])
+    assert len(found) == 1 and "`child`" in found[0].message
+
+
+def test_pipe_closed_in_finally_clean():
+    good = """
+        import multiprocessing
+
+        def spawn(target):
+            parent, child = multiprocessing.Pipe()
+            try:
+                proc = multiprocessing.Process(target=target,
+                                               args=(child,))
+                proc.start()
+            finally:
+                child.close()
+            return parent, proc
+        """
+    assert lint(good, rules=["resource-leak"]) == []
+
+
+# ---------------------------------------------------------------------------
+# suppression inventory + incremental (--changed) filtering
+# ---------------------------------------------------------------------------
+
+
+def test_suppression_inventory_and_only_files_filter(tmp_path):
+    from repro.analysis.report import render_json, suppression_inventory
+
+    noisy = tmp_path / "noisy.py"
+    noisy.write_text(textwrap.dedent("""
+        import time
+
+        class SpinTasklet:
+            def call(self):
+                time.sleep(0.01)  # jetlint: disable=hot-path-blocking -- fixture: argued safe
+        """))
+    stale = tmp_path / "stale.py"
+    stale.write_text(textwrap.dedent("""
+        # jetlint: disable=resource-leak -- fixture: nothing here leaks
+        x = 1
+        """))
+
+    findings, nfiles, unused = run_paths([str(tmp_path)])
+    assert nfiles == 2
+    assert [f for f in findings if not f.suppressed] == []
+    inv = suppression_inventory(findings, unused)
+    assert inv["hot-path-blocking"] == {"suppressed": 1, "unused": 0}
+    assert inv["resource-leak"] == {"suppressed": 0, "unused": 1}
+    doc = json.loads(render_json(findings, nfiles, unused))
+    assert doc["suppression_inventory"] == inv
+    assert doc["unused_suppressions"][0]["rules"] == ["resource-leak"]
+
+    # --changed semantics: full-tree context, filtered report
+    _f, nfiles2, unused2 = run_paths([str(tmp_path)],
+                                     only_files=[str(noisy)])
+    assert nfiles2 == 2          # the registry still saw the whole tree
+    assert unused2 == []         # but stale.py's rot is not reported
 
 
 # ---------------------------------------------------------------------------

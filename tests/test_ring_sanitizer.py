@@ -1,0 +1,227 @@
+"""Ring sanitizer: exhaustive interleaving + crash-injection exploration
+of the ShmRing publication protocol, plus model-vs-real fidelity."""
+
+import json
+
+import pytest
+
+from repro.analysis import ring_sanitizer as rs
+from repro.core import shm_ring
+
+
+def _replay(cfg):
+    """Apply the producer script atomically (offer fully, then poll to
+    empty when blocked), recording pad placements and implicit gaps.
+    Returns (state, pad_ops, gap_jumps)."""
+    st = rs._State(cfg)
+    pads = []
+    gaps = []
+    polled = []
+    while st.p_idx < len(cfg.sizes):
+        plan = rs._plan_offer(st, cfg)
+        if plan is None:
+            got = rs._poll(st, cfg.capacity)
+            assert got is not None, "blocked offer on a drained ring"
+            assert got[0] != "torn", got[1]
+            polled.append(got)
+            continue
+        kinds = [op[0] for op in plan]
+        for op in plan:
+            if op[0] == "pad":
+                pads.append(op)
+            if op[0] == "tail" and "pad" not in kinds \
+                    and op[1] - st.tail > 0 \
+                    and (op[1] - st.tail) != [o for o in plan
+                                              if o[0] == "header"][0][2]:
+                gaps.append((st.tail, op[1]))
+            rs._apply(st, op)
+        st.p_idx += 1
+        st.plan = None
+    while True:
+        got = rs._poll(st, cfg.capacity)
+        if got is None:
+            break
+        assert got[0] != "torn", got[1]
+        polled.append(got)
+    return st, pads, gaps, polled
+
+
+# -- exhaustive exploration, correct order ----------------------------------
+
+def test_correct_order_has_no_violations():
+    res = rs.explore(rs.Config())
+    assert res.ok
+    assert res.violations == []
+    assert not res.truncated
+    assert res.endpoints > 0
+    # some path publishes the whole script
+    assert res.published_max == len(rs.Config().sizes)
+
+
+def test_crash_injection_explores_more_states_and_stays_clean():
+    quiet = rs.explore(rs.Config(crash=False))
+    crashy = rs.explore(rs.Config(crash=True))
+    assert quiet.ok and crashy.ok
+    # crash branches at every micro-step boundary add real states
+    assert crashy.states > quiet.states
+    assert crashy.endpoints > quiet.endpoints
+
+
+def test_default_script_exercises_pad_and_implicit_gap():
+    cfg = rs.Config()
+    st, pads, gaps, polled = _replay(cfg)
+    assert pads, "script never wrote a PAD record — widen the sizes"
+    assert gaps, "script never hit an implicit < header-size tail gap"
+    assert [seq for seq, _ in polled] == list(range(len(cfg.sizes)))
+
+
+def test_bigger_ring_full_exploration_stays_clean():
+    res = rs.explore(rs.Config(capacity=48, sizes=(7, 12, 5, 9, 6, 15, 3)))
+    assert res.ok
+    assert res.published_max == 7
+
+
+# -- teeth: buggy publication orders MUST be caught -------------------------
+
+@pytest.mark.parametrize("buggy", sorted(rs.BUGGY_ORDERS))
+def test_buggy_orders_are_caught(buggy):
+    res = rs.explore(rs.Config(order=rs.BUGGY_ORDERS[buggy]))
+    assert res.violations, f"{buggy} order produced no violation"
+    v = res.violations[0]
+    assert v.trace, "violation carries no interleaving trace"
+    assert "torn" in v.reason or "lost" in v.reason
+
+
+def test_tail_first_caught_even_without_crashes():
+    # the torn read needs only an unlucky interleaving, not a crash
+    res = rs.explore(rs.Config(order=rs.BUGGY_ORDERS["tail-first"],
+                               crash=False))
+    assert res.violations
+
+
+def test_endpoint_invariant_flags_lost_records():
+    cfg = rs.Config()
+    st = rs._State(cfg)
+    st.published = 2
+    st.consumed = ((0, rs._payload(0, cfg.sizes[0])),)
+    err = rs._check_endpoint(st, cfg)
+    assert err is not None and "lost" in err
+
+
+def test_endpoint_invariant_flags_reorder_and_counter_drift():
+    cfg = rs.Config()
+    st = rs._State(cfg)
+    st.published = 2
+    st.consumed = ((1, rs._payload(1, cfg.sizes[1])),
+                   (0, rs._payload(0, cfg.sizes[0])))
+    assert "order" in rs._check_endpoint(st, cfg)
+    st2 = rs._State(cfg)
+    st2.published = 0
+    st2.msgs_in = 1
+    assert "drift" in rs._check_endpoint(st2, cfg)
+
+
+# -- fidelity: the model's byte layout IS the real ring's -------------------
+
+def test_model_layout_matches_real_shm_ring():
+    """Drive a real ShmRing and the model with size-matched records
+    through wraparound; cursors, counters, and pad placement must agree
+    byte-for-byte."""
+    items = [b"a" * 3, b"b" * 30, b"c" * 8, b"d" * 25, b"e" * 10]
+    encoded = [shm_ring._encode(it) for it in items]
+    sizes = tuple(len(payload) for _tag, payload in encoded)
+    # progress invariant: an empty ring must always admit the next record
+    # (worst case needs to_end + rec <= cap, i.e. cap >= 2*max_rec - 1)
+    cap = 2 * (rs._REC.size + max(sizes))
+    cfg = rs.Config(capacity=cap, sizes=sizes, init_byte=0)
+    st = rs._State(cfg)
+    ring = shm_ring.ShmRing(capacity_bytes=cap)
+    try:
+        queue = list(range(len(items)))
+        polled_model = []
+        step = 0
+        while queue or not ring.is_empty():
+            step += 1
+            offered = False
+            if queue:
+                plan = rs._plan_offer(st, cfg)
+                ok = ring.offer(items[queue[0]])
+                assert (plan is not None) == ok, \
+                    "model and real ring disagree on admission"
+                if ok:
+                    for op in plan:
+                        rs._apply(st, op)
+                    st.p_idx += 1
+                    queue.pop(0)
+                    offered = True
+            if not offered or step % 2:     # vary the interleave a little
+                got = rs._poll(st, cap)
+                real = ring.poll()
+                assert (got is None) == (real is None)
+                if got is not None:
+                    assert got[0] != "torn"
+                    polled_model.append(got)
+                    assert real == items[got[0]]
+            # cursor/counter fidelity after every step
+            assert ring._tail() == st.tail
+            assert ring._head() == st.head
+            assert ring._msgs_in() == st.msgs_in
+            assert ring._msgs_out() == st.msgs_out
+        assert [seq for seq, _ in polled_model] == list(range(len(items)))
+        # every pad the model placed exists in the real buffer too
+        st2 = rs._State(cfg)
+        ring2 = shm_ring.ShmRing(capacity_bytes=cap)
+        pads_checked = 0
+        try:
+            for it in items:
+                plan = rs._plan_offer(st2, cfg)
+                while plan is None:
+                    got = rs._poll(st2, cap)
+                    assert got is not None and got[0] != "torn"
+                    assert ring2.poll() == items[got[0]]
+                    plan = rs._plan_offer(st2, cfg)
+                assert ring2.offer(it)
+                for op in plan:
+                    if op[0] == "pad":
+                        data = ring2._data.tobytes()
+                        rec, tag = rs._REC.unpack_from(data, op[1])
+                        assert (rec, tag) == (op[2], shm_ring.TAG_PAD)
+                        pads_checked += 1
+                    rs._apply(st2, op)
+                st2.p_idx += 1
+                assert ring2._tail() == st2.tail
+        finally:
+            ring2.close()
+            ring2.unlink()
+        assert pads_checked, "fidelity script never crossed a PAD record"
+    finally:
+        ring.close()
+        ring.unlink()
+
+
+def test_layout_constants_match_real_ring():
+    assert rs._REC.size == shm_ring._REC.size
+    assert rs._REC.format == shm_ring._REC.format
+    assert rs.TAG_PAD == shm_ring.TAG_PAD
+
+
+# -- CLI ---------------------------------------------------------------------
+
+def test_cli_correct_order_exits_zero(tmp_path, capsys):
+    out = tmp_path / "trace.json"
+    assert rs.main(["--json", str(out)]) == 0
+    doc = json.loads(out.read_text())
+    assert doc["ok"] and doc["violations"] == []
+    assert capsys.readouterr().out.startswith("ring-sanitizer:")
+
+
+def test_cli_buggy_mode_expects_and_finds_violation(tmp_path):
+    out = tmp_path / "trace.json"
+    assert rs.main(["--buggy", "tail-first", "--json", str(out)]) == 0
+    doc = json.loads(out.read_text())
+    assert not doc["ok"] and doc["violations"]
+    assert doc["violations"][0]["trace"]
+
+
+def test_cli_exits_nonzero_when_state_budget_truncates():
+    assert rs.main(["--max-states", "5"]) == 1
